@@ -1,0 +1,67 @@
+"""CIDEr score (paper eq. 37): consensus-based n-gram TF-IDF cosine.
+
+Exact implementation of Vedantam et al. 2015 on integer token sequences:
+g_n(s) is the TF-IDF-weighted n-gram count vector (IDF over the reference
+corpus), CIDEr_n the mean cosine against the m references, and the overall
+score averages n = 1..4 (x10 per convention).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import Counter
+from typing import Dict, List, Sequence, Tuple
+
+Ngram = Tuple[int, ...]
+
+
+def _ngrams(seq: Sequence[int], n: int) -> Counter:
+    return Counter(tuple(seq[i:i + n]) for i in range(len(seq) - n + 1))
+
+
+def _idf_tables(all_refs: List[List[List[int]]], max_n: int
+                ) -> List[Dict[Ngram, float]]:
+    """IDF per n over reference *images* (document = one image's ref set)."""
+    n_docs = len(all_refs)
+    tables: List[Dict[Ngram, float]] = []
+    for n in range(1, max_n + 1):
+        df: Counter = Counter()
+        for refs in all_refs:
+            seen = set()
+            for ref in refs:
+                seen |= set(_ngrams(ref, n).keys())
+            df.update(seen)
+        tables.append({g: math.log(max(n_docs, 1) / d)
+                       for g, d in df.items()})
+    return tables
+
+
+def _tfidf(counts: Counter, idf: Dict[Ngram, float]) -> Dict[Ngram, float]:
+    total = sum(counts.values()) or 1
+    return {g: (c / total) * idf.get(g, 0.0) for g, c in counts.items()}
+
+
+def _cosine(a: Dict[Ngram, float], b: Dict[Ngram, float]) -> float:
+    dot = sum(v * b.get(g, 0.0) for g, v in a.items())
+    na = math.sqrt(sum(v * v for v in a.values()))
+    nb = math.sqrt(sum(v * v for v in b.values()))
+    if na == 0 or nb == 0:
+        return 0.0
+    return dot / (na * nb)
+
+
+def cider(candidates: List[List[int]], references: List[List[List[int]]],
+          max_n: int = 4) -> float:
+    """Corpus CIDEr: mean over samples of mean over n of eq. (37), x10."""
+    assert len(candidates) == len(references)
+    idf = _idf_tables(references, max_n)
+    total = 0.0
+    for cand, refs in zip(candidates, references):
+        per_n = []
+        for n in range(1, max_n + 1):
+            gc = _tfidf(_ngrams(cand, n), idf[n - 1])
+            sims = [_cosine(gc, _tfidf(_ngrams(r, n), idf[n - 1]))
+                    for r in refs]
+            per_n.append(sum(sims) / max(len(sims), 1))
+        total += sum(per_n) / max_n
+    return 10.0 * total / max(len(candidates), 1)

@@ -1,0 +1,210 @@
+"""Paper Figs. 5-8: task quality (CIDEr) vs (T0, E0) for four designs —
+proposed SCA, PPO, fixed-frequency, feasible-random — on BLIP-2/GIT proxies
+under uniform and PoT-log quantization.
+
+End-to-end and real: the proxy captioner is *trained* on the deterministic
+caption task, the agent partition is *actually* quantized at each scheme's
+chosen b̂, captions are *generated* (greedy, free-running) and scored with
+the exact CIDEr formula against the dataset references.  The paper's raw
+GFLOP figures parameterize the cost model with an effective FLOPs-per-cycle
+calibrated so the QoS region is active (DESIGN.md §7, changed assumption).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs import blip2_proxy, git_proxy
+from repro.core import baselines as bl
+from repro.core import codesign as cd
+from repro.core.cost_model import SystemParams
+from repro.core.quantization import QuantConfig
+from repro.data import CaptionProxyConfig, CaptionProxyDataset
+from repro.models.registry import build_model
+from repro.optim import AdamW
+from repro.runtime.qat import fake_quantize_agent
+
+from .cider import cider
+from .common import ascii_plot, banner, table
+
+CAP_LEN = 8
+N_VIS = 4
+N_IMAGES = 64
+EVAL_BATCH = 48
+
+
+def _train_captioner(arch: str, steps: int = 250, seed: int = 0):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    ds = CaptionProxyDataset(CaptionProxyConfig(
+        vocab_size=cfg.vocab_size, seq_len=CAP_LEN, d_model=cfg.d_model,
+        n_vis=N_VIS, batch_size=32, n_images=N_IMAGES))
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = AdamW(learning_rate=3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, embeds, tokens, labels):
+        def loss_fn(p):
+            return model.loss(p, {"embeds": embeds, "tokens": tokens,
+                                  "labels": labels})
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = opt.update(g, state, params)
+        return params, state, loss
+
+    for i in range(steps):
+        b = ds.batch_at(i)
+        params, state, loss = step(params, state,
+                                   jnp.asarray(b["embeds"]),
+                                   jnp.asarray(b["tokens"]),
+                                   jnp.asarray(b["labels"]))
+    return cfg, model, params, ds, float(loss)
+
+
+def _generate(model, params, embeds, length: int):
+    """Greedy free-running generation conditioned on the visual stub."""
+    b = embeds.shape[0]
+    toks = jnp.zeros((b, 1), jnp.int32)   # BOS = 0
+    for _ in range(length):
+        logits, _ = model.forward(params, {"embeds": embeds,
+                                           "tokens": toks})
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        toks = jnp.concatenate([toks, nxt], axis=1)
+    return np.asarray(toks[:, 1:])
+
+
+class QualityOracle:
+    """CIDEr as a function of the agent bit-width (cached per b̂)."""
+
+    def __init__(self, arch: str, scheme: str):
+        self.cfg, self.model, self.params, self.ds, final_loss = \
+            _train_captioner(arch)
+        self.scheme = scheme
+        self._cache: Dict[int, float] = {}
+        rng = np.random.default_rng(7)
+        self.ids = rng.integers(0, N_IMAGES, size=EVAL_BATCH)
+        self.embeds = jnp.asarray(self.ds.vis_basis[self.ids])
+        self.refs = [[list(map(int, self.ds.references(
+            np.asarray([i]))[0]))] for i in self.ids]
+        print(f"  trained {arch}: final loss {final_loss:.3f}, "
+              f"clean CIDEr {self.score(16):.1f}")
+
+    def score(self, b_hat: int) -> float:
+        b_hat = int(b_hat)
+        if b_hat not in self._cache:
+            if b_hat >= 16:
+                p = self.params
+            else:
+                qcfg = QuantConfig(bits=b_hat, scheme=self.scheme,
+                                   granularity="per-channel")
+                p = fake_quantize_agent(self.params,
+                                        self.model.logical_axes(),
+                                        self.cfg, qcfg, ste=False)
+            cands = _generate(self.model, p, self.embeds, CAP_LEN)
+            self._cache[b_hat] = cider([list(map(int, c)) for c in cands],
+                                       self.refs)
+        return self._cache[b_hat]
+
+
+def _sysparams(n_flop_total: float, split_frac: float) -> SystemParams:
+    """Paper GFLOPs with FLOPs/cycle calibrated so t_a(b=16, f_max) = 1 s
+    and t_s(f~_max) = 0.15 s — the region where (T0, E0) actually bind."""
+    n_a = n_flop_total * split_frac
+    n_s = n_flop_total * (1.0 - split_frac)
+    return SystemParams(
+        n_flop_agent=n_a, n_flop_server=n_s,
+        c_agent=n_a / (2.0e9 * 1.0), c_server=n_s / (1.0e10 * 0.15))
+
+
+def sweep(arch: str, scheme: str, n_flop_total: float):
+    oracle = QualityOracle(arch, scheme)
+    lam = 30.0
+    cfg = oracle.cfg
+    p = _sysparams(n_flop_total, cfg.split_layer / cfg.n_layers)
+
+    t0_grid = [1.10, 1.15, 1.20, 1.30, 1.50, 2.00]
+    e0_fixed = 2.0
+    e0_grid = [0.70, 0.85, 1.00, 1.50, 2.00, 3.00]
+    t0_fixed = 1.30
+
+    def run_schemes(t0, e0):
+        out = {}
+        s = cd.solve_sca(lam, p, t0, e0)
+        out["proposed"] = s
+        out["ppo"] = bl.solve_ppo(lam, p, t0, e0, iters=120, seed=0)
+        out["fixed-freq"] = bl.solve_fixed_frequency(lam, p, t0, e0)
+        rnd = bl.solve_feasible_random(lam, p, t0, e0, trials=100)
+        if rnd:
+            # the paper reports the feasible trials themselves; the median
+            # trial is the representative "random but feasible" design
+            rnd.sort(key=lambda r: r.b_hat)
+            out["random"] = rnd[len(rnd) // 2]
+        else:
+            out["random"] = None
+        return out
+
+    results = {"vs_t0": {}, "vs_e0": {}}
+    for axis, grid, fixed in (("vs_t0", t0_grid, e0_fixed),
+                              ("vs_e0", e0_grid, t0_fixed)):
+        series: Dict[str, List[Optional[float]]] = {}
+        bits: Dict[str, List] = {}
+        for g in grid:
+            t0, e0 = (g, fixed) if axis == "vs_t0" else (fixed, g)
+            for name, sol in run_schemes(t0, e0).items():
+                q = oracle.score(sol.b_hat) if sol else None
+                series.setdefault(name, []).append(q)
+                bits.setdefault(name, []).append(
+                    sol.b_hat if sol else "-")
+        results[axis] = {"grid": grid, "series": series, "bits": bits}
+
+        label = "T0 (s)" if axis == "vs_t0" else "E0 (J)"
+        banner(f"Figs 5-8 — {arch} / {scheme}: CIDEr vs {label} "
+               f"({'E0' if axis == 'vs_t0' else 'T0'}={fixed})")
+        hdr = [label] + [f"{n} (b̂)" for n in series]
+        rows = []
+        for i, g in enumerate(grid):
+            row = [g]
+            for name in series:
+                q = series[name][i]
+                row.append(f"{q:.1f} ({bits[name][i]})"
+                           if q is not None else "infeasible")
+            rows.append(row)
+        table(hdr, rows)
+        ascii_plot({k: [x if x is not None else float("nan") for x in v]
+                    for k, v in series.items()},
+                   [float(g) for g in grid], xlabel=label, ylabel="CIDEr")
+
+        # paper claim: proposed >= every baseline at every grid point
+        wins = 0
+        total = 0
+        for i in range(len(grid)):
+            qp = series["proposed"][i]
+            if qp is None:
+                continue
+            for name in ("ppo", "fixed-freq", "random"):
+                qb = series[name][i]
+                if qb is not None:
+                    total += 1
+                    wins += qp >= qb - 1e-9
+        print(f"  proposed >= baseline at {wins}/{total} comparisons")
+        results[axis]["wins"] = (wins, total)
+    return results
+
+
+def run() -> dict:
+    out = {}
+    for arch, flops in (("blip2-proxy", blip2_proxy.N_FLOP_FIRST_TOKEN),
+                        ("git-proxy", git_proxy.N_FLOP_FIRST_TOKEN)):
+        for scheme in ("uniform", "pot-log"):
+            out[f"{arch}/{scheme}"] = sweep(arch, scheme, flops)
+    return out
+
+
+if __name__ == "__main__":
+    run()

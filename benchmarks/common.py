@@ -1,0 +1,69 @@
+"""Shared benchmark utilities (ASCII plots, table printing, timers)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Sequence
+
+
+def banner(title: str) -> None:
+    print("\n" + "=" * 72)
+    print(f"== {title}")
+    print("=" * 72)
+
+
+def table(headers: Sequence[str], rows: Iterable[Sequence]) -> None:
+    rows = [[str(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    fmt = "  ".join("{:<%d}" % w for w in widths)
+    print(fmt.format(*headers))
+    print(fmt.format(*["-" * w for w in widths]))
+    for r in rows:
+        print(fmt.format(*r))
+
+
+def ascii_plot(series: Dict[str, List[float]], xs: List[float],
+               width: int = 64, height: int = 16, logy: bool = False,
+               xlabel: str = "", ylabel: str = "") -> None:
+    """Multi-series scatter in ASCII (markdown-friendly, no matplotlib)."""
+    import math
+    marks = "ox+*#@%&"
+    all_y = [y for ys in series.values() for y in ys
+             if y is not None and math.isfinite(y)]
+    if not all_y:
+        print("(no data)")
+        return
+    f = (lambda v: math.log10(max(v, 1e-30))) if logy else (lambda v: v)
+    ymin, ymax = min(map(f, all_y)), max(map(f, all_y))
+    if ymax == ymin:
+        ymax = ymin + 1
+    xmin, xmax = min(xs), max(xs)
+    if xmax == xmin:
+        xmax = xmin + 1
+    grid = [[" "] * width for _ in range(height)]
+    for si, (name, ys) in enumerate(series.items()):
+        m = marks[si % len(marks)]
+        for x, y in zip(xs, ys):
+            if y is None or not math.isfinite(y):
+                continue
+            col = int((x - xmin) / (xmax - xmin) * (width - 1))
+            row = int((f(y) - ymin) / (ymax - ymin) * (height - 1))
+            grid[height - 1 - row][col] = m
+    tag = " (log y)" if logy else ""
+    print(f"    {ylabel}{tag}")
+    for r in grid:
+        print("  | " + "".join(r))
+    print("  +" + "-" * (width + 1))
+    print(f"    {xmin:g} ... {xmax:g}  {xlabel}")
+    for si, name in enumerate(series):
+        print(f"    [{marks[si % len(marks)]}] {name}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0

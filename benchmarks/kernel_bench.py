@@ -1,0 +1,112 @@
+"""Kernel-level benchmark: the TPU economics of the quantized matmul.
+
+No wall-clock on this CPU container (kernels run under interpret=True for
+correctness only) — instead this reports the quantities that *determine* TPU
+performance and that the roofline model consumes:
+
+  * HBM weight traffic per matmul at b̂ ∈ {16 (bf16), 8, 4} — the concrete
+    realization of the paper's linear-in-b̂ workload on a TPU;
+  * VMEM working set per (block_m, block_n, block_k) tile choice vs the
+    ~16 MiB budget, MXU alignment check;
+  * accuracy: quantized-matmul error vs exact fp32 matmul across bit-widths
+    on production shapes (qwen2 / stablelm MLP dims).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import banner, table
+
+VMEM_BUDGET = 16 * 2 ** 20
+
+
+def weight_traffic():
+    banner("Kernel — HBM weight bytes per matmul tile (the b̂ knob on TPU)")
+    shapes = [("qwen2 MLP", 896, 4864), ("stablelm MLP", 2560, 6912),
+              ("granite attn", 6144, 6144), ("kimi expert", 7168, 2048)]
+    rows = []
+    for name, k, n in shapes:
+        bf16 = k * n * 2
+        i8 = k * n + (k // 128) * n * 4
+        i4 = k * n // 2 + (k // 128) * n * 4
+        rows.append([name, f"{k}x{n}", f"{bf16 / 2**20:.1f}",
+                     f"{i8 / 2**20:.1f} ({bf16 / i8:.2f}x)",
+                     f"{i4 / 2**20:.1f} ({bf16 / i4:.2f}x)"])
+    table(["weight", "KxN", "bf16 MiB", "int8 MiB (gain)",
+           "int4 MiB (gain)"], rows)
+    print("  -> decode-shape cells are weight-bandwidth-bound; int8/int4 "
+        "residency moves the memory roofline term by the same factors "
+        "(EXPERIMENTS.md §Perf).")
+
+
+def vmem_working_set():
+    banner("Kernel — VMEM working set per BlockSpec tile")
+    rows = []
+    for bm, bn, bk, g in [(128, 128, 256, 128), (256, 256, 512, 128),
+                          (512, 256, 512, 128), (256, 512, 1024, 256),
+                          (512, 512, 1024, 128)]:
+        x = bm * bk * 4
+        w = bk * bn
+        s = (bk // g) * bn * 4
+        acc = bm * bn * 4
+        tot = x + w + s + acc
+        dbuf = tot + x + w + s          # double-buffered inputs
+        align = all(v % 128 == 0 for v in (bm, bn, bk))
+        rows.append([f"{bm}x{bn}x{bk}", f"{x/2**10:.0f}K", f"{w/2**10:.0f}K",
+                     f"{acc/2**10:.0f}K", f"{tot/2**20:.2f}M",
+                     f"{dbuf/2**20:.2f}M",
+                     "yes" if dbuf < VMEM_BUDGET else "NO",
+                     "yes" if align else "NO"])
+    table(["bm x bn x bk", "x", "codes", "acc", "1-buf", "2-buf",
+           "fits 16M VMEM", "MXU-aligned"], rows)
+
+
+def accuracy():
+    banner("Kernel — quantized matmul error vs exact fp32 (interpret mode)")
+    rows = []
+    for name, k, n in [("qwen2 MLP", 896, 4864), ("128-aligned", 1024, 1024)]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(k))
+        x = jax.random.normal(kx, (64, k))
+        w = jax.random.normal(kw, (k, n))
+        exact = x @ w
+        denom = float(jnp.mean(jnp.abs(exact)))
+        for bits in (8, 4):
+            ql = ops.quantize_linear(w, bits=bits, group_size=128)
+            got = ql.apply(x)
+            rel = float(jnp.mean(jnp.abs(got - exact))) / denom
+            rows.append([name, f"{k}x{n}", bits,
+                         f"{ql.nbytes() / 2**20:.2f} MiB", f"{rel:.2%}"])
+    table(["shape", "KxN", "bits", "stored", "mean rel err"], rows)
+
+
+def kernel_vs_ref_spotcheck():
+    banner("Kernel — Pallas (interpret) vs jnp oracle spot check")
+    rows = []
+    for m, k, n, g in [(256, 512, 256, 128), (64, 1024, 384, 256),
+                       (1, 896, 4864, 128)]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
+        x = jax.random.normal(kx, (m, k))
+        w = jax.random.normal(kw, (k, n))
+        codes, scales = ref.group_quantize_ref(w, g)
+        err = float(jnp.max(jnp.abs(
+            ops.quantized_matmul(x, codes, scales)
+            - ref.qmm_ref(x, codes, scales))))
+        rows.append([f"{m}x{k}x{n}", g, f"{err:.2e}"])
+    table(["MxKxN", "group", "max |pallas - ref|"], rows)
+
+
+def run() -> dict:
+    weight_traffic()
+    vmem_working_set()
+    accuracy()
+    kernel_vs_ref_spotcheck()
+    return {}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+
+Sections (paper artifact -> module):
+    fig2    weight-magnitude exponential fit        weight_stats.py
+    fig3    output vs parameter distortion          distortion.py
+    fig4    distortion-rate bounds vs BA            rd_bounds.py
+    fig5-8  CIDEr vs (T0, E0), 4 schemes            codesign_sweep.py
+    table1  coarse frequency profiles               testbed_profiles.py
+    kernels quantized-matmul TPU economics          kernel_bench.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (codesign_sweep, distortion, kernel_bench, rd_bounds,
+               testbed_profiles, weight_stats)
+from .common import banner
+
+SECTIONS = {
+    "fig2": ("Fig. 2  weight statistics", weight_stats.run),
+    "fig3": ("Fig. 3  distortion approximation", distortion.run),
+    "fig4": ("Fig. 4  rate-distortion bounds", rd_bounds.run),
+    "fig5-8": ("Figs 5-8  joint co-design sweeps", codesign_sweep.run),
+    "table1": ("Table I  coarse frequency profiles", testbed_profiles.run),
+    "kernels": ("Kernels  quantized matmul", kernel_bench.run),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of sections (default: all)")
+    args = ap.parse_args(argv)
+    picks = args.only.split(",") if args.only else list(SECTIONS)
+
+    t0 = time.monotonic()
+    failures = []
+    for key in picks:
+        title, fn = SECTIONS[key]
+        banner(f"[{key}] {title}")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 - keep the harness going
+            failures.append((key, repr(e)))
+            print(f"!! section {key} failed: {e!r}")
+    dt = time.monotonic() - t0
+    print(f"\n{'=' * 72}\nbenchmarks done in {dt / 60:.1f} min; "
+          f"{len(picks) - len(failures)}/{len(picks)} sections ok")
+    for key, err in failures:
+        print(f"  FAILED {key}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""Paper Fig. 2: exponential fit of weight magnitudes across model families.
+
+The paper fits Exponential(lam) to |w| of ResNet-152 / VideoMAE / BERT /
+BLIP-2 / GIT / GPT-3 checkpoints.  Offline we fit the same statistic on our
+model zoo (trained-from-scratch reduced configs + random-init full-family
+blocks) and report the MLE lam together with a Kolmogorov-Smirnov distance
+to the fitted exponential — the quantitative version of the paper's visual
+histogram match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.rate_distortion import exponential_mle
+from repro.data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.optim import AdamW
+from repro.runtime import TrainConfig, Trainer
+
+from .common import banner, table
+
+ARCHS = ("stablelm-3b", "qwen2-0.5b", "xlstm-350m", "kimi-k2-1t-a32b",
+         "seamless-m4t-large-v2", "jamba-1.5-large-398b")
+
+
+def ks_distance_exponential(sample: np.ndarray, lam: float) -> float:
+    """sup_x |F_emp(x) - F_exp(x)| with F_exp(x) = 1 - exp(-lam x)."""
+    xs = np.sort(sample)
+    emp = np.arange(1, len(xs) + 1) / len(xs)
+    model = 1.0 - np.exp(-lam * xs)
+    return float(np.max(np.abs(emp - model)))
+
+
+def magnitudes(params, max_n: int = 200_000) -> np.ndarray:
+    rng = np.random.default_rng(0)
+    chunks = []
+    for leaf in jax.tree_util.tree_leaves(params):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
+                jnp.issubdtype(leaf.dtype, jnp.floating):
+            chunks.append(np.abs(np.asarray(leaf, np.float32)).ravel())
+    mags = np.concatenate(chunks)
+    if len(mags) > max_n:
+        mags = rng.choice(mags, max_n, replace=False)
+    return mags[mags > 0]
+
+
+def _trained_params(arch: str, steps: int = 30):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    tr = Trainer(model, AdamW(learning_rate=3e-3), make_host_mesh(),
+                 TrainConfig(log_every=1000))
+    loader = ShardedLoader(MarkovLMDataset(MarkovLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, batch_size=8)))
+    try:
+        (params, _, _), _ = tr.fit(loader, steps)
+        return params, True
+    except Exception:
+        return build_model(cfg).init(jax.random.PRNGKey(0)), False
+
+
+def run() -> dict:
+    banner("Fig. 2 — weight-magnitude distribution: Exponential(lam) fit")
+    rows, out = [], {}
+    for arch in ARCHS:
+        params, trained = _trained_params(arch)
+        mags = magnitudes(params)
+        lam = float(exponential_mle(jnp.asarray(mags)))
+        ks = ks_distance_exponential(mags, lam)
+        frac_small = float((mags < 1.0 / lam).mean())  # exp predicts 0.632
+        rows.append([arch, "trained" if trained else "init",
+                     f"{lam:.1f}", f"{ks:.3f}", f"{frac_small:.3f}"])
+        out[arch] = {"lambda": lam, "ks": ks}
+    table(["model", "weights", "lambda_hat", "KS_dist",
+           "P(|w|<1/lam) [exp: 0.632]"], rows)
+    print("\nSmall KS distance + mass-below-mean near 0.632 => the "
+          "exponential magnitude prior of paper eq. (3) holds on this zoo.")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: ~100M-parameter LM, quantization-aware, with
+checkpointing — a few hundred steps on CPU with visibly decreasing loss.
+
+The model is the qwen2 family at ~100M scale (12L x 768), trained on the
+deterministic Markov-chain corpus with QAT on the agent partition (the
+co-inference split it will be served at), int8 error-feedback gradient
+compression enabled, and async checkpoints every 50 steps.  Kill it and
+re-run: it resumes from the newest checkpoint at the exact data step.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # qwen2 family at ~100M: 12 x 768, GQA kv=4, vocab 32k
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"), name="qwen2-100m",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32768, split_layer=3)
+    model = build_model(cfg)
+    print(f"model {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"QAT bits=8 on layers [0, {cfg.split_layer})")
+
+    ds = MarkovLMDataset(MarkovLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        batch_size=args.batch, branching=4))
+    loader = ShardedLoader(ds)
+
+    trainer = Trainer(
+        model,
+        AdamW(learning_rate=cosine_schedule(3e-4, 30, args.steps)),
+        make_host_mesh(),
+        TrainConfig(qat_bits=8, grad_compression="int8_ef", log_every=20),
+        ckpt=CheckpointManager(args.ckpt_dir, save_interval=50, keep=2))
+
+    _, hist = trainer.fit(
+        loader, args.steps,
+        on_metrics=lambda m: print(
+            f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+            f"gnorm {m['grad_norm']:.2f}  {m['steps_per_s']:.2f} it/s"))
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    # Markov chain with branching 4 -> optimal loss = ln(4) ~ 1.386
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(entropy floor ~1.386); checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

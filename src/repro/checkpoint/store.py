@@ -1,0 +1,236 @@
+"""Pytree checkpointing: msgpack + zstd, integrity manifest, async writer.
+
+Format (one directory per step, ``step_<N>/``):
+
+  tree.msgpack.zst   — flattened pytree: list of (path, dtype, shape, raw
+                       little-endian bytes) records, msgpack-framed then
+                       zstd-compressed
+  manifest.json      — step, leaf count, total bytes, per-file sha256,
+                       user metadata (data step, mesh shape, ...)
+
+Restores are shard-aware: pass ``shardings`` (a pytree of NamedSharding)
+and each leaf is ``device_put`` onto its target sharding at load — the
+elastic-restart path reshards a checkpoint onto a *different* mesh this way
+(runtime/fault_tolerance.py).
+
+The async writer serializes on the caller thread (arrays must be snapshotted
+before the step mutates them) but compresses + writes on a background
+thread, so the training loop only blocks on ``wait()`` or at the next save.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+_TREE_FILE = "tree.msgpack.zst"
+_MANIFEST = "manifest.json"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _serialize_tree(tree: Any) -> bytes:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    records = []
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        records.append({
+            "path": _path_str(path),
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        })
+    return msgpack.packb({"version": 1, "leaves": records})
+
+
+def _deserialize_records(raw: bytes) -> Dict[str, np.ndarray]:
+    obj = msgpack.unpackb(raw)
+    out = {}
+    for rec in obj["leaves"]:
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        out[rec["path"]] = arr.reshape(rec["shape"])
+    return out
+
+
+def save_tree(tree: Any, directory: str, step: int,
+              metadata: Optional[Dict[str, Any]] = None) -> str:
+    """Synchronous checkpoint write; returns the step directory."""
+    step_dir = os.path.join(directory, f"step_{step}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    payload = _serialize_tree(tree)
+    compressed = zstd.ZstdCompressor(level=3).compress(payload)
+    tree_path = os.path.join(tmp_dir, _TREE_FILE)
+    with open(tree_path, "wb") as f:
+        f.write(compressed)
+    manifest = {
+        "step": step,
+        "bytes_raw": len(payload),
+        "bytes_compressed": len(compressed),
+        "sha256": hashlib.sha256(compressed).hexdigest(),
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp_dir, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # atomic publish: a crash mid-write never yields a half checkpoint
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    return step_dir
+
+
+def _verify(step_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(step_dir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    with open(os.path.join(step_dir, _TREE_FILE), "rb") as f:
+        blob = f.read()
+    digest = hashlib.sha256(blob).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint {step_dir} corrupt: sha mismatch")
+    return manifest
+
+
+def load_tree(directory: str, step: int, like: Any,
+              shardings: Optional[Any] = None
+              ) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` optionally reshards each leaf."""
+    step_dir = os.path.join(directory, f"step_{step}")
+    manifest = _verify(step_dir)
+    with open(os.path.join(step_dir, _TREE_FILE), "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    records = _deserialize_records(raw)
+
+    flat_like = jax.tree_util.tree_leaves_with_path(like)
+    treedef = jax.tree_util.tree_structure(like)
+    flat_shard = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat_like))
+    leaves = []
+    for (path, leaf), shard in zip(flat_like, flat_shard):
+        key = _path_str(path)
+        if key not in records:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = records[key]
+        want = jnp.dtype(leaf.dtype)
+        np_arr = arr.astype(want) if arr.dtype != want else arr
+        if tuple(np_arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {np_arr.shape} != {leaf.shape}")
+        if shard is not None:
+            leaves.append(jax.device_put(np_arr, shard))
+        else:
+            leaves.append(jnp.asarray(np_arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def available_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, _MANIFEST)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+# ---------------------------------------------------------------------------
+# Manager: retention + async writes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Periodic/async checkpointing with bounded retention."""
+
+    directory: str
+    keep: int = 3
+    save_interval: int = 100
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---- sync API ----
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_interval == 0
+
+    def save(self, step: int, tree: Any,
+             metadata: Optional[Dict[str, Any]] = None) -> str:
+        path = save_tree(tree, self.directory, step, metadata)
+        self._retain()
+        return path
+
+    # ---- async API ----
+    def save_async(self, step: int, tree: Any,
+                   metadata: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot to host (blocking) then compress+write in background."""
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                save_tree(host_tree, self.directory, step, metadata)
+                self._retain()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._worker = threading.Thread(target=work, daemon=True)
+        self._worker.start()
+
+    def wait(self) -> None:
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---- restore ----
+    def restore_latest(self, like: Any, shardings: Optional[Any] = None):
+        """(tree, manifest) from the newest intact checkpoint, else None."""
+        self.wait()
+        for step in reversed(available_steps(self.directory)):
+            try:
+                return load_tree(self.directory, step, like, shardings)
+            except (IOError, KeyError, ValueError):
+                continue  # corrupt/partial: fall back to the previous one
+        return None
+
+    def _retain(self):
+        steps = available_steps(self.directory)
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

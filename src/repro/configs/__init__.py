@@ -1,0 +1,60 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the exact published full config;
+``get_smoke(arch_id)`` a reduced same-family config for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from .base import (ModelConfig, ShapeSpec, ALL_SHAPES, TRAIN_4K,  # noqa: F401
+                   PREFILL_32K, DECODE_32K, LONG_500K, cell_applicable,
+                   smoke_shape)
+
+ARCH_IDS = (
+    "stablelm-3b",
+    "qwen2-0.5b",
+    "granite-34b",
+    "internlm2-20b",
+    "xlstm-350m",
+    "llava-next-mistral-7b",
+    "seamless-m4t-large-v2",
+    "kimi-k2-1t-a32b",
+    "qwen3-moe-235b-a22b",
+    "jamba-1.5-large-398b",
+)
+
+#: paper's own evaluation models (§VI)
+PAPER_IDS = ("fcdnn-16", "blip2-proxy", "git-proxy")
+
+_MODULES = {
+    "stablelm-3b": "stablelm_3b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "granite-34b": "granite_34b",
+    "internlm2-20b": "internlm2_20b",
+    "xlstm-350m": "xlstm_350m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "fcdnn-16": "fcdnn16",
+    "blip2-proxy": "blip2_proxy",
+    "git-proxy": "git_proxy",
+}
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: "
+                       f"{sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).FULL
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).smoke()

@@ -1,0 +1,15 @@
+"""FCDNN-16 (paper §VI-A): 16-hidden-layer fully connected autoencoder with
+ReLU, encoder dims [64,128,256,512,256,128,64,32], symmetric decoder.
+Used to validate Proposition 3.1 (benchmarks/distortion.py)."""
+
+ENCODER_DIMS = (64, 128, 256, 512, 256, 128, 64, 32)
+DECODER_DIMS = tuple(reversed(ENCODER_DIMS))
+INPUT_DIM = 784  # MNIST-like
+
+# not a ModelConfig — this is the paper's toy FC model; see
+# repro/models/fcdnn.py for init/apply.
+FULL = None
+
+
+def smoke():
+    return None

@@ -1,0 +1,21 @@
+"""Paper core: distortion approximation, rate-distortion bounds, quantizers,
+and the joint bit-width x frequency co-design (paper §III-§V)."""
+
+from .cost_model import SystemParams, total_delay, total_energy  # noqa: F401
+from .codesign import (CodesignSolution, distortion_gap, solve_oracle,  # noqa: F401
+                       solve_sca, feasible_bitwidth,
+                       min_energy_under_deadline)
+from .baselines import (solve_fixed_frequency, solve_feasible_random,  # noqa: F401
+                        solve_ppo)
+from .quantization import (QuantConfig, QuantizedTensor, quantize,  # noqa: F401
+                           dequantize, quantize_dequantize, quantize_tree,
+                           fake_quantize_tree, qat_quantize, max_quant_error,
+                           pack_int4, unpack_int4)
+from .rate_distortion import (exponential_mle, exponential_entropy,  # noqa: F401
+                              rate_lower_bound, rate_upper_bound,
+                              distortion_lower_bound, distortion_upper_bound,
+                              blahut_arimoto_distortion_rate)
+from .distortion import (induced_l1_norm, param_distortion,  # noqa: F401
+                         chain_bound_coefficients, fc_chain_bound,
+                         measured_output_distortion, taylor_surrogate_bound,
+                         estimate_grad_norm_H)

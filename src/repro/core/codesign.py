@@ -1,0 +1,317 @@
+"""Joint quantization bit-width x computation frequency co-design (paper §V).
+
+Problem (P1):
+
+    min_{b_hat, f, f~}   D^U(b_hat - 1) - D^L(b_hat - 1)
+    s.t.                 T(b_hat, f, f~) <= T0
+                         E(b_hat, f, f~) <= E0
+                         b_hat in {1..B_max},  0 <= f <= f_max,  0 <= f~ <= f~_max
+
+Two solvers live here:
+
+  * :func:`solve_sca` — the paper's Algorithm 1, faithfully: continuous
+    relaxation (P2), auxiliary variable b' ~ 1/b (P3), iterative convex
+    surrogates (P4.k), rounding.  The convex subproblem (P4.k) is solved
+    *exactly* by exploiting its structure (the objective depends only on b~;
+    v := b' enters only the constraints) — see `_solve_p4k`.  No external
+    convex solver is needed (the environment has no CVX), and tests verify
+    the SCA output against the oracle below.
+
+  * :func:`solve_oracle` — exhaustive search over the discrete bit-width with
+    a closed-form optimal frequency split per bit-width (KKT of the
+    min-energy-under-deadline subproblem).  This is the beyond-paper
+    reference optimum for (P1) used to check SCA solution quality.
+
+Baselines of §VI-C (fixed-frequency, feasible-random, PPO-like) are in
+``repro.core.baselines``.
+
+All math is float64 numpy on the host — this is a serving-configuration
+routine, not a training-step hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .cost_model import SystemParams
+
+__all__ = [
+    "CodesignSolution",
+    "distortion_gap",
+    "min_energy_under_deadline",
+    "feasible_bitwidth",
+    "solve_oracle",
+    "solve_sca",
+]
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Objective (float64 host mirror of rate_distortion bounds)
+# ---------------------------------------------------------------------------
+
+def _d_upper(rate: float, lam: float) -> float:
+    denom = max(2.0 ** rate - 1.0, _EPS)
+    return (math.sqrt(1.0 + 4.0 / denom) - 1.0) / (2.0 * lam)
+
+
+def _d_lower(rate: float, lam: float) -> float:
+    return 1.0 / (lam * 2.0 ** (rate + 1.0))
+
+
+def distortion_gap(b_hat: float, lam: float) -> float:
+    """(P1)/(P2) objective D^U(b-1) - D^L(b-1); sign bit costs one bit."""
+    r = b_hat - 1.0
+    return _d_upper(r, lam) - _d_lower(r, lam)
+
+
+def _gap_grad(b: float, lam: float) -> float:
+    """d/db [ D^U(b-1) - D^L(b-1) ] (analytic; used by the 1-D Newton)."""
+    r = b - 1.0
+    s = 2.0 ** r
+    denom = max(s - 1.0, _EPS)
+    g = 1.0 + 4.0 / denom
+    dg = -4.0 * math.log(2.0) * s / (denom * denom)
+    d_upper = dg / (4.0 * lam * math.sqrt(g))
+    d_lower = -math.log(2.0) / (lam * 2.0 ** (r + 1.0))
+    return d_upper - d_lower
+
+
+# ---------------------------------------------------------------------------
+# Frequency subproblem: minimal energy subject to the deadline
+# ---------------------------------------------------------------------------
+
+def _workload_constants(p: SystemParams):
+    """Ka, Ks (seconds at f=f_max) and Ea, Es (joules at f=f_max).
+
+    t_a = Ka * w / u,  e_a = Ea * w * u^2    with u = f/f_max, w = b_hat/b
+    t_s = Ks / u~,     e_s = Es * u~^2       with u~ = f~/f~_max
+    """
+    ka = p.n_flop_agent / (p.c_agent * p.f_max)
+    ks = p.n_flop_server / (p.c_server * p.f_server_max)
+    ea = p.eta_agent * p.n_flop_agent * p.psi_agent * p.f_max ** 2 / p.c_agent
+    es = p.eta_server * p.n_flop_server * p.psi_server * p.f_server_max ** 2 \
+        / p.c_server
+    return ka, ks, ea, es
+
+
+def min_energy_under_deadline(workload_frac: float, p: SystemParams,
+                              t0: float):
+    """min_{f, f~} E  s.t.  T <= t0, f <= f_max, f~ <= f~_max.
+
+    ``workload_frac`` = b_hat / b (the paper's linear-in-bitwidth scaling).
+    Writing tau_a = t_a, tau_s = t_s:  e_a = A/tau_a^2 with A = Ea w^3 Ka^2
+    (eliminating u), e_s = B/tau_s^2 with B = Es Ks^2.  Energy decreases in
+    each tau, so tau_a + tau_s = t0 at the optimum; the KKT point is
+    tau_a : tau_s = A^{1/3} : B^{1/3}, clipped to the frequency boxes.
+
+    Returns (e_min, f_opt, f_server_opt) or (inf, nan, nan) if the deadline
+    is unmeetable even at max frequencies.
+    """
+    w = workload_frac
+    ka, ks, ea, es = _workload_constants(p)
+    tau_a_lo = ka * w          # at u = 1
+    tau_s_lo = ks              # at u~ = 1
+    if tau_a_lo + tau_s_lo > t0 * (1.0 + 1e-12):
+        return math.inf, math.nan, math.nan
+    a = ea * (w ** 3) * ka * ka
+    b = es * ks * ks
+    if a <= 0.0:  # degenerate: no agent workload
+        tau_s = min(max(t0, tau_s_lo), t0)
+        tau_a = t0 - tau_s
+        e = b / max(tau_s, _EPS) ** 2
+        return e, 0.0, p.f_server_max * ks / max(tau_s, _EPS)
+    r = (a / b) ** (1.0 / 3.0)
+    tau_a = t0 * r / (1.0 + r)
+    # clip into the box implied by max frequencies
+    tau_a = min(max(tau_a, tau_a_lo), t0 - tau_s_lo)
+    tau_s = t0 - tau_a
+    e = a / tau_a ** 2 + b / tau_s ** 2
+    f_opt = p.f_max * ka * w / tau_a
+    fs_opt = p.f_server_max * ks / tau_s
+    return e, min(f_opt, p.f_max), min(fs_opt, p.f_server_max)
+
+
+def feasible_bitwidth(b_hat: float, lam: float, p: SystemParams,
+                      t0: float, e0: float):
+    """Feasibility of a bit-width under (T0, E0); returns (ok, f, f~, E)."""
+    del lam
+    w = b_hat / p.b_full
+    e_min, f, fs = min_energy_under_deadline(w, p, t0)
+    if e_min <= e0 * (1.0 + 1e-9):
+        return True, f, fs, e_min
+    return False, math.nan, math.nan, e_min
+
+
+# ---------------------------------------------------------------------------
+# Solution record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CodesignSolution:
+    b_hat: int                  # chosen bit-width
+    f: float                    # device frequency (Hz)
+    f_server: float             # server frequency (Hz)
+    objective: float            # D^U - D^L gap at b_hat
+    d_upper: float              # conservative distortion estimate
+    d_lower: float              # optimistic floor
+    delay: float                # realized T at the solution
+    energy: float               # realized E at the solution
+    feasible: bool
+    iterations: int = 0         # SCA outer iterations (0 for oracle)
+    b_relaxed: float = float("nan")  # pre-rounding b~* (SCA only)
+
+
+def _pack(b_hat: int, f: float, fs: float, lam: float, p: SystemParams,
+          iterations: int = 0, b_relaxed: float = float("nan"),
+          feasible: bool = True) -> CodesignSolution:
+    from .cost_model import total_delay, total_energy
+    t = float(total_delay(b_hat, f, fs, p))
+    e = float(total_energy(b_hat, f, fs, p))
+    r = b_hat - 1.0
+    return CodesignSolution(
+        b_hat=b_hat, f=f, f_server=fs,
+        objective=distortion_gap(b_hat, lam),
+        d_upper=_d_upper(r, lam), d_lower=_d_lower(r, lam),
+        delay=t, energy=e, feasible=feasible, iterations=iterations,
+        b_relaxed=b_relaxed)
+
+
+# ---------------------------------------------------------------------------
+# Oracle: exhaustive over the discrete bit-width set
+# ---------------------------------------------------------------------------
+
+def solve_oracle(lam: float, p: SystemParams, t0: float, e0: float,
+                 b_max: int = 16) -> Optional[CodesignSolution]:
+    """Exact solution of (P1) by enumerating b_hat (the objective is
+    monotonically decreasing in b_hat for b_hat >= 1, verified in tests), so
+    the optimum is the largest feasible bit-width with its min-energy
+    frequency assignment."""
+    for b_hat in range(b_max, 0, -1):
+        ok, f, fs, _ = feasible_bitwidth(b_hat, lam, p, t0, e0)
+        if ok:
+            return _pack(b_hat, f, fs, lam, p)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: SCA on (P2)/(P3)/(P4.k)
+# ---------------------------------------------------------------------------
+
+def _solve_p4k(b_k: float, v_k: float, lam: float, p: SystemParams,
+               t0: float, e0: float, b_max: int):
+    """Exactly solve the convex subproblem (P4.k).
+
+    Structure: the objective depends only on b~; v (:= b') appears only in
+    the constraints.  The linearized (35) gives b~ <= cap(v) with
+    cap(v) = 1/v_k - (v - v_k)/v_k^2 decreasing in v, so the optimal v is the
+    smallest v feasible for (32a)/(32b) — found by bisection — and then b~ is
+    a 1-D convex minimization of the surrogate objective over
+    [1+eps, min(B_max, cap(v*))].
+
+    Surrogate objective (34): D^U(b~-1) - [1/(lam 2^{b_k}) -
+    ln2/(lam 2^{b_k}) (b~ - b_k)].
+    """
+    ka, ks, ea, es = _workload_constants(p)
+
+    def v_feasible(v: float) -> bool:
+        # (32a)/(32b) treat the agent workload as N/(v b): equivalent to a
+        # relative workload w = 1/(v * b_full) * b_full = 1/v of full... in
+        # normalized terms t_a = (ka / (v * p.b_full)) * p.b_full / u.
+        w = 1.0 / (v * p.b_full)  # b~_effective / b  implied by v
+        e_min, _, _ = min_energy_under_deadline(w, p, t0)
+        return e_min <= e0 * (1.0 + 1e-9)
+
+    v_hi = 1.0  # v = 1 -> effective bit-width 1: the cheapest workload
+    if not v_feasible(v_hi):
+        return None  # (P3) infeasible even at the lightest workload
+    v_lo = 1.0 / b_max
+    if v_feasible(v_lo):
+        v_star = v_lo
+    else:
+        lo, hi = v_lo, v_hi
+        for _ in range(80):
+            mid = 0.5 * (lo + hi)
+            if v_feasible(mid):
+                hi = mid
+            else:
+                lo = mid
+        v_star = hi
+
+    cap = 1.0 / v_k - (v_star - v_k) / (v_k * v_k)
+    b_hi = min(float(b_max), cap)
+    b_lo = 1.0 + 1e-6
+    if b_hi < b_lo:
+        b_hi = b_lo
+
+    # 1-D convex minimization of the surrogate via golden-section
+    lin_slope = math.log(2.0) / (lam * 2.0 ** b_k)
+
+    def surrogate(b: float) -> float:
+        return _d_upper(b - 1.0, lam) \
+            - (1.0 / (lam * 2.0 ** b_k) - lin_slope * (b - b_k))
+
+    phi = (math.sqrt(5.0) - 1.0) / 2.0
+    lo, hi = b_lo, b_hi
+    c = hi - phi * (hi - lo)
+    d = lo + phi * (hi - lo)
+    fc, fd = surrogate(c), surrogate(d)
+    for _ in range(200):
+        if hi - lo < 1e-10:
+            break
+        if fc < fd:
+            hi, d, fd = d, c, fc
+            c = hi - phi * (hi - lo)
+            fc = surrogate(c)
+        else:
+            lo, c, fc = c, d, fd
+            d = lo + phi * (hi - lo)
+            fd = surrogate(d)
+    b_star = 0.5 * (lo + hi)
+
+    # frequencies realizing feasibility at the chosen v*
+    w = 1.0 / (v_star * p.b_full)
+    _, f, fs = min_energy_under_deadline(w, p, t0)
+    return b_star, v_star, f, fs
+
+
+def solve_sca(lam: float, p: SystemParams, t0: float, e0: float,
+              b_max: int = 16, tol: float = 1e-6, max_iters: int = 64,
+              ) -> Optional[CodesignSolution]:
+    """Algorithm 1 (paper).  Returns None when (P1) is infeasible."""
+    # Step 1-2: relax and initialize a feasible local point.
+    ok1, _, _, _ = feasible_bitwidth(1.0, lam, p, t0, e0)
+    if not ok1:
+        return None
+    b_k, v_k = 1.0 + 1e-3, 1.0 / (1.0 + 1e-3)
+    prev_obj = math.inf
+    f = fs = float("nan")
+    iters = 0
+    for k in range(1, max_iters + 1):
+        iters = k
+        out = _solve_p4k(b_k, v_k, lam, p, t0, e0, b_max)
+        if out is None:
+            return None
+        b_star, v_star, f, fs = out
+        obj = distortion_gap(b_star, lam)
+        b_k, v_k = b_star, v_star
+        # relative decrease: the objective scales like 1/lam, so an absolute
+        # threshold would stop after one step for peaky weight distributions
+        if prev_obj - obj < tol * max(abs(prev_obj), _EPS):
+            break
+        prev_obj = obj
+
+    # Step 9: round to the nearest feasible bit-width; fall back downward.
+    b_round = int(round(b_k))
+    b_round = max(1, min(b_max, b_round))
+    for b_hat in range(b_round, 0, -1):
+        ok, f_r, fs_r, _ = feasible_bitwidth(b_hat, lam, p, t0, e0)
+        if ok:
+            return _pack(b_hat, f_r, fs_r, lam, p, iterations=iters,
+                         b_relaxed=b_k)
+    return None

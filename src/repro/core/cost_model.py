@@ -1,0 +1,96 @@
+"""Inference delay & energy model (paper §II-D, eqs. (4)-(9)).
+
+The paper's model:
+
+  on-agent  delay   t(b_hat, f)  = b_hat N_FLOP / (b f c)              (4)
+  on-server delay   t~(f~)       = N~_FLOP / (f~ c~)                   (5)
+  on-agent  energy  e(b_hat, f)  = eta  (b_hat N_FLOP / (b c)) psi f^2 (6)
+  on-server energy  e~(f~)       = eta~ (N~_FLOP / c~) psi~ f~^2       (7)
+  totals            T = t + t~,  E = e + e~                            (8),(9)
+
+plus (our addition, used by the serving engine and the multi-pod mapping) an
+optional transport term for the intermediate embedding: the boundary
+activation of size S_emb bytes at bit-width b_emb over a link of rate
+``link_bps`` — this is the Wi-Fi uplink in the paper's testbed and the
+ICI/DCN hop in the pod mapping.  It defaults to 0 so the faithful model
+(computation-dominated, as the paper assumes) is the baseline.
+
+All functions are jnp-pure so the co-design optimizer can differentiate
+through them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["SystemParams", "agent_delay", "server_delay", "agent_energy",
+           "server_energy", "total_delay", "total_energy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Hardware/system constants of §II-D and §VI-C.
+
+    Defaults reproduce the paper's simulation setup: f_max = 2 GHz (device),
+    f~_max = 10 GHz (server), c = 32 / c~ = 128 FLOPs/cycle, PUE eta = 1 /
+    eta~ = 2, psi = 2e-29, psi~ = 1e-28 W/(cycle/s)^3.
+    """
+
+    n_flop_agent: float          # N_FLOP: full-precision on-agent FLOPs
+    n_flop_server: float         # N~_FLOP
+    b_full: float = 16.0         # b: full-precision storage bit-width
+    c_agent: float = 32.0
+    c_server: float = 128.0
+    f_max: float = 2.0e9
+    f_server_max: float = 10.0e9
+    eta_agent: float = 1.0
+    eta_server: float = 2.0
+    psi_agent: float = 2.0e-29
+    psi_server: float = 1.0e-28
+    # optional transport (0 = faithful computation-only model)
+    emb_bytes_full: float = 0.0  # boundary embedding bytes at full precision
+    link_bps: float = 0.0        # uplink rate in bytes/s; 0 disables
+
+
+def agent_delay(b_hat, f, p: SystemParams):
+    """Eq. (4)."""
+    return b_hat * p.n_flop_agent / (p.b_full * f * p.c_agent)
+
+
+def server_delay(f_server, p: SystemParams):
+    """Eq. (5)."""
+    return p.n_flop_server / (f_server * p.c_server)
+
+
+def transport_delay(b_emb, p: SystemParams):
+    """Embedding uplink time (0 when link modeling is disabled)."""
+    if p.link_bps <= 0.0 or p.emb_bytes_full <= 0.0:
+        return jnp.float32(0.0)
+    return (b_emb / p.b_full) * p.emb_bytes_full / p.link_bps
+
+
+def agent_energy(b_hat, f, p: SystemParams):
+    """Eq. (6)."""
+    return p.eta_agent * (b_hat * p.n_flop_agent / (p.b_full * p.c_agent)) \
+        * p.psi_agent * f ** 2
+
+
+def server_energy(f_server, p: SystemParams):
+    """Eq. (7)."""
+    return p.eta_server * (p.n_flop_server / p.c_server) \
+        * p.psi_server * f_server ** 2
+
+
+def total_delay(b_hat, f, f_server, p: SystemParams, b_emb=None):
+    """Eq. (8) (+ optional transport)."""
+    t = agent_delay(b_hat, f, p) + server_delay(f_server, p)
+    if b_emb is not None:
+        t = t + transport_delay(b_emb, p)
+    return t
+
+
+def total_energy(b_hat, f, f_server, p: SystemParams):
+    """Eq. (9)."""
+    return agent_energy(b_hat, f, p) + server_energy(f_server, p)

@@ -1,0 +1,150 @@
+"""Quantization-induced output distortion (paper §III).
+
+Implements:
+
+  * Proposition 3.1 — the layered chain upper bound for FC DNNs:
+        ||f(x,W) - f(x,W_hat)||_1 <= sum_l A^(l) ||W^(l) - W_hat^(l)||_1
+    with A^(l) = prod_{j<l} ||W^(j)||_1 * prod_{k>l} (||W^(k)||_1 + tau^(k)).
+    The matrix norm here is the induced L1 norm (max column abs sum), which is
+    the sub-multiplicative norm compatible with the proof's
+    ||W x||_1 <= ||W||_1 ||x||_1 step.
+
+  * the surrogate parameter-distortion metric d(W, W_hat) = ||W - W_hat||_1
+    (eq. 15), elementwise L1 over the whole pytree;
+
+  * the first-order Taylor surrogate for general models (eq. 16-17) and an
+    empirical gradient-norm constant H estimator;
+
+  * measured output distortion: run the model at full precision and
+    quantized, take ||.||_1 of the difference (what Fig. 3 plots).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "induced_l1_norm",
+    "elementwise_l1",
+    "param_distortion",
+    "chain_bound_coefficients",
+    "fc_chain_bound",
+    "measured_output_distortion",
+    "taylor_surrogate_bound",
+    "estimate_grad_norm_H",
+]
+
+
+def induced_l1_norm(w: jax.Array) -> jax.Array:
+    """Induced (operator) L1 norm of a matrix: max over columns of column
+    abs-sums.  For y = W x with ||x||_1 bounded, ||W x||_1 <= ||W||_1 ||x||_1.
+
+    Convention: W has shape [out, in]; columns index the input dimension.
+    """
+    if w.ndim != 2:
+        w = w.reshape(w.shape[0], -1)
+    return jnp.max(jnp.sum(jnp.abs(w), axis=0))
+
+
+def elementwise_l1(a: jax.Array, b: jax.Array) -> jax.Array:
+    """sum |a - b| — the entrywise L1 used for the surrogate metric."""
+    return jnp.sum(jnp.abs(a - b))
+
+
+def param_distortion(params: Any, params_hat: Any) -> jax.Array:
+    """d(W, W_hat) = ||W - W_hat||_1 over a whole pytree (paper eq. 15)."""
+    leaves = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(elementwise_l1, params, params_hat))
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Proposition 3.1 for FC DNNs
+# ---------------------------------------------------------------------------
+
+def chain_bound_coefficients(
+    weights: Sequence[jax.Array],
+    taus: Sequence[jax.Array],
+) -> list[jax.Array]:
+    """A^(l) coefficients of Prop 3.1 (eq. 14), 1-indexed layers -> list.
+
+    ``weights`` are the *unquantized* per-layer matrices W^(1..L) ([out, in]),
+    ``taus`` the per-layer quantization error bounds of Assumption 3
+    (||W^(l) - W_hat^(l)||_1 <= tau^(l), induced-L1).
+    """
+    L = len(weights)
+    norms = [induced_l1_norm(w) for w in weights]
+    coeffs = []
+    for l in range(L):  # 0-based
+        pre = jnp.prod(jnp.stack([norms[j] for j in range(l)])) if l > 0 \
+            else jnp.float32(1.0)
+        post = jnp.prod(jnp.stack(
+            [norms[k] + taus[k] for k in range(l + 1, L)])) if l < L - 1 \
+            else jnp.float32(1.0)
+        coeffs.append(pre * post)
+    return coeffs
+
+
+def fc_chain_bound(
+    weights: Sequence[jax.Array],
+    weights_hat: Sequence[jax.Array],
+) -> jax.Array:
+    """Right-hand side of Prop 3.1 for a concrete quantization.
+
+    tau^(l) is instantiated as the realized induced-L1 error of layer l
+    (which trivially satisfies Assumption 3 with equality).
+    """
+    taus = [induced_l1_norm(w - wh) for w, wh in zip(weights, weights_hat)]
+    coeffs = chain_bound_coefficients(weights, taus)
+    terms = [c * t for c, t in zip(coeffs, taus)]
+    return jnp.sum(jnp.stack(terms))
+
+
+def measured_output_distortion(
+    apply_fn: Callable[[Any, jax.Array], jax.Array],
+    params: Any,
+    params_hat: Any,
+    x: jax.Array,
+) -> jax.Array:
+    """||f(x,W) - f(x,W_hat)||_1 averaged over the batch (Fig. 3 y-axis)."""
+    y = apply_fn(params, x)
+    y_hat = apply_fn(params_hat, x)
+    d = jnp.abs(y - y_hat)
+    return jnp.sum(d) / (d.shape[0] if d.ndim > 1 else 1)
+
+
+# ---------------------------------------------------------------------------
+# General-model Taylor surrogate (Remark 3.2)
+# ---------------------------------------------------------------------------
+
+def estimate_grad_norm_H(
+    apply_fn: Callable[[Any, jax.Array], jax.Array],
+    params: Any,
+    xs: jax.Array,
+) -> jax.Array:
+    """Empirical H >= ||grad_W f(x, W)||_1 (max-abs row-sum proxy over batch).
+
+    The paper estimates the model-dependent constant "in a data-driven manner
+    as an empirical upper-bound constant"; we do the same: H is the max over
+    inputs of the L1 norm of the scalar-output gradient (model outputs are
+    reduced by sum so grad is well-defined for vector outputs; this yields the
+    worst-case direction constant used in eq. 17).
+    """
+    def scalar_out(p, x):
+        return jnp.sum(apply_fn(p, x[None, ...]))
+
+    def one(x):
+        g = jax.grad(scalar_out)(params, x)
+        leaves = jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(lambda a: jnp.sum(jnp.abs(a)), g))
+        return jnp.sum(jnp.stack(leaves))
+
+    return jnp.max(jax.vmap(one)(xs))
+
+
+def taylor_surrogate_bound(H: jax.Array, params: Any, params_hat: Any) -> jax.Array:
+    """Eq. (17): ||f(x,W_hat) - f(x,W)||_1 <~ H ||W - W_hat||_1."""
+    return H * param_distortion(params, params_hat)

@@ -1,0 +1,330 @@
+"""Model quantizers (paper §II-A, §VI-A).
+
+The paper's scheme: keep the sign bit, quantize the magnitude with
+``b_hat - 1`` bits.  Two codebooks are evaluated:
+
+  * uniform      — fixed step over [0, absmax]          (paper ref [31])
+  * pot-log      — power-of-two logarithmic levels       (paper ref [32])
+
+Everything operates on arrays or whole parameter pytrees.  Two execution
+styles:
+
+  * ``quantize_dequantize``  — "fake quant" used for distortion analysis and
+    QAT (straight-through estimator gradients);
+  * ``quantize`` / ``dequantize`` — real integer codes + scales, the storage
+    format consumed by ``repro.kernels.qmm`` (int8/int4-resident matmul).
+
+Granularity: per-tensor, per-channel (last axis), or per-group along the
+contraction axis — per-group is what the Pallas kernel consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "quantize_dequantize",
+    "quantize",
+    "dequantize",
+    "quantize_tree",
+    "fake_quantize_tree",
+    "qat_quantize",
+    "uniform_step_size",
+    "max_quant_error",
+    "pack_int4",
+    "unpack_int4",
+]
+
+Scheme = Literal["uniform", "pot-log"]
+Granularity = Literal["per-tensor", "per-channel", "per-group"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How to quantize one tensor (or a whole tree)."""
+
+    bits: int = 8                       # total bits incl. sign (paper's b_hat)
+    scheme: Scheme = "uniform"
+    granularity: Granularity = "per-channel"
+    group_size: int = 128               # for per-group
+    # Which pytree leaves to quantize: predicate on (path, leaf).  2D+ weights
+    # only by default — biases/norm gains stay full precision (paper keeps
+    # them; their byte count is negligible).
+    min_ndim: int = 2
+
+    def __post_init__(self):
+        if self.bits < 1:
+            raise ValueError(f"bits must be >= 1, got {self.bits}")
+        if self.scheme not in ("uniform", "pot-log"):
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+
+    @property
+    def magnitude_levels(self) -> int:
+        """Number of magnitude codepoints: 2^(bits-1) (sign kept separately)."""
+        return 2 ** (self.bits - 1)
+
+
+# ---------------------------------------------------------------------------
+# Scale computation
+# ---------------------------------------------------------------------------
+
+def _absmax(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Reduction producing the scale denominator, shaped for broadcasting."""
+    if cfg.granularity == "per-tensor":
+        return jnp.max(jnp.abs(x))
+    if cfg.granularity == "per-channel":
+        # reduce all axes but the last (output-feature axis for [in, out] mats)
+        axes = tuple(range(x.ndim - 1))
+        return jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    if cfg.granularity == "per-group":
+        # group along the first (contraction) axis
+        g = cfg.group_size
+        if x.shape[0] % g != 0:
+            # fall back to per-channel when the axis doesn't tile
+            axes = tuple(range(x.ndim - 1))
+            return jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+        xg = x.reshape((x.shape[0] // g, g) + x.shape[1:])
+        return jnp.repeat(jnp.max(jnp.abs(xg), axis=1), g, axis=0)
+    raise ValueError(cfg.granularity)
+
+
+def uniform_step_size(absmax: jax.Array, bits: int) -> jax.Array:
+    """Uniform-quantizer step Delta = absmax / (2^(bits-1) - 1).
+
+    bits includes the sign bit; magnitudes get 2^(bits-1)-1 nonzero levels.
+    Guard bits==1: a 1-bit code is sign-only, magnitude collapses to a single
+    reconstruction level (we use absmax/2, the conditional mean surrogate).
+    """
+    levels = max(2 ** (bits - 1) - 1, 1)
+    return absmax / levels
+
+
+def max_quant_error(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """tau bound of Assumption 3: worst-case per-element |w - w_hat|.
+
+    Uniform: Delta/2.  PoT-log with geometric rounding in the exponent: a
+    magnitude just above the k/(k+1) boundary amax·2^{-(k+0.5)} rounds UP to
+    amax·2^{-k}, so the worst relative error is (1 - 2^{-1/2}) ~ 0.2929 of
+    the top level — i.e. tau = (1 - 1/sqrt(2)) · absmax (k = 0 dominates),
+    plus the underflow-to-zero floor for 1-level codebooks.
+    """
+    amax = _absmax(x, cfg)
+    if cfg.scheme == "uniform":
+        return jnp.max(uniform_step_size(amax, cfg.bits)) / 2.0
+    n = cfg.magnitude_levels
+    if n <= 1:
+        return jnp.max(amax)  # sign-only: recon amax/2, worst err ~ amax
+    round_up = (1.0 - 2.0 ** -0.5) * jnp.max(amax)
+    floor = jnp.max(amax) * 2.0 ** (-(n - 1))  # underflow-to-zero half-gap
+    return jnp.maximum(round_up, floor)
+
+
+# ---------------------------------------------------------------------------
+# Core quantizers (array level)
+# ---------------------------------------------------------------------------
+
+def _uniform_qdq(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    amax = _absmax(x, cfg)
+    step = uniform_step_size(amax, cfg.bits)
+    step = jnp.where(step <= 0, 1.0, step)
+    mag = jnp.abs(x)
+    if cfg.bits == 1:
+        # sign-only code: reconstruct magnitude at its conditional mean proxy
+        recon = amax / 2.0
+        return jnp.sign(x) * jnp.broadcast_to(recon, x.shape)
+    levels = 2 ** (cfg.bits - 1) - 1
+    q = jnp.clip(jnp.round(mag / step), 0, levels)
+    return jnp.sign(x) * q * step
+
+
+def _potlog_qdq(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Power-of-two logarithmic codebook: {0} U {amax 2^{-k}, k=0..n-2}."""
+    amax = _absmax(x, cfg)
+    amax = jnp.where(amax <= 0, 1.0, amax)
+    n = cfg.magnitude_levels
+    if n <= 1:
+        recon = amax / 2.0
+        return jnp.sign(x) * jnp.broadcast_to(recon, x.shape)
+    mag = jnp.abs(x)
+    # exponent k = round(log2(amax / mag)), clipped to codebook range
+    safe = jnp.maximum(mag, jnp.finfo(x.dtype).tiny)
+    k = jnp.round(jnp.log2(amax / safe))
+    k = jnp.clip(k, 0, n - 2)
+    recon = amax * jnp.exp2(-k)
+    # underflow to zero: anything below half the smallest level
+    smallest = amax * (2.0 ** (-(n - 2)))
+    recon = jnp.where(mag < smallest / 2.0, 0.0, recon)
+    return jnp.sign(x) * recon
+
+
+def quantize_dequantize(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Fake-quantization (quantize then immediately dequantize)."""
+    if cfg.scheme == "uniform":
+        return _uniform_qdq(x, cfg)
+    return _potlog_qdq(x, cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Integer codes + scale, the storage format for quantized weights.
+
+    ``codes`` is int8 regardless of bits<=8 (int4 values live in [-7, 7];
+    use :func:`pack_int4` for the 2-per-byte wire format).
+    """
+
+    codes: jax.Array          # int8, same shape as original
+    scale: jax.Array          # broadcastable to codes.shape
+    bits: int
+    scheme: Scheme
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    @property
+    def dtype(self):
+        return self.codes.dtype
+
+    def astype(self, dtype) -> jax.Array:
+        """Transparent dequant-on-read: model code does
+        ``p["w"].astype(x.dtype)`` before every matmul, so swapping a float
+        leaf for a QuantizedTensor makes the weights int8-resident in HBM
+        with the dequant fused into the consumer by XLA (the pure-JAX
+        analogue of kernels/qmm.py; used by the serving dry-run)."""
+        return dequantize(self, dtype)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype)
+
+    def nbytes_effective(self) -> int:
+        """Storage bytes at the nominal bit-width (what goes over the wire)."""
+        import numpy as _np
+        n = int(_np.prod(self.codes.shape))
+        scale_bytes = int(_np.prod(self.scale.shape)) * 4
+        return (n * self.bits + 7) // 8 + scale_bytes
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedTensor,
+    lambda qt: ((qt.codes, qt.scale), (qt.bits, qt.scheme)),
+    lambda aux, ch: QuantizedTensor(ch[0], ch[1], aux[0], aux[1]),
+)
+
+
+def quantize(x: jax.Array, cfg: QuantConfig) -> QuantizedTensor:
+    """Real quantization to integer codes (uniform scheme)."""
+    if cfg.scheme != "uniform":
+        raise NotImplementedError(
+            "integer-code storage implemented for the uniform scheme; "
+            "pot-log uses quantize_dequantize (codes are exponents).")
+    amax = _absmax(x, cfg)
+    step = uniform_step_size(amax, cfg.bits)
+    step = jnp.where(step <= 0, 1.0, step)
+    levels = max(2 ** (cfg.bits - 1) - 1, 1)
+    q = jnp.clip(jnp.round(x / step), -levels, levels).astype(jnp.int8)
+    return QuantizedTensor(codes=q, scale=step.astype(jnp.float32),
+                           bits=cfg.bits, scheme=cfg.scheme)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return (qt.codes.astype(dtype) * qt.scale.astype(dtype)).astype(dtype)
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int8-held int4 codes (two per byte) along the last axis."""
+    if codes.shape[-1] % 2 != 0:
+        raise ValueError("last axis must be even to pack int4")
+    lo = codes[..., 0::2] & 0x0F
+    hi = (codes[..., 1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extends 4-bit two's complement)."""
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    def sext(v):
+        return jnp.where(v >= 8, v - 16, v)
+    out = jnp.stack([sext(lo), sext(hi)], axis=-1)
+    return out.reshape(packed.shape[:-1] + (packed.shape[-1] * 2,)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Pytree level
+# ---------------------------------------------------------------------------
+
+def _should_quantize(path, leaf, cfg: QuantConfig) -> bool:
+    del path
+    return hasattr(leaf, "ndim") and leaf.ndim >= cfg.min_ndim and \
+        jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def fake_quantize_tree(params: Any, cfg: QuantConfig) -> Any:
+    """Apply quantize-dequantize to every eligible leaf of a param pytree."""
+    def f(path, leaf):
+        if _should_quantize(path, leaf, cfg):
+            return quantize_dequantize(leaf, cfg)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def quantize_tree(params: Any, cfg: QuantConfig) -> Any:
+    """Integer-quantize every eligible leaf; others pass through unchanged."""
+    def f(path, leaf):
+        if _should_quantize(path, leaf, cfg):
+            return quantize(leaf, cfg)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def quantize_tree_stacked(params: Any, cfg: QuantConfig,
+                          min_stacked_ndim: int = 3) -> Any:
+    """Like :func:`quantize_tree` but scale computation is vmapped over the
+    leading (stacked-layers) axis, so per-channel scales are per *layer* —
+    the form the scan-over-layers models consume when serving with
+    int8-resident weights.  Only >=3-D leaves (stacked weight matrices) are
+    quantized; stacked 1-D-per-layer vectors (norm gains, biases) stay in
+    float, matching the paper's sign/magnitude treatment of weights only."""
+    def f(path, leaf):
+        if not _should_quantize(path, leaf, cfg):
+            return leaf
+        if leaf.ndim >= min_stacked_ndim:
+            return jax.vmap(lambda w: quantize(w, cfg))(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# QAT (straight-through estimator)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def qat_quantize(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Fake-quant with identity (straight-through) gradients.
+
+    Used by the training loop to make the agent partition quantization-aware:
+    forward sees quantized weights, backward passes gradients through.
+    """
+    return quantize_dequantize(x, cfg)
+
+
+def _qat_fwd(x, cfg):
+    return quantize_dequantize(x, cfg), None
+
+
+def _qat_bwd(cfg, res, g):
+    del cfg, res
+    return (g,)
+
+
+qat_quantize.defvjp(_qat_fwd, _qat_bwd)

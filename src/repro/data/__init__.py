@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (LM + caption proxy) + loader."""
+
+from .loader import ShardedLoader  # noqa: F401
+from .synthetic import (CaptionProxyConfig, CaptionProxyDataset,  # noqa: F401
+                        MarkovLMConfig, MarkovLMDataset)

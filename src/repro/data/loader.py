@@ -1,0 +1,57 @@
+"""Sharded host loader: global batch -> per-host slice -> device arrays.
+
+In a real multi-host pod each process feeds its addressable shard of the
+globally-sharded batch (``jax.make_array_from_process_local_data``).  On the
+single-process CPU container the same code path degrades to "one host owns
+the whole batch" — the *interface* (global batch semantics, deterministic
+step indexing, resume) is what the framework layers above depend on.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ShardedLoader:
+    """Wraps a ``batch_at(step)`` dataset with device placement.
+
+    ``sharding``: optional pytree (or single) ``NamedSharding`` for batches;
+    when None, arrays land on the default device.
+    """
+
+    def __init__(self, dataset, sharding: Optional[Any] = None,
+                 start_step: int = 0):
+        self.dataset = dataset
+        self.sharding = sharding
+        self.step = start_step
+
+    def peek_structure(self) -> Dict[str, Any]:
+        b = self.dataset.batch_at(0)
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for k, v in b.items()}
+
+    def _place(self, batch: Dict[str, np.ndarray]) -> Dict[str, jax.Array]:
+        if self.sharding is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+
+        def put(k, v):
+            sh = (self.sharding[k] if isinstance(self.sharding, dict)
+                  else self.sharding)
+            return jax.device_put(v, sh)
+        return {k: put(k, v) for k, v in batch.items()}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        batch = self.dataset.batch_at(self.step)
+        self.step += 1
+        return self._place(batch)
+
+    def seek(self, step: int) -> None:
+        """Resume point (used after checkpoint restore)."""
+        self.step = step

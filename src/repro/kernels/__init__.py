@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the quantization hot path.
+
+  qmm.py       — quantized-weight matmul (int8 / packed-int4 HBM-resident
+                 weights, per-group scales, in-VMEM dequant before the MXU)
+  quantize.py  — fused absmax group quantizer
+  ops.py       — jit'd wrappers (+ CPU interpret fallback, padding,
+                 QuantizedLinear record)
+  ref.py       — pure-jnp oracles the tests allclose against
+"""
+
+from .ops import (QuantizedLinear, group_quantize, quantize_linear,  # noqa: F401
+                  quantized_matmul, quantized_matmul_int4)

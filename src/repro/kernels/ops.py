@@ -1,0 +1,163 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: CPU fallback (interpret mode), shape padding to block multiples,
+>2-D activations (leading dims are flattened into M), and a convenience
+``QuantizedLinear`` record the serving engine stores per weight matrix.
+
+On TPU these dispatch the compiled Pallas kernels; on this CPU container the
+same kernel bodies run under ``interpret=True`` (numerics identical, speed
+irrelevant — tests assert allclose vs ref.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import qmm as _qmm
+from . import quantize as _quantize
+from . import ref as _ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def _pick_block(dim: int, target: int, quantum: int) -> int:
+    """Largest multiple of ``quantum`` <= target that divides ``dim``."""
+    b = min(target, dim)
+    b -= b % quantum
+    while b > quantum and dim % b != 0:
+        b -= quantum
+    return max(b, quantum) if dim % quantum == 0 else dim
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def quantized_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array,
+                     *, block_m: int = 256, block_n: int = 256,
+                     block_k: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """x [..., K] @ dequant(codes [K, N], scales [K//G, N]) -> [..., N]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = codes.shape[1]
+    xm = x.reshape(-1, k)
+    # pad M to the block multiple; K/N must already be multiples for the
+    # production weights (all assigned configs are 128-aligned); fall back
+    # to the reference path when they are not.
+    if k % 128 != 0 or n % 128 != 0 or k % (k // scales.shape[0]) != 0:
+        out = _ref.qmm_ref(xm, codes, scales)
+        return out.reshape(*lead, n)
+    group = k // scales.shape[0]
+    bm = min(block_m, max(128, 1 << (xm.shape[0] - 1).bit_length()))
+    xm, m0 = _pad_to(xm, bm, 0)
+    bk = _pick_block(k, block_k, max(group, 128))
+    bn = _pick_block(n, block_n, 128)
+    out = _qmm.qmm(xm, codes, scales, block_m=min(bm, xm.shape[0]),
+                   block_n=bn, block_k=bk, interpret=interpret)
+    return out[:m0].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def quantized_matmul_int4(x: jax.Array, packed: jax.Array,
+                          scales: jax.Array, *, block_m: int = 256,
+                          block_n: int = 256, block_k: int = 512,
+                          interpret: bool | None = None) -> jax.Array:
+    """x [..., K] @ dequant(packed [K/2, N], scales) -> [..., N]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = packed.shape[1]
+    xm = x.reshape(-1, k)
+    if k % 256 != 0 or n % 128 != 0:
+        out = _ref.qmm_int4_ref(xm, packed, scales)
+        return out.reshape(*lead, n)
+    group = k // scales.shape[0]
+    bm = min(block_m, max(128, 1 << (xm.shape[0] - 1).bit_length()))
+    xm, m0 = _pad_to(xm, bm, 0)
+    bk = _pick_block(k, block_k, max(group, 256))
+    bn = _pick_block(n, block_n, 128)
+    out = _qmm.qmm_int4(xm, packed, scales, block_m=min(bm, xm.shape[0]),
+                        block_n=bn, block_k=bk, interpret=interpret)
+    return out[:m0].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "bits",
+                                             "interpret"))
+def group_quantize(w: jax.Array, *, group_size: int = 128, bits: int = 8,
+                   interpret: bool | None = None):
+    """Fused quantizer; falls back to the jnp reference off the fast path."""
+    interpret = _on_cpu() if interpret is None else interpret
+    k, n = w.shape
+    if k % group_size != 0 or n % 128 != 0:
+        return _ref.group_quantize_ref(w, group_size=min(group_size, k)
+                                       if k % min(group_size, k) == 0 else 1,
+                                       bits=bits) \
+            if k % min(group_size, k) == 0 \
+            else _ref.group_quantize_ref(w, 1, bits=bits)
+    return _quantize.group_quantize(w, group_size=group_size, bits=bits,
+                                    block_n=_pick_block(n, 512, 128),
+                                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Serving-side weight record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    """One HBM-resident quantized weight matrix (int8 or packed int4)."""
+
+    codes: jax.Array            # int8 [K, N] or packed [K/2, N]
+    scales: jax.Array           # f32 [K//G, N]
+    bits: int                   # 8 or 4
+    k: int                      # logical contraction dim
+
+    def __matmul__(self, other):
+        raise TypeError("use .apply(x)")
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        if self.bits == 4:
+            return quantized_matmul_int4(x, self.codes, self.scales)
+        return quantized_matmul(x, self.codes, self.scales)
+
+    def nbytes(self) -> int:
+        import numpy as np
+        return (int(np.prod(self.codes.shape)) * self.codes.dtype.itemsize
+                + int(np.prod(self.scales.shape)) * 4)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedLinear,
+    lambda q: ((q.codes, q.scales), (q.bits, q.k)),
+    lambda aux, ch: QuantizedLinear(ch[0], ch[1], aux[0], aux[1]),
+)
+
+
+def quantize_linear(w: jax.Array, *, bits: int = 8,
+                    group_size: int = 128) -> QuantizedLinear:
+    """Quantize one [K, N] weight for HBM residency (int8 or packed int4)."""
+    k = w.shape[0]
+    if bits == 4:
+        # quantize at 4-bit levels then pack two codes per byte along K
+        codes, scales = group_quantize(w, group_size=group_size, bits=4)
+        packed = _ref.pack_int4_ref(codes)
+        return QuantizedLinear(codes=packed, scales=scales, bits=4, k=k)
+    codes, scales = group_quantize(w, group_size=group_size, bits=bits)
+    return QuantizedLinear(codes=codes, scales=scales, bits=8, k=k)

@@ -1,0 +1,77 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the locally available devices (host mesh) with the full
+production stack: sharded params, QAT on the agent partition, checkpointing,
+optional int8-EF gradient compression.  The same Trainer lowers on the
+512-chip production mesh in dryrun.py — this entry point is the
+"actually execute" half.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from ..configs import get_config, get_smoke
+from ..data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
+from ..checkpoint import CheckpointManager
+from ..models.registry import build_model
+from ..optim import AdamW, cosine_schedule
+from ..runtime import TrainConfig, Trainer
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--qat-bits", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", type=int, default=0,
+                    help="data-parallel degree (0 = all devices)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(data=args.data or n_dev, model=1)
+
+    ds = MarkovLMDataset(MarkovLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        batch_size=args.batch))
+    loader = ShardedLoader(ds)
+
+    ckpt = CheckpointManager(args.ckpt_dir, save_interval=args.ckpt_every) \
+        if args.ckpt_dir else None
+    opt = AdamW(learning_rate=cosine_schedule(args.lr, 20, args.steps))
+    tr = Trainer(model, opt, mesh,
+                 TrainConfig(qat_bits=args.qat_bits,
+                             grad_compression=args.grad_compression,
+                             log_every=10),
+                 ckpt=ckpt)
+    print(f"arch={cfg.name} params={cfg.param_count():.3g} "
+          f"devices={n_dev} qat_bits={args.qat_bits}")
+    _, history = tr.fit(loader, args.steps,
+                        on_metrics=lambda m: print(
+                            f"step {m['step']:5d} loss {m['loss']:.4f} "
+                            f"gnorm {m['grad_norm']:.3f} "
+                            f"{m['steps_per_s']:.2f} it/s"))
+    if history:
+        first, last = history[0]["loss"], history[-1]["loss"]
+        print(f"loss {first:.4f} -> {last:.4f} "
+              f"({'improved' if last < first else 'NOT improved'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,51 @@
+"""FCDNN-16 (paper §VI-A): fully connected autoencoder, ReLU, 16 hidden
+layers — encoder dims [64,128,256,512,256,128,64,32], symmetric decoder.
+
+This is the model Proposition 3.1 is validated on (paper Fig. 3, left).
+Weights are a plain list of [out, in] matrices (the proof's convention:
+y = W x, induced-L1 norms over columns); no biases, sigma = ReLU,
+sigma(0) = 0 per Assumption 2.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.fcdnn16 import DECODER_DIMS, ENCODER_DIMS, INPUT_DIM
+
+
+def layer_dims(input_dim: int = INPUT_DIM) -> List[int]:
+    """[in, h1, ..., h16, out] — 17 weight matrices, 16 hidden layers."""
+    return [input_dim, *ENCODER_DIMS, *DECODER_DIMS[1:], input_dim]
+
+
+def init_fcdnn(key, dims: Sequence[int] | None = None,
+               scale: float = 0.5) -> List[jax.Array]:
+    """He-style init scaled down so prod ||W||_1 stays finite-ish (the
+    chain bound is a product of induced norms; wild inits make it vacuous)."""
+    dims = list(dims) if dims is not None else layer_dims()
+    ks = jax.random.split(key, len(dims) - 1)
+    ws = []
+    for k, d_in, d_out in zip(ks, dims[:-1], dims[1:]):
+        w = jax.random.normal(k, (d_out, d_in), jnp.float32)
+        ws.append(w * scale * (2.0 / d_in) ** 0.5)
+    return ws
+
+
+def apply_fcdnn(weights: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """f(x, W) = W^L relu(W^{L-1} relu(... W^1 x)).  x: [B, D_in]."""
+    h = x
+    for i, w in enumerate(weights):
+        h = h @ w.T
+        if i < len(weights) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mse_loss(weights, x):
+    """Autoencoder reconstruction loss (the paper trains on MNIST MSE)."""
+    y = apply_fcdnn(weights, x)
+    return jnp.mean(jnp.square(y - x))

@@ -1,0 +1,659 @@
+"""Neural net primitives (pure JAX, functional, pytree params).
+
+Conventions
+-----------
+* linear weights are ``[in, out]``; attention projections fuse heads into the
+  last axis (``wq: [D, H*dh]``) so one logical axis maps to the TP mesh axis.
+* every ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the
+  params pytree with tuples of *logical* axis names consumed by
+  ``repro.parallel.sharding``.
+* attention for long sequences is blockwise (online-softmax scan over KV
+  blocks nested in a scan over Q blocks) so no [S, S] score tensor is ever
+  materialized — this is the GSPMD-friendly stand-in for a fused attention
+  kernel (see DESIGN.md §3).
+* norms and softmax accumulate in float32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Any  # pytree of tuples of logical axis names
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def init_norm(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return ({"scale": jnp.ones((d,), jnp.float32),
+                 "bias": jnp.zeros((d,), jnp.float32)},
+                {"scale": ("embed",), "bias": ("embed",)})
+    return ({"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)})
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, dh]; positions: [B, S] (int)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, layers: Optional[int] = None):
+    """GQA projection params; ``layers`` adds a leading stacked-layer axis."""
+    ks = jax.random.split(key, 8)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def mk(k, i, o):
+        if layers is None:
+            return dense_init(k, i, o, dt)
+        subs = jax.random.split(k, layers)
+        return jax.vmap(lambda kk: dense_init(kk, i, o, dt))(subs)
+    p = {"wq": mk(ks[0], d, qd), "wk": mk(ks[1], d, kvd),
+         "wv": mk(ks[2], d, kvd), "wo": mk(ks[3], qd, d)}
+    lead = ("layers",) if layers is not None else ()
+    ax = {"wq": lead + ("embed", "heads"), "wk": lead + ("embed", "kv"),
+          "wv": lead + ("embed", "kv"), "wo": lead + ("heads", "embed")}
+    if cfg.qkv_bias:
+        zeros = (lambda n: jnp.zeros((layers, n) if layers else (n,),
+                                     jnp.float32))
+        p.update({"bq": zeros(qd), "bk": zeros(kvd), "bv": zeros(kvd)})
+        ax.update({"bq": lead + ("heads",), "bk": lead + ("kv",),
+                   "bv": lead + ("kv",)})
+    return p, ax
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def qkv_project(cfg, p, x, positions):
+    """x [B,S,D] -> q [B,S,H,dh], k/v [B,S,KV,dh] with RoPE applied."""
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_block: int = 512,
+                        kv_block: int = 512, window: int = 0,
+                        kv_positions=None, q_positions=None):
+    """Memory-bounded attention via online softmax.
+
+    Under ``parallel.sharding.flash_attention_mode`` (the dry-run's "flash"
+    variant) this dispatches the fused-kernel path instead — see
+    :func:`fused_attention_acct` and kernels/flash.py.
+
+    q: [B, S, H, dh]; k, v: [B, T, KV, dh] with H = KV * G (GQA).
+    Scans over KV blocks inside a scan over Q blocks; running (max, sum, acc)
+    implement the streaming softmax.  ``window`` > 0 adds a sliding-window
+    mask.  Positions default to arange (prefill); pass explicit positions for
+    packed/offset cases.
+    """
+    from ..parallel import sharding as _shctx
+    if _shctx.flash_mesh() is not None and q_positions is None \
+            and kv_positions is None:
+        return fused_attention_acct(q, k, v, causal=causal, window=window,
+                                    mesh=_shctx.flash_mesh())
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    nq = -(-S // q_block)
+    nk = -(-T // kv_block)
+    Sp, Tp = nq * q_block, nk * kv_block
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    scale = dh ** -0.5
+    qs = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    ks = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vs = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, ((0, 0), (0, Sp - S)), constant_values=-1)
+    kpos = jnp.pad(kv_positions, ((0, 0), (0, Tp - T)),
+                   constant_values=2 ** 30)
+
+    # [B, n, blk, KV, G, dh] views
+    qs = qs.reshape(B, nq, q_block, KV, G, dh)
+    ks = ks.reshape(B, nk, kv_block, KV, dh)
+    vs = vs.reshape(B, nk, kv_block, KV, dh)
+    qpos = qpos.reshape(B, nq, q_block)
+    kpos = kpos.reshape(B, nk, kv_block)
+
+    def q_step(_, qi):
+        qb, qp = qi  # [B, qb, KV, G, dh], [B, qb]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb, kp = ki  # [B, kb, KV, dh], [B, kb]
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((B, 1, 1, q_block, kv_block), bool)
+            if causal:
+                mask &= (qp[:, None, None, :, None]
+                         >= kp[:, None, None, None, :])
+            if window > 0:
+                mask &= (qp[:, None, None, :, None]
+                         - kp[:, None, None, None, :]) < window
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard all -inf rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            pexp = jnp.exp(s - m_safe[..., None])
+            pexp = jnp.where(mask, pexp, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l_new = l * corr + jnp.sum(pexp, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", pexp.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), kpos.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)  # [B, KV, G, qb, dh]
+
+    _, outs = jax.lax.scan(
+        q_step, None, (qs.swapaxes(0, 1), qpos.swapaxes(0, 1)))
+    # outs: [nq, B, KV, G, qb, dh] -> [B, S, H, dh]
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, dh)
+    return outs[:, :S]
+
+
+def _np_attention_fwd(q, k, v, causal, window):
+    """Pure-numpy GQA attention (callbacks must not re-enter JAX).
+
+    q [B,S,H,dh]; k/v [B,T,KV,dh].  Returns (out [B,S,H,dh], p [B,H,S,T])
+    in float32 (p is reused by the backward host fn).
+    """
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k, np.float32)
+    v = np.asarray(v, np.float32)
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    ke = np.repeat(k, G, axis=2)
+    ve = np.repeat(v, G, axis=2)
+    s = np.einsum("bshd,bthd->bhst", q, ke) * dh ** -0.5
+    qpos = np.arange(S)[:, None]
+    kpos = np.arange(T)[None, :]
+    mask = np.ones((S, T), bool)
+    if causal:
+        mask &= qpos + (T - S) >= kpos      # right-aligned when T > S
+    if window > 0:
+        mask &= (qpos + (T - S) - kpos) < window
+    s = np.where(mask[None, None], s, -np.inf)
+    m = s.max(axis=-1, keepdims=True)
+    m = np.where(np.isfinite(m), m, 0.0)
+    p = np.exp(s - m)
+    p = np.where(mask[None, None], p, 0.0)
+    p = p / np.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = np.einsum("bhst,bthd->bshd", p, ve)
+    return out, p
+
+
+def _naive_attention_host(causal, window, q, k, v):
+    """Host-side oracle the accounting callback executes (numpy in/out)."""
+    out, _ = _np_attention_fwd(q, k, v, causal, window)
+    return out.astype(np.asarray(q).dtype)
+
+
+def _attention_bwd_host(causal, window, q, k, v, g):
+    """Pure-numpy attention backward: (q,k,v,do) -> (dq,dk,dv)."""
+    qf = np.asarray(q, np.float32)
+    kf = np.asarray(k, np.float32)
+    vf = np.asarray(v, np.float32)
+    gf = np.asarray(g, np.float32)
+    B, S, H, dh = qf.shape
+    KV = kf.shape[2]
+    G = H // KV
+    _, p = _np_attention_fwd(qf, kf, vf, causal, window)   # [B,H,S,T]
+    ve = np.repeat(vf, G, axis=2)
+    dv_e = np.einsum("bhst,bshd->bthd", p, gf)             # [B,T,H,dh]
+    dp = np.einsum("bshd,bthd->bhst", gf, ve)
+    ds = p * (dp - np.sum(dp * p, axis=-1, keepdims=True))
+    scale = dh ** -0.5
+    ke = np.repeat(kf, G, axis=2)
+    dq = np.einsum("bhst,bthd->bshd", ds, ke) * scale
+    dk_e = np.einsum("bhst,bshd->bthd", ds, qf) * scale
+    # GQA: sum grads over the query heads sharing each kv head
+    dk = dk_e.reshape(B, -1, KV, G, dh).sum(axis=3)
+    dv = dv_e.reshape(B, -1, KV, G, dh).sum(axis=3)
+    return (dq.astype(np.asarray(q).dtype),
+            dk.astype(np.asarray(k).dtype),
+            dv.astype(np.asarray(v).dtype))
+
+
+def fused_attention_acct(q, k, v, *, causal: bool, window: int = 0, mesh):
+    """Flash attention with fused-kernel HBM *accounting* (dry-run path).
+
+    The whole attention runs inside one ``shard_map``'d ``pure_callback``:
+    the compiled HLO then shows a single custom-call per (layer, shard) whose
+    operands/results are exactly q, k, v -> out — the HBM traffic of the
+    Pallas kernel in kernels/flash.py.  On TPU the same call site dispatches
+    the real kernel; the callback body computes the identical oracle, so
+    this path also *executes* correctly (tests).
+
+    GQA/TP layout (mirrors how flash kernels are actually sharded):
+      - batch over ('pod','data') when divisible;
+      - KV % model == 0      -> shard q-heads and kv-heads together;
+      - H % model == 0       -> shard q-heads, slice the (replicated) kv
+                                heads each shard actually needs;
+      - otherwise            -> heads replicated (batch-only sharding).
+
+    Differentiable: bwd is a second shard_map'd callback taking
+    (q, k, v, do) -> (dq, dk, dv) — the flash backward interface.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    bsz = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes \
+        else 1
+    bspec = (batch_axes if len(batch_axes) > 1 else
+             (batch_axes[0] if batch_axes else None)) \
+        if batch_axes and B % bsz == 0 else None
+    m = mesh.shape["model"] if "model" in names else 1
+
+    shard_kv = m > 1 and KV % m == 0
+    shard_q = m > 1 and not shard_kv and H % m == 0 and \
+        (G % (H // m) == 0 or (H // m) % G == 0)
+    h_spec = "model" if (shard_kv or shard_q) else None
+    kv_spec = "model" if shard_kv else None
+    h_local = H // m if h_spec else H
+
+    def body(q_s, k_s, v_s):
+        if shard_q:
+            # slice the kv heads this q-head shard needs (kv replicated)
+            idx = jax.lax.axis_index("model")
+            kv_count = max(h_local // G, 1)
+            start = (idx * h_local) // G
+            k_s = jax.lax.dynamic_slice_in_dim(k_s, start, kv_count, axis=2)
+            v_s = jax.lax.dynamic_slice_in_dim(v_s, start, kv_count, axis=2)
+        out_sds = jax.ShapeDtypeStruct(q_s.shape, q_s.dtype)
+        return jax.pure_callback(
+            functools.partial(_naive_attention_host, causal, window),
+            out_sds, q_s, k_s, v_s, vmap_method="sequential")
+
+    in_specs = (P(bspec, None, h_spec, None),
+                P(bspec, None, kv_spec, None),
+                P(bspec, None, kv_spec, None))
+    out_spec = P(bspec, None, h_spec, None)
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_spec)(q, k, v)
+
+    def fa_fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def fa_bwd(res, g):
+        q, k, v = res
+
+        def bwd_body(q_s, k_s, v_s, g_s):
+            if shard_q:
+                idx = jax.lax.axis_index("model")
+                kv_count = max(h_local // G, 1)
+                start = (idx * h_local) // G
+                k_s = jax.lax.dynamic_slice_in_dim(k_s, start, kv_count, 2)
+                v_s = jax.lax.dynamic_slice_in_dim(v_s, start, kv_count, 2)
+
+            sds = (jax.ShapeDtypeStruct(q_s.shape, q_s.dtype),
+                   jax.ShapeDtypeStruct(k_s.shape, k_s.dtype),
+                   jax.ShapeDtypeStruct(v_s.shape, v_s.dtype))
+            dq, dk, dv = jax.pure_callback(
+                functools.partial(_attention_bwd_host, causal, window),
+                sds, q_s, k_s, v_s, g_s, vmap_method="sequential")
+            if shard_q:
+                # scatter the kv-slice grads back + sum across the q shards
+                # that share each kv head
+                idx = jax.lax.axis_index("model")
+                kv_count = max(h_local // G, 1)
+                start = (idx * h_local) // G
+                zk = jnp.zeros((q_s.shape[0], k.shape[1], KV, dh), k.dtype)
+                dk = jax.lax.dynamic_update_slice_in_dim(zk, dk, start, 2)
+                dv = jax.lax.dynamic_update_slice_in_dim(zk, dv, start, 2)
+                dk = jax.lax.psum(dk, "model")
+                dv = jax.lax.psum(dv, "model")
+            return dq, dk, dv
+
+        kv_out = P(bspec, None, kv_spec, None) if not shard_q else \
+            P(bspec, None, None, None)
+        dq, dk, dv = jax.shard_map(
+            bwd_body, mesh=mesh,
+            in_specs=in_specs + (out_spec,),
+            out_specs=(out_spec, kv_out, kv_out))(q, k, v, g)
+        return dq, dk, dv
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa(q, k, v)
+
+
+def _decode_partials_host(window, q, k, v, cache_len, offset):
+    """Host oracle for one cache shard: unnormalized flash-decoding
+    partials (acc, m, l) over the shard's [offset, offset+T_s) positions.
+    Pure numpy — callbacks must not re-enter JAX."""
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k, np.float32)
+    v = np.asarray(v, np.float32)
+    B, _, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, 1, KV, G, dh)
+    s = np.einsum("bqkgd,btkd->bkgqt", qr, k) * dh ** -0.5
+    gidx = np.asarray(offset).reshape(-1, 1) + np.arange(T)[None, :]
+    ln = np.asarray(cache_len).reshape(-1, 1)
+    valid = gidx < ln
+    if window > 0:
+        valid &= gidx >= (ln - window)
+    s = np.where(valid[:, None, None, None, :], s, -np.inf)
+    m = s.max(axis=-1)                                        # [B,KV,G,1]
+    msafe = np.where(np.isfinite(m), m, 0.0)
+    p = np.where(valid[:, None, None, None, :],
+                 np.exp(s - msafe[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = np.einsum("bkgqt,btkd->bqkgd", p, v)
+    return (acc.astype(np.float32), m.astype(np.float32),
+            l.astype(np.float32))
+
+
+def fused_decode_attention_acct(q, k_cache, v_cache, cache_len, *,
+                                window: int, mesh):
+    """Flash-decoding with fused-kernel HBM accounting (dry-run path).
+
+    The cache is read once per shard inside a callback (the kernel's HBM
+    traffic); sequence-sharded caches combine per-shard (acc, m, l) partials
+    with the standard logsumexp merge across the 'model' axis — exactly the
+    flash-decoding split-K schedule, with the tiny combine visible as the
+    only collective.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, _, H, dh = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    bsz = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes \
+        else 1
+    bspec = (batch_axes if len(batch_axes) > 1 else
+             (batch_axes[0] if batch_axes else None)) \
+        if batch_axes and B % bsz == 0 else None
+    m_sz = mesh.shape["model"] if "model" in names else 1
+    shard_kv = m_sz > 1 and KV % m_sz == 0
+    shard_seq = m_sz > 1 and not shard_kv and T % m_sz == 0
+    t_local = T // m_sz if shard_seq else T
+
+    def body(q_s, k_s, v_s, len_s):
+        off = (jax.lax.axis_index("model") * t_local) if shard_seq \
+            else jnp.int32(0)
+        off = jnp.broadcast_to(off, (len_s.shape[0],))
+        kv_l = k_s.shape[2]
+        g_l = q_s.shape[2] // kv_l
+        sds = (jax.ShapeDtypeStruct((q_s.shape[0], 1, kv_l, g_l, dh),
+                                    jnp.float32),
+               jax.ShapeDtypeStruct((q_s.shape[0], kv_l, g_l, 1),
+                                    jnp.float32),
+               jax.ShapeDtypeStruct((q_s.shape[0], kv_l, g_l, 1),
+                                    jnp.float32))
+        acc, m, l = jax.pure_callback(
+            functools.partial(_decode_partials_host, window), sds,
+            q_s, k_s, v_s, len_s, off, vmap_method="sequential")
+        if shard_seq:
+            m_glob = jax.lax.pmax(m, "model")
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_glob, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l = jax.lax.psum(l * corr, "model")
+            acc = jax.lax.psum(
+                acc * corr[:, None, :, :, :].reshape(
+                    acc.shape[0], 1, kv_l, g_l, 1), "model")
+        out = acc / jnp.maximum(l[:, None, :, :, :], 1e-30)  # [B,1,kv,g,dh]
+        return out.reshape(q_s.shape[0], 1, kv_l * g_l, dh).astype(
+            q_s.dtype)
+
+    h_spec = "model" if shard_kv else None
+    seq_spec = "model" if shard_seq else None
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, h_spec, None),
+                  P(bspec, seq_spec, h_spec, None),
+                  P(bspec, seq_spec, h_spec, None),
+                  P(bspec)),
+        out_specs=P(bspec, None, h_spec, None),
+        check_vma=False)(q, k_cache, v_cache,
+                         jnp.broadcast_to(jnp.reshape(cache_len, (-1,)),
+                                          (B,)))
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-step attention against a cache.
+
+    q: [B, 1, H, dh]; caches: [B, T, KV, dh]; cache_len: [] or [B] valid
+    length (entries >= cache_len are masked).  Direct einsum — the score
+    tensor is [B, KV, G, 1, T], small enough at decode time.  Under
+    ``flash_attention_mode`` dispatches the flash-decoding accounting path.
+    """
+    from ..parallel import sharding as _shctx
+    if _shctx.flash_mesh() is not None:
+        return fused_decode_attention_acct(
+            q, k_cache, v_cache, cache_len, window=window,
+            mesh=_shctx.flash_mesh())
+    B, _, H, dh = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, 1, KV, G, dh)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    idx = jnp.arange(T)
+    valid = idx[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if window > 0:
+        valid &= idx[None, :] >= (jnp.reshape(cache_len, (-1, 1)) - window)
+    s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, d_ff: Optional[int] = None,
+             layers: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+
+    def mk(k, i, o):
+        if layers is None:
+            return dense_init(k, i, o, dt)
+        subs = jax.random.split(k, layers)
+        return jax.vmap(lambda kk: dense_init(kk, i, o, dt))(subs)
+
+    lead = ("layers",) if layers is not None else ()
+    if cfg.act == "silu":  # SwiGLU
+        p = {"wi_gate": mk(ks[0], d, f), "wi_up": mk(ks[1], d, f),
+             "wo": mk(ks[2], f, d)}
+        ax = {"wi_gate": lead + ("embed", "ffn"),
+              "wi_up": lead + ("embed", "ffn"), "wo": lead + ("ffn", "embed")}
+    else:
+        p = {"wi": mk(ks[0], d, f), "wo": mk(ks[2], f, d)}
+        ax = {"wi": lead + ("embed", "ffn"), "wo": lead + ("ffn", "embed")}
+    return p, ax
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.act == "silu":
+        g = x @ p["wi_gate"].astype(x.dtype)
+        u = x @ p["wi_up"].astype(x.dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embeddings(cfg, key):
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"tok": embed_init(k1, cfg.vocab_size, cfg.d_model, dt)}
+    ax = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dt,
+                                  scale=cfg.d_model ** -0.5)
+        ax["unembed"] = ("embed", "vocab")
+    return p, ax
+
+
+def embed_tokens(p, tokens, dtype):
+    return p["tok"].astype(dtype)[tokens]
+
+
+def unembed(cfg, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["tok"].astype(x.dtype).T
+    return x @ p["unembed"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in float32.  logits [..., V], labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(cfg, x, embed_params, labels, mask=None,
+                          chunk: int = 256):
+    """CE from final *hidden states* with sequence-chunked unembedding.
+
+    The full [B, S, V] logits tensor dominates training-step temp memory at
+    production vocab sizes (e.g. kimi-k2: 1M tokens x 163840 vocab in f32 =
+    ~640 GB global).  Instead the unembed matmul + logsumexp run per sequence
+    chunk under ``jax.checkpoint`` — backward recomputes each chunk's logits,
+    so peak live logits shrink by S/chunk at the cost of one extra unembed
+    matmul (<2% of step FLOPs for L >= 24).
+
+    x: [B, S, D] (already final-normed); labels: [B, S]; mask: [B, S] or
+    None.  Returns mean NLL (masked mean when mask given).
+    """
+    b, s, d = x.shape
+    if s <= chunk or s % chunk != 0:
+        logits = unembed(cfg, embed_params, x)
+        return softmax_cross_entropy(logits, labels, mask)
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)         # [n, B, c, D]
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    ms = (mask.reshape(b, n, chunk).swapaxes(0, 1) if mask is not None
+          else jnp.ones((n, b, chunk), jnp.float32))
+
+    @jax.checkpoint
+    def one(carry, inp):
+        xi, li, mi = inp
+        logits = unembed(cfg, embed_params, xi).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mi
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mi)), None
+
+    (tot, cnt), _ = jax.lax.scan(one, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,19 @@
+"""Model factory: ModelConfig -> model instance."""
+
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from .encdec import EncDecModel
+from .hybrid import HybridLM
+from .lm import DecoderLM
+from .xlstm_model import XLSTMModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.n_enc_layers > 0:
+        return EncDecModel(cfg)
+    if cfg.family == "hybrid" or cfg.attn_period > 1:
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,449 @@
+"""State-space & recurrent sequence mixers: Mamba-2 (SSD) and xLSTM blocks.
+
+TPU adaptation (DESIGN.md §3): the GPU reference implementations use fused
+selective-scan CUDA kernels; here the recurrences are *chunked* — quadratic
+attention-like matmuls within a chunk (MXU-friendly) plus a `lax.scan` over
+chunks carrying the recurrent state.  Memory stays O(chunk²·H) instead of
+O(S·H·N·P), and the chunk matmuls are what the MXU wants.
+
+  * ``mamba_forward``  — Mamba-2 / SSD with scalar-per-head decay.
+  * ``mlstm_forward``  — xLSTM matrix-memory cell, chunked, with the
+    max-stabilized exponential gating of the xLSTM paper.
+  * ``slstm_forward``  — xLSTM scalar cell with hidden-state recurrence
+    (inherently sequential -> `lax.scan` over time).
+
+Decode steps carry tiny O(1) states, which is exactly why these families run
+the ``long_500k`` cell (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    d_in = cfg.d_model * cfg.mamba_expand
+    n_heads = d_in // cfg.mamba_headdim
+    return d_in, cfg.mamba_d_state, n_heads, cfg.mamba_headdim
+
+
+def init_mamba(cfg, key, layers: Optional[int] = None):
+    d = cfg.d_model
+    d_in, n, h, _p = mamba_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+
+    def mk(k, i, o):
+        if layers is None:
+            return dense_init(k, i, o, dt)
+        return jax.vmap(lambda kk: dense_init(kk, i, o, dt))(
+            jax.random.split(k, layers))
+
+    def vec(val, shape):
+        full = (layers,) + shape if layers is not None else shape
+        return jnp.full(full, val, jnp.float32)
+
+    p = {
+        "in_x": mk(ks[0], d, d_in), "in_z": mk(ks[1], d, d_in),
+        "in_B": mk(ks[2], d, n), "in_C": mk(ks[3], d, n),
+        "in_dt": mk(ks[4], d, h),
+        "conv_x": vec(0.0, (cfg.mamba_d_conv, d_in)) + 1.0 / cfg.mamba_d_conv,
+        "A_log": vec(0.0, (h,)),          # A = -exp(A_log) = -1
+        "D": vec(1.0, (h,)),
+        "dt_bias": vec(0.0, (h,)),
+        "norm": vec(1.0, (d_in,)),
+        "out": mk(ks[5], d_in, d),
+    }
+    lead = ("layers",) if layers is not None else ()
+    ax = {
+        "in_x": lead + ("embed", "ffn"), "in_z": lead + ("embed", "ffn"),
+        "in_B": lead + ("embed", "state"), "in_C": lead + ("embed", "state"),
+        "in_dt": lead + ("embed", "heads"),
+        "conv_x": lead + ("conv", "ffn"),
+        "A_log": lead + ("heads",), "D": lead + ("heads",),
+        "dt_bias": lead + ("heads",),
+        "norm": lead + ("ffn",),
+        "out": lead + ("ffn", "embed"),
+    }
+    return p, ax
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along time.  x: [B,S,C]; w: [K,C].
+
+    ``state`` = last K-1 inputs from the previous segment ([B,K-1,C]) for
+    decode; returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+def mamba_forward(cfg, p, x, chunk: int = 256):
+    """x: [B, S, D] -> [B, S, D] (full-sequence / prefill path)."""
+    b, s, d = x.shape
+    d_in, n, h, pd = mamba_dims(cfg)
+    xb = x @ p["in_x"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    xb, _ = _causal_conv(xb, p["conv_x"])
+    xb = jax.nn.silu(xb)
+    bc = (x @ p["in_B"].astype(x.dtype)).astype(jnp.float32)     # [B,S,N]
+    cc = (x @ p["in_C"].astype(x.dtype)).astype(jnp.float32)     # [B,S,N]
+    dt_r = (x @ p["in_dt"].astype(x.dtype)).astype(jnp.float32)  # [B,S,H]
+    dt = jax.nn.softplus(dt_r + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                                      # [H]
+    log_decay = dt * a                                            # [B,S,H] <=0
+
+    xh = xb.reshape(b, s, h, pd).astype(jnp.float32)
+    xbar = xh * dt[..., None]                                     # input scale
+
+    c_len = min(chunk, s)
+    nc = -(-s // c_len)
+    pad = nc * c_len - s
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+
+    xbar = xbar.reshape(b, nc, c_len, h, pd)
+    bc = bc.reshape(b, nc, c_len, n)
+    cc = cc.reshape(b, nc, c_len, n)
+    la = log_decay.reshape(b, nc, c_len, h)
+
+    def chunk_step(hstate, inp):
+        xc, bcc, ccc, lac = inp       # [B,L,H,P], [B,L,N], [B,L,N], [B,L,H]
+        cum = jnp.cumsum(lac, axis=1)                    # [B,L,H] inclusive
+        # intra-chunk: attn[b,h,i,j] = (C_i . B_j) exp(cum_i - cum_j), j <= i
+        scores = jnp.einsum("bin,bjn->bij", ccc, bcc)    # [B,L,L]
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # [B,L(i),L(j),H]
+        li = jnp.arange(xc.shape[1])
+        causal = li[:, None] >= li[None, :]
+        attn = jnp.where(causal[None, :, :, None],
+                         jnp.exp(decay) * scores[..., None], 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", attn, xc)
+        # inbound state contribution: C_i . h_in * exp(cum_i)
+        y = y + jnp.einsum("bin,bhnp,bih->bihp", ccc, hstate, jnp.exp(cum))
+        # outbound state
+        last = cum[:, -1:, :]                             # [B,1,H]
+        w = jnp.exp(last - cum)                           # [B,L,H]
+        h_new = jnp.einsum("bjn,bjhp,bjh->bhnp", bcc, xc, w) \
+            + jnp.exp(last[:, 0, :])[:, :, None, None] * hstate
+        return h_new, y
+
+    h0 = jnp.zeros((b, h, n, pd), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0,
+                         (xbar.swapaxes(0, 1), bc.swapaxes(0, 1),
+                          cc.swapaxes(0, 1), la.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, nc * c_len, h, pd)[:, :s]
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    # gated RMSNorm then out-projection (Mamba-2 style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm"]
+    return (yf.astype(x.dtype)) @ p["out"].astype(x.dtype)
+
+
+def mamba_init_state(cfg, batch, dtype=jnp.float32):
+    d_in, n, h, pd = mamba_dims(cfg)
+    return {"ssm": jnp.zeros((batch, h, n, pd), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype)}
+
+
+def mamba_decode_step(cfg, p, x, state):
+    """x: [B, 1, D]; state from :func:`mamba_init_state`."""
+    b, _, d = x.shape
+    d_in, n, h, pd = mamba_dims(cfg)
+    xb = x @ p["in_x"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    xb, conv_state = _causal_conv(xb, p["conv_x"], state["conv"])
+    xb = jax.nn.silu(xb)
+    bc = (x @ p["in_B"].astype(x.dtype)).astype(jnp.float32)[:, 0]   # [B,N]
+    cc = (x @ p["in_C"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+    dt_r = (x @ p["in_dt"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(dt_r + p["dt_bias"])                        # [B,H]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                           # [B,H]
+    xh = xb.reshape(b, h, pd).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    hs = state["ssm"] * a[:, :, None, None] \
+        + jnp.einsum("bn,bhp->bhnp", bc, xbar)
+    y = jnp.einsum("bn,bhnp->bhp", cc, hs) + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_in)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm"]
+    out = yf.astype(x.dtype) @ p["out"].astype(x.dtype)
+    return out, {"ssm": hs, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunked) and sLSTM (scalar, sequential)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg, key, layers: Optional[int] = None):
+    d, qd, h = cfg.d_model, cfg.q_dim, cfg.n_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+
+    def mk(k, i, o):
+        if layers is None:
+            return dense_init(k, i, o, dt)
+        return jax.vmap(lambda kk: dense_init(kk, i, o, dt))(
+            jax.random.split(k, layers))
+
+    def vec(val, *shape):
+        full = (layers,) + shape if layers is not None else shape
+        return jnp.full(full, val, jnp.float32)
+
+    p = {"wq": mk(ks[0], d, qd), "wk": mk(ks[1], d, qd),
+         "wv": mk(ks[2], d, qd),
+         "w_i": mk(ks[3], d, h), "w_f": mk(ks[4], d, h),
+         "b_i": vec(0.0, h), "b_f": vec(3.0, h),
+         "w_o": mk(ks[5], d, qd),     # sigmoid output gate (vector)
+         "wout": mk(ks[6], qd, d)}
+    lead = ("layers",) if layers is not None else ()
+    ax = {"wq": lead + ("embed", "heads"), "wk": lead + ("embed", "heads"),
+          "wv": lead + ("embed", "heads"),
+          "w_i": lead + ("embed", "head_vec"),
+          "w_f": lead + ("embed", "head_vec"),
+          "b_i": lead + ("head_vec",), "b_f": lead + ("head_vec",),
+          "w_o": lead + ("embed", "heads"), "wout": lead + ("heads", "embed")}
+    return p, ax
+
+
+def mlstm_forward(cfg, p, x, chunk: int = 256):
+    """Chunked matrix-LSTM.  x: [B, S, D] -> [B, S, D].
+
+    Recurrence (per head, stabilizer m):
+        m_t = max(log f_t + m_{t-1}, i_t)
+        C_t = e^{log f_t + m_{t-1} - m_t} C_{t-1} + e^{i_t - m_t} k_t v_t^T
+        n_t = (same) n_{t-1} + e^{i_t - m_t} k_t
+        y_t = (q_t C_t) / max(|q_t n_t|, e^{-m_t})
+    Chunked: within-chunk pairs via masked matmul, cross-chunk via scan.
+    """
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, h, dh) * dh ** -0.5
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, h, dh)
+    i_raw = (x @ p["w_i"].astype(x.dtype)).astype(jnp.float32) + p["b_i"]
+    f_raw = (x @ p["w_f"].astype(x.dtype)).astype(jnp.float32) + p["b_f"]
+    log_f = jax.nn.log_sigmoid(f_raw)                      # [B,S,H]
+    o_gate = jax.nn.sigmoid(
+        (x @ p["w_o"].astype(x.dtype)).astype(jnp.float32))
+
+    c_len = min(chunk, s)
+    nc = -(-s // c_len)
+    pad = nc * c_len - s
+    if pad:
+        def pz(t):
+            return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = pz(q), pz(k), pz(v)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e9)
+        log_f = pz(log_f)
+
+    qc = q.reshape(b, nc, c_len, h, dh).astype(jnp.float32)
+    kc = k.reshape(b, nc, c_len, h, dh).astype(jnp.float32)
+    vc = v.reshape(b, nc, c_len, h, dh).astype(jnp.float32)
+    ic = i_raw.reshape(b, nc, c_len, h)
+    fc = log_f.reshape(b, nc, c_len, h)
+
+    def chunk_step(carry, inp):
+        cs, ns, ms = carry            # [B,H,dh,dh], [B,H,dh], [B,H]
+        qb, kb, vb, ib, fb = inp
+        cumf = jnp.cumsum(fb, axis=1)                     # [B,L,H]
+        # local log-weights of source j at target i: cumf_i - cumf_j + i_j
+        li = jnp.arange(qb.shape[1])
+        causal = li[:, None] >= li[None, :]
+        lw = (cumf[:, :, None, :] - cumf[:, None, :, :]
+              + ib[:, None, :, :])                        # [B,i,j,H]
+        lw = jnp.where(causal[None, :, :, None], lw, -jnp.inf)
+        # inbound-state log-weight at target i: cumf_i + m_state
+        lw_state = cumf + ms[:, None, :]                  # [B,L,H]
+        m_loc = jnp.maximum(jnp.max(lw, axis=2), lw_state)  # [B,L,H]
+        m_loc = jnp.maximum(m_loc, -1e30)
+        w = jnp.exp(lw - m_loc[:, :, None, :])
+        w = jnp.where(causal[None, :, :, None], w, 0.0)   # [B,i,j,H]
+        scores = jnp.einsum("bihd,bjhd->bijh", qb, kb) * w
+        y = jnp.einsum("bijh,bjhd->bihd", scores, vb)
+        denom = jnp.einsum("bijh,bjhd,bihd->bih", w, kb, qb)
+        w_state = jnp.exp(lw_state - m_loc)               # [B,L,H]
+        y = y + jnp.einsum("bihd,bhde,bih->bihe", qb, cs, w_state)
+        denom = denom + jnp.einsum("bihd,bhd,bih->bih", qb, ns, w_state)
+        y = y / jnp.maximum(jnp.abs(denom), jnp.exp(-m_loc))[..., None]
+        # ---- state update to end of chunk ----
+        last = cumf[:, -1:, :]                            # [B,1,H]
+        m_new = jnp.maximum(last[:, 0] + ms,
+                            jnp.max(last - cumf + ib, axis=1))
+        wk = jnp.exp(last - cumf + ib - m_new[:, None, :])  # [B,L,H]
+        decay = jnp.exp(last[:, 0] + ms - m_new)            # [B,H]
+        c_new = decay[:, :, None, None] * cs \
+            + jnp.einsum("bjh,bjhd,bjhe->bhde", wk, kb, vb)
+        n_new = decay[:, :, None] * ns \
+            + jnp.einsum("bjh,bjhd->bhd", wk, kb)
+        return (c_new, n_new, m_new), y
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, (c0, n0, m0),
+                         (qc.swapaxes(0, 1), kc.swapaxes(0, 1),
+                          vc.swapaxes(0, 1), ic.swapaxes(0, 1),
+                          fc.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, nc * c_len, h, dh)[:, :s]
+    y = y.reshape(b, s, h * dh) * o_gate
+    return y.astype(x.dtype) @ p["wout"].astype(x.dtype)
+
+
+def mlstm_init_state(cfg, batch):
+    h, dh = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_decode_step(cfg, p, x, state):
+    """x: [B, 1, D] single-token step; O(1) state."""
+    b, _, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32) \
+        * dh ** -0.5
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    i_raw = (x @ p["w_i"].astype(x.dtype)).astype(jnp.float32)[:, 0] + p["b_i"]
+    f_raw = (x @ p["w_f"].astype(x.dtype)).astype(jnp.float32)[:, 0] + p["b_f"]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    o_gate = jax.nn.sigmoid(
+        (x @ p["w_o"].astype(x.dtype)).astype(jnp.float32))[:, 0]
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    fg = jnp.exp(log_f + state["m"] - m_new)
+    ig = jnp.exp(i_raw - m_new)
+    c_new = fg[:, :, None, None] * state["C"] \
+        + ig[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = fg[:, :, None] * state["n"] + ig[:, :, None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = (y.reshape(b, 1, h * dh) * o_gate[:, None, :]).astype(x.dtype)
+    out = y @ p["wout"].astype(x.dtype)
+    return out, {"C": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar cell, hidden-state recurrence -> sequential scan)
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg, key, layers: Optional[int] = None):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+
+    def mk(k, i, o):
+        if layers is None:
+            return dense_init(k, i, o, dt)
+        return jax.vmap(lambda kk: dense_init(kk, i, o, dt))(
+            jax.random.split(k, layers))
+
+    def rec(k):
+        # block-diagonal recurrent weights: per head [dh, dh], 4 gates
+        def one(kk):
+            return jax.vmap(lambda k2: dense_init(k2, dh, dh, dt) * 0.5)(
+                jax.random.split(kk, h * 4)).reshape(4, h, dh, dh)
+        if layers is None:
+            return one(k)
+        return jax.vmap(one)(jax.random.split(k, layers))
+
+    def vec(val, *shape):
+        full = (layers,) + shape if layers is not None else shape
+        return jnp.full(full, val, jnp.float32)
+
+    p = {"wx": mk(ks[0], d, 4 * d),   # z, i, f, o pre-activations from x
+         "r": rec(ks[1]),
+         "b": vec(0.0, 4, d),
+         "wout": mk(ks[2], d, d)}
+    lead = ("layers",) if layers is not None else ()
+    ax = {"wx": lead + ("embed", "gates"),
+          "r": lead + ("gate4", "head_vec", "hd1", "hd2"),
+          "b": lead + ("gate4", "embed"),
+          "wout": lead + ("embed", "embed2")}
+    return p, ax
+
+
+def slstm_forward(cfg, p, x):
+    """Sequential sLSTM.  x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xg = (x @ p["wx"].astype(x.dtype)).astype(jnp.float32)
+    xg = xg.reshape(b, s, 4, d) + p["b"]
+
+    def step(carry, xt):
+        hs, c, n, m = carry            # [B,D], [B,D], [B,D], [B,D]
+        hh = hs.reshape(b, h, dh)
+        rg = jnp.einsum("ghij,bhj->gbhi", p["r"].astype(jnp.float32), hh)
+        rg = rg.reshape(4, b, d)
+        z = jnp.tanh(xt[:, 0] + rg[0])
+        i_log = xt[:, 1] + rg[1]
+        f_log = jax.nn.log_sigmoid(xt[:, 2] + rg[2])
+        o = jax.nn.sigmoid(xt[:, 3] + rg[3])
+        m_new = jnp.maximum(f_log + m, i_log)
+        ig = jnp.exp(i_log - m_new)
+        fg = jnp.exp(f_log + m - m_new)
+        c_new = fg * c + ig * z
+        n_new = jnp.maximum(fg * n + ig, 1.0)
+        h_new = o * c_new / n_new
+        return (h_new, c_new, n_new, m_new), h_new
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    (_, _, _, _), ys = jax.lax.scan(step, (zeros, zeros, zeros, m0),
+                                    xg.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    return y @ p["wout"].astype(x.dtype)
+
+
+def slstm_init_state(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e30,
+                                                  jnp.float32)}
+
+
+def slstm_decode_step(cfg, p, x, state):
+    """x: [B, 1, D]."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xg = (x @ p["wx"].astype(x.dtype)).astype(jnp.float32)
+    xg = (xg.reshape(b, 4, d) + p["b"])
+    hh = state["h"].reshape(b, h, dh)
+    rg = jnp.einsum("ghij,bhj->gbhi", p["r"].astype(jnp.float32), hh)
+    rg = rg.reshape(4, b, d)
+    z = jnp.tanh(xg[:, 0] + rg[0])
+    i_log = xg[:, 1] + rg[1]
+    f_log = jax.nn.log_sigmoid(xg[:, 2] + rg[2])
+    o = jax.nn.sigmoid(xg[:, 3] + rg[3])
+    m_new = jnp.maximum(f_log + state["m"], i_log)
+    ig = jnp.exp(i_log - m_new)
+    fg = jnp.exp(f_log + state["m"] - m_new)
+    c_new = fg * state["c"] + ig * z
+    n_new = jnp.maximum(fg * state["n"] + ig, 1.0)
+    h_new = o * c_new / n_new
+    out = h_new[:, None, :].astype(x.dtype) @ p["wout"].astype(x.dtype)
+    return out, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}

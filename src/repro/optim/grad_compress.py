@@ -1,0 +1,74 @@
+"""Error-feedback int8 gradient compression (beyond-paper distributed trick).
+
+The paper's thesis — bit-width as a first-class resource knob — applies to
+the *gradient* traffic of data-parallel training just as it does to serving
+weights.  This wrapper quantizes gradients to int8 (per-leaf absmax scaling)
+before the cross-pod all-reduce and keeps the quantization residual locally
+("error feedback", Seide et al. 2014 / Karimireddy et al. 2019), which
+provably preserves convergence for smooth objectives.
+
+Used by the training loop when ``grad_compression='int8_ef'``: the pod-axis
+all-reduce then moves 4x fewer bytes (bf16->int8 halves, f32->int8 quarters),
+directly shrinking the collective roofline term of the multi-pod mesh.
+
+Implementation note: the cross-pod reduction is an int8 all-gather + local
+weighted sum (per-pod scales gathered alongside) inside ``shard_map`` over
+the 'pod' axis — 1 wire byte per element, and each pod's codes are weighted
+by its *own* scale (an int32 psum with averaged scales would be both 4x the
+bytes and wrong for heterogeneous scales).  Without an axis name it degrades
+to pure quantize+dequantize with error feedback (single-pod tests cover the
+numerics).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g: jax.Array, err: jax.Array,
+                        axis_name: Optional[str] = None):
+    """Quantize (g + err) to int8, (optionally) all-reduce in low precision,
+    dequantize; returns (g_hat, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    q, scale = _quantize_leaf(gf)
+    if axis_name is not None:
+        qs = jax.lax.all_gather(q, axis_name)            # [P, ...] int8
+        ss = jax.lax.all_gather(scale, axis_name)        # [P]
+        n = qs.shape[0]
+        g_hat = jnp.tensordot(ss, qs.astype(jnp.float32),
+                              axes=(0, 0)) / n           # mean of pod grads
+    else:
+        g_hat = q.astype(jnp.float32) * scale
+    new_err = gf - (q.astype(jnp.float32) * scale)
+    return g_hat.astype(g.dtype), new_err
+
+
+def compress_tree(grads, err_state, axis_name: Optional[str] = None):
+    """Apply error-feedback compression to every leaf; returns
+    (compressed_grads, new_err_state)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [compress_decompress(g, e, axis_name)
+           for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compression_ratio(dtype=jnp.float32) -> float:
+    """Wire-byte reduction vs uncompressed all-reduce."""
+    return jnp.dtype(dtype).itemsize / 1.0  # int8 = 1 byte

@@ -1,0 +1,173 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD/pjit).
+
+Every model exposes a pytree of logical axis names mirroring its params
+(see models/*.logical_axes) and its cache.  This module maps those to
+``NamedSharding`` for a concrete mesh, with:
+
+  * per-arch rule overrides (``ModelConfig.sharding_overrides`` is not a
+    config field — overrides are passed explicitly to keep configs data-only);
+  * a divisibility guard: a dim whose size does not divide the mapped mesh
+    axes is replicated instead (e.g. granite's kv=1 head, jamba's 16 experts
+    on a 16-way axis are fine, qwen2's 14 q-heads are not and fall back);
+  * shape-dependent overrides (long_500k re-maps ``cache_seq`` to 'data').
+
+Default physical mapping (DESIGN.md §5):
+
+  batch       -> ('pod', 'data')     activations / cache batch
+  heads/kv/ffn/vocab/experts -> 'model'   (tensor / expert parallelism)
+  embed       -> 'data' iff cfg.fsdp (ZeRO-3-style weight sharding)
+  cache_seq   -> None (decode_32k) or 'data' (long_500k)
+  everything else -> replicated
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalRules = Dict[str, Any]  # logical name -> mesh axis | tuple | None
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (Megatron-style sequence parallelism)
+# ---------------------------------------------------------------------------
+# When set, models constrain the [B, S, D] residual stream at every layer
+# boundary to this PartitionSpec — typically P(('pod','data'), 'model'),
+# which shards the sequence axis over the TP group between attention/MLP
+# blocks.  GSPMD inserts the all-gather before attention and the
+# reduce-scatter after, and the activations *saved for backward* shrink by
+# the TP degree.  This is what lets the >=200B configs fit (DESIGN.md §5).
+
+_ACTIVATION_SPEC: Optional[P] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(spec: Optional[P]):
+    """Trace-time context: models constrain per-layer activations to spec."""
+    global _ACTIVATION_SPEC
+    prev = _ACTIVATION_SPEC
+    _ACTIVATION_SPEC = spec
+    try:
+        yield
+    finally:
+        _ACTIVATION_SPEC = prev
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """Apply the ambient activation spec (no-op outside the context or when
+    the sharded dims do not divide)."""
+    if _ACTIVATION_SPEC is None or x.ndim < 2:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACTIVATION_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# Fused-attention (flash) mode
+# ---------------------------------------------------------------------------
+# When set to a Mesh, models route long-sequence attention through the
+# fused-kernel accounting path (models/layers.fused_attention_acct): the
+# whole online-softmax recurrence runs inside one shard_map'd callback, so
+# the compiled HLO carries exactly the flash-kernel HBM interface (q, k, v
+# -> out per shard) instead of the blockwise scan's score-block traffic.
+# On TPU the same call site dispatches kernels/flash.py (pl.pallas_call).
+
+_FLASH_MESH = None
+
+
+@contextlib.contextmanager
+def flash_attention_mode(mesh):
+    global _FLASH_MESH
+    prev = _FLASH_MESH
+    _FLASH_MESH = mesh
+    try:
+        yield
+    finally:
+        _FLASH_MESH = prev
+
+
+def flash_mesh():
+    return _FLASH_MESH
+
+
+def default_rules(cfg, *, long_context: bool = False) -> LogicalRules:
+    rules: LogicalRules = {
+        "batch": ("pod", "data"),
+        "heads": "model",
+        "kv": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "gates": "model",
+        "cache_seq": "data" if long_context else None,
+        "embed": "data" if cfg.fsdp else None,
+    }
+    return rules
+
+
+def _physical_axes(rule, mesh: Mesh):
+    """Normalize a rule entry to a tuple of axes present in the mesh."""
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        rule = (rule,)
+    return tuple(a for a in rule if a in mesh.axis_names)
+
+
+def spec_for(axes: Tuple[str, ...], shape: Tuple[int, ...], rules: LogicalRules,
+             mesh: Mesh) -> P:
+    """PartitionSpec for one leaf, with divisibility fallback."""
+    entries = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        phys = _physical_axes(rules.get(name), mesh)
+        phys = tuple(a for a in phys if a not in used)
+        size = int(np.prod([mesh.shape[a] for a in phys])) if phys else 1
+        if phys and dim % size == 0:
+            entries.append(phys if len(phys) > 1 else phys[0])
+            used.update(phys)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(axes_tree, struct_tree, rules: LogicalRules, mesh: Mesh):
+    """NamedSharding pytree matching ``struct_tree`` (arrays or SDS)."""
+    def one(axes, struct):
+        if not isinstance(axes, tuple):
+            raise TypeError(f"expected axis tuple, got {axes!r}")
+        if len(axes) != len(struct.shape):
+            raise ValueError(
+                f"axes {axes} rank != shape {struct.shape}")
+        return NamedSharding(mesh, spec_for(axes, struct.shape, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, struct_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, str) for e in x))
+
+
+def batch_shardings(batch_specs: Dict[str, Any], rules: LogicalRules,
+                    mesh: Mesh):
+    """Shard every input leaf along its leading (batch) dimension."""
+    def one(struct):
+        axes = ("batch",) + (None,) * (len(struct.shape) - 1)
+        entries = []
+        phys = _physical_axes(rules.get("batch"), mesh)
+        size = int(np.prod([mesh.shape[a] for a in phys])) if phys else 1
+        if phys and struct.shape and struct.shape[0] % size == 0:
+            entries.append(phys if len(phys) > 1 else phys[0])
+        else:
+            entries.append(None)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,6 @@
+"""Runtime layer: training loop, co-inference serving, fault tolerance."""
+
+from .fault_tolerance import (HostFailure, HostSet, StragglerMonitor,  # noqa: F401
+                              Supervisor, SupervisorReport)
+from .serve_engine import CoInferenceEngine, QosClass, ServeStats  # noqa: F401
+from .train_loop import TrainConfig, Trainer  # noqa: F401

@@ -1,0 +1,143 @@
+"""Fault-tolerance supervisor: checkpoint/restart, straggler detection,
+elastic re-mesh.
+
+At 1000+ nodes the mean time between host failures drops below the job
+length, so the training loop must survive: (i) host loss -> restore the
+newest intact checkpoint *onto a smaller mesh* and continue; (ii) stragglers
+-> detect from step-time telemetry and report/exclude; (iii) checkpoint
+corruption -> manifest sha mismatch falls back to the previous step
+(checkpoint/store.py).
+
+On this single-process container the *cluster* is simulated (a
+``HostSet`` of logical hosts with an injectable failure schedule), but the
+recovery machinery is real: checkpoints actually round-trip through disk,
+the mesh is actually rebuilt over the surviving device count, and params are
+actually re-sharded via ``device_put`` with the new NamedShardings.  The
+elastic test runs under ``--xla_force_host_platform_device_count=8`` and
+drops from an 8-device to a 4-device mesh mid-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+
+
+class HostFailure(RuntimeError):
+    def __init__(self, host_id: int):
+        super().__init__(f"host {host_id} failed")
+        self.host_id = host_id
+
+
+@dataclasses.dataclass
+class HostSet:
+    """Simulated cluster membership with failure injection."""
+
+    n_hosts: int
+    fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # step -> host_id to kill at that step
+
+    def __post_init__(self):
+        self.alive = list(range(self.n_hosts))
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at:
+            host = self.fail_at.pop(step)
+            if host in self.alive:
+                self.alive.remove(host)
+                raise HostFailure(host)
+
+    @property
+    def n_alive(self) -> int:
+        return len(self.alive)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Per-host step-duration telemetry with a relative deadline.
+
+    A host is flagged when its step time exceeds ``factor`` x the rolling
+    median of all hosts.  Real pods feed this from per-host heartbeats; the
+    tests feed synthetic durations.
+    """
+
+    factor: float = 3.0
+    window: int = 20
+
+    def __post_init__(self):
+        self._times: Dict[int, List[float]] = {}
+
+    def report(self, host_id: int, duration_s: float) -> None:
+        self._times.setdefault(host_id, []).append(duration_s)
+        self._times[host_id] = self._times[host_id][-self.window:]
+
+    def stragglers(self) -> List[int]:
+        if not self._times:
+            return []
+        meds = {h: float(np.median(t)) for h, t in self._times.items()
+                if t}
+        global_med = float(np.median(list(meds.values())))
+        if global_med <= 0:
+            return []
+        return [h for h, m in meds.items() if m > self.factor * global_med]
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int
+    restarts: int
+    failures: List[int]
+    stragglers_seen: List[int]
+    final_step: int
+    remesh_history: List[int]   # device count after each (re)build
+
+
+class Supervisor:
+    """Wraps a restartable training session.
+
+    The user supplies ``make_session(n_devices) -> session`` where a session
+    exposes ``run(steps) -> None`` (raising on failure), ``step`` (current
+    step), and persists through the shared ``CheckpointManager``.  On a
+    ``HostFailure`` the supervisor rebuilds the session over the surviving
+    hosts (elastic re-mesh + checkpoint restore happen inside
+    ``make_session``) and resumes until the target step count is reached.
+    """
+
+    def __init__(self, make_session: Callable[[int], "object"],
+                 hosts: HostSet,
+                 monitor: Optional[StragglerMonitor] = None,
+                 max_restarts: int = 8):
+        self.make_session = make_session
+        self.hosts = hosts
+        self.monitor = monitor or StragglerMonitor()
+        self.max_restarts = max_restarts
+
+    def run(self, target_steps: int) -> SupervisorReport:
+        restarts = 0
+        failures: List[int] = []
+        remesh: List[int] = []
+        session = self.make_session(self.hosts.n_alive)
+        remesh.append(self.hosts.n_alive)
+        while session.step < target_steps:
+            try:
+                session.run_until(target_steps, self.hosts)
+            except HostFailure as e:
+                failures.append(e.host_id)
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError("restart budget exhausted") from e
+                if self.hosts.n_alive == 0:
+                    raise RuntimeError("no hosts left") from e
+                # elastic re-mesh over the survivors + restore
+                session = self.make_session(self.hosts.n_alive)
+                remesh.append(self.hosts.n_alive)
+        return SupervisorReport(
+            steps_run=session.step, restarts=restarts, failures=failures,
+            stragglers_seen=self.monitor.stragglers(),
+            final_step=session.step, remesh_history=remesh)

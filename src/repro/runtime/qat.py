@@ -1,0 +1,68 @@
+"""Quantization-aware training of the agent partition.
+
+The co-inference split puts layers ``[0, split)`` on the agent; at serving
+time those weights run at bit-width b̂ (core.codesign picks it).  Training
+must therefore see the quantized forward — this module fake-quantizes the
+agent slice of the *stacked* layer parameters each step, with
+straight-through gradients (``core.quantization.qat_quantize``).
+
+Works on any of the model families: stacked leaves are identified through
+the model's ``logical_axes()`` metadata (leading axis 'layers' or 'blocks'),
+vmapped per-layer (so per-channel scales are computed per layer, not across
+the stack), and masked to the agent partition.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantization import QuantConfig, qat_quantize, quantize_dequantize
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, str) for e in x)
+
+
+def agent_mask_fn(cfg):
+    """(stacked_axis_name, length) -> boolean mask of agent-owned entries."""
+    per = getattr(cfg, "attn_period", 0) or getattr(cfg, "slstm_period", 0) \
+        or 0
+
+    def mask(name: str, length: int) -> jnp.ndarray:
+        if name == "layers":
+            return jnp.arange(length) < cfg.split_layer
+        # 'blocks': super-block granularity (split rounded down to blocks)
+        blocks = max(cfg.split_layer // max(per, 1), 0) if per else 0
+        return jnp.arange(length) < blocks
+    return mask
+
+
+def fake_quantize_agent(params: Any, axes: Any, cfg, qcfg: QuantConfig,
+                        *, ste: bool = True) -> Any:
+    """Return params with the agent partition fake-quantized.
+
+    ``axes`` is the model's logical_axes() pytree.  Stacked weight leaves
+    (leading 'layers'/'blocks' axis, >= 3 dims) are quantized per-layer and
+    masked by the co-inference split; everything else passes through.
+    """
+    mask_of = agent_mask_fn(cfg)
+    q1 = qat_quantize if ste else quantize_dequantize
+
+    def one(ax, leaf):
+        if not _is_axes(ax) or not hasattr(leaf, "ndim"):
+            return leaf
+        if leaf.ndim < 3 or ax[0] not in ("layers", "blocks"):
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1, leaf.shape[-1])   # [L, in*, out]
+        qflat = jax.vmap(lambda w: q1(w, qcfg))(flat)
+        q = qflat.reshape(leaf.shape)
+        m = mask_of(ax[0], n).reshape((n,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, q, leaf)
+
+    return jax.tree_util.tree_map(one, axes, params, is_leaf=_is_axes)

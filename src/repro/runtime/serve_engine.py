@@ -1,0 +1,268 @@
+"""Co-inference serving engine (paper §II): agent stage -> embedding
+transport -> server stage, with the joint (b̂, f, f̃) configuration chosen by
+``core.codesign`` per QoS class.
+
+Execution paths for the agent stage:
+
+  * ``fake``    — agent layers run with fake-quantized weights
+                  (quantize-dequantize at b̂); works for every model family
+                  that exposes ``run_layers`` and any bit-width 1..16.
+  * ``kernel``  — weights are *actually* int8/int4-resident and every agent
+                  matmul dispatches ``repro.kernels`` quantized-matmul
+                  (Pallas on TPU, interpret on CPU); dense DecoderLM family.
+                  This is the TPU-native realization of the paper's knob:
+                  HBM traffic scales with b̂/16 (DESIGN.md §3).
+
+Embedding transport: the boundary activation is quantized at ``b_emb``
+(per-tensor absmax) before "transmission"; the engine reports exact wire
+bytes, so the uplink term of the cost model is grounded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import codesign as cd
+from ..core.cost_model import (SystemParams, agent_delay, agent_energy,
+                               server_delay, server_energy, transport_delay)
+from ..core.quantization import QuantConfig, quantize_dequantize
+from ..kernels import ops as kops
+from ..models import layers as L
+from .qat import fake_quantize_agent
+
+
+# ---------------------------------------------------------------------------
+# request/response records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    b_hat: int
+    f: float
+    f_server: float
+    agent_delay_s: float
+    server_delay_s: float
+    transport_delay_s: float
+    total_delay_s: float
+    energy_j: float
+    emb_bytes: int
+    agent_flops: float
+    server_flops: float
+
+
+@dataclasses.dataclass(frozen=True)
+class QosClass:
+    """One (T0, E0) service class; the engine solves (P1) per class."""
+    name: str
+    t0: float
+    e0: float
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class CoInferenceEngine:
+    """One agent/server pair serving a DecoderLM-family model."""
+
+    def __init__(self, model, params, sysp: SystemParams, *,
+                 lam: Optional[float] = None,
+                 scheme: str = "uniform",
+                 path: Literal["fake", "kernel"] = "fake",
+                 b_emb: int = 8):
+        if not hasattr(model, "run_layers"):
+            raise TypeError(
+                f"{type(model).__name__} lacks run_layers; co-inference "
+                "split execution needs the DecoderLM protocol")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.sysp = sysp
+        self.scheme = scheme
+        self.path = path
+        self.b_emb = b_emb
+        self.split = self.cfg.split_layer
+        self._axes = model.logical_axes()
+        self.lam = float(lam) if lam is not None else self._fit_lambda()
+        self.b_hat: int = 8
+        self.f: float = sysp.f_max
+        self.f_server: float = sysp.f_server_max
+        self._agent_params = None       # set by configure()
+        self._qlinears = None
+        self.configure(self.b_hat, self.f, self.f_server)
+
+    # ------------------------------------------------------------------
+    def _fit_lambda(self) -> float:
+        """MLE lambda over the agent-partition weight magnitudes."""
+        total, count = 0.0, 0
+        for leaf in jax.tree_util.tree_leaves(self.params["layers"]):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 3 and \
+                    jnp.issubdtype(leaf.dtype, jnp.floating):
+                sl = leaf[: self._stack_split(leaf)]
+                total += float(jnp.sum(jnp.abs(sl)))
+                count += int(np.prod(sl.shape))
+        return count / max(total, 1e-30) if count else 100.0
+
+    def _stack_split(self, leaf) -> int:
+        return min(self.split, leaf.shape[0])
+
+    def flop_split(self, tokens: int):
+        """(agent_flops, server_flops) for one forward over ``tokens``."""
+        per_layer = self.cfg.active_param_count() / max(self.cfg.n_layers, 1)
+        n_agent = 2.0 * per_layer * self.split * tokens
+        n_server = 2.0 * per_layer * (self.cfg.n_layers - self.split) * tokens
+        return n_agent, n_server
+
+    # ------------------------------------------------------------------
+    # configuration (the paper's decision variables)
+    # ------------------------------------------------------------------
+    def configure(self, b_hat: int, f: Optional[float] = None,
+                  f_server: Optional[float] = None) -> None:
+        """Set (b̂, f, f̃) and materialize the agent weights at b̂."""
+        self.b_hat = int(b_hat)
+        if f is not None:
+            self.f = float(f)
+        if f_server is not None:
+            self.f_server = float(f_server)
+        qcfg = QuantConfig(bits=self.b_hat, scheme=self.scheme,
+                           granularity="per-channel")
+        if self.path == "kernel" and self.b_hat in (4, 8) \
+                and not self.cfg.n_experts:
+            self._qlinears = self._quantize_kernel_weights(self.b_hat)
+            self._agent_params = None
+        else:
+            self._agent_params = fake_quantize_agent(
+                self.params, self._axes, self.cfg, qcfg, ste=False)
+            self._qlinears = None
+
+    def auto_configure(self, qos: QosClass) -> Optional[cd.CodesignSolution]:
+        """Solve (P1) for this QoS class and apply the solution."""
+        sol = cd.solve_sca(self.lam, self.sysp, qos.t0, qos.e0,
+                           b_max=int(self.sysp.b_full))
+        if sol is None:
+            return None
+        self.configure(sol.b_hat, sol.f, sol.f_server)
+        return sol
+
+    # ------------------------------------------------------------------
+    # kernel-path weight prep (dense DecoderLM)
+    # ------------------------------------------------------------------
+    def _quantize_kernel_weights(self, bits: int):
+        """Per-layer QuantizedLinear for wq/wk/wv/wo/mlp of layers [0,split).
+
+        Group size 128 along the contraction axis — exactly what the Pallas
+        qmm kernel consumes.
+        """
+        lp = self.params["layers"]
+        out = []
+        names = ["wq", "wk", "wv", "wo"]
+        mlp_names = [n for n in ("wi_gate", "wi_up", "wi", "wo")
+                     if n in lp["ffn"]]
+        for i in range(self.split):
+            rec = {"attn": {}, "ffn": {}}
+            for n in names:
+                w = np.asarray(lp["attn"][n][i], np.float32)
+                rec["attn"][n] = kops.quantize_linear(
+                    jnp.asarray(w), bits=bits, group_size=128)
+            for n in mlp_names:
+                w = np.asarray(lp["ffn"][n][i], np.float32)
+                rec["ffn"][n] = kops.quantize_linear(
+                    jnp.asarray(w), bits=bits, group_size=128)
+            out.append(rec)
+        return out
+
+    def _agent_forward_kernel(self, x, positions):
+        """Dense DecoderLM agent stack with Pallas quantized matmuls."""
+        cfg = self.cfg
+        lp = self.params["layers"]
+        for i in range(self.split):
+            ql = self._qlinears[i]
+            ln1 = jax.tree_util.tree_map(lambda a: a[i], lp["ln1"])
+            ln2 = jax.tree_util.tree_map(lambda a: a[i], lp["ln2"])
+            h = L.apply_norm(cfg, x, ln1)
+            q = ql["attn"]["wq"].apply(h)
+            k = ql["attn"]["wk"].apply(h)
+            v = ql["attn"]["wv"].apply(h)
+            if cfg.qkv_bias:
+                q = q + lp["attn"]["bq"][i].astype(x.dtype)
+                k = k + lp["attn"]["bk"][i].astype(x.dtype)
+                v = v + lp["attn"]["bv"][i].astype(x.dtype)
+            q = q.reshape(q.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+            k = k.reshape(k.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
+            v = v.reshape(v.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            attn = L.blockwise_attention(q, k, v, causal=True,
+                                         window=cfg.sliding_window)
+            x = x + ql["attn"]["wo"].apply(
+                attn.reshape(x.shape[:2] + (cfg.q_dim,)))
+            h2 = L.apply_norm(cfg, x, ln2)
+            if cfg.act == "silu":
+                y = jax.nn.silu(ql["ffn"]["wi_gate"].apply(h2)) \
+                    * ql["ffn"]["wi_up"].apply(h2)
+            else:
+                y = jax.nn.gelu(ql["ffn"]["wi"].apply(h2))
+            x = x + ql["ffn"]["wo"].apply(y)
+        return x
+
+    # ------------------------------------------------------------------
+    # the two inference stages + transport
+    # ------------------------------------------------------------------
+    def agent_stage(self, batch: Dict[str, Any]):
+        """Embedding + layers [0, split) at bit-width b̂."""
+        src = self._agent_params if self._agent_params is not None \
+            else self.params
+        x, positions = self.model._embed(src, batch)
+        if self._qlinears is not None:
+            x = self._agent_forward_kernel(x, positions)
+        else:
+            x, _ = self.model.run_layers(src, x, positions, 0, self.split)
+        return x, positions
+
+    def transport(self, emb: jax.Array):
+        """Quantize the boundary activation for the uplink; returns
+        (received embedding, wire bytes)."""
+        if self.b_emb >= 16:
+            return emb, int(np.prod(emb.shape)) * emb.dtype.itemsize
+        qcfg = QuantConfig(bits=self.b_emb, scheme="uniform",
+                           granularity="per-tensor")
+        emb_q = quantize_dequantize(emb, qcfg)
+        bits = int(np.prod(emb.shape)) * self.b_emb
+        return emb_q, (bits + 7) // 8 + 4  # + one f32 scale
+
+    def server_stage(self, emb: jax.Array, positions):
+        """Layers [split, L) at full precision + head."""
+        x, _ = self.model.run_layers(self.params, emb, positions,
+                                     self.split, self.cfg.n_layers)
+        x = L.apply_norm(self.cfg, x, self.params["final_norm"])
+        return L.unembed(self.cfg, self.params["embed"], x)
+
+    # ------------------------------------------------------------------
+    def serve_batch(self, batch: Dict[str, Any]):
+        """Full co-inference pass; returns (logits, ServeStats)."""
+        emb, positions = self.agent_stage(batch)
+        emb_rx, emb_bytes = self.transport(emb)
+        logits = self.server_stage(emb_rx, positions)
+
+        tokens = int(np.prod(positions.shape))
+        n_a, n_s = self.flop_split(tokens)
+        p = dataclasses.replace(self.sysp, n_flop_agent=n_a,
+                                n_flop_server=n_s,
+                                emb_bytes_full=float(emb_bytes)
+                                * 16.0 / self.b_emb)
+        t_a = float(agent_delay(self.b_hat, self.f, p))
+        t_s = float(server_delay(self.f_server, p))
+        t_x = float(transport_delay(self.b_emb, p))
+        e = float(agent_energy(self.b_hat, self.f, p)
+                  + server_energy(self.f_server, p))
+        stats = ServeStats(
+            b_hat=self.b_hat, f=self.f, f_server=self.f_server,
+            agent_delay_s=t_a, server_delay_s=t_s, transport_delay_s=t_x,
+            total_delay_s=t_a + t_s + t_x, energy_j=e, emb_bytes=emb_bytes,
+            agent_flops=n_a, server_flops=n_s)
+        return logits, stats

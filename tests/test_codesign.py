@@ -1,0 +1,143 @@
+"""Joint (b̂, f, f̃) co-design (paper §V, Algorithm 1) + baselines."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (solve_feasible_random,
+                                  solve_fixed_frequency, solve_ppo)
+from repro.core.codesign import (distortion_gap, feasible_bitwidth,
+                                 min_energy_under_deadline, solve_oracle,
+                                 solve_sca)
+from repro.core.cost_model import (SystemParams, total_delay, total_energy)
+
+# A self-consistent operating point for the paper's cost model: with the
+# paper's (f_max, c, psi, eta) constants, 64 GFLOP on-agent / 192 GFLOP
+# on-server puts t_a(b=16, f_max) at 1.0 s and makes the (T0, E0) region
+# genuinely active (the paper's raw 533.66 GFLOP figure with c=32 FLOP/cycle
+# would need >8 s even at f_max — its testbed numbers imply much higher
+# effective FLOPs/cycle; see DESIGN.md §7).
+P0 = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+LAM = 30.0
+
+
+def test_gap_monotone_decreasing_in_bits():
+    """The (P1) objective D^U - D^L decreases in b̂ — why the oracle scans
+    from the top."""
+    gaps = [distortion_gap(b, LAM) for b in range(2, 17)]
+    assert all(g1 >= g2 for g1, g2 in zip(gaps, gaps[1:]))
+
+
+def test_min_energy_deadline_unmeetable():
+    e, f, fs = min_energy_under_deadline(1.0, P0, t0=1e-9)
+    assert math.isinf(e)
+
+
+def test_min_energy_monotone_in_deadline():
+    prev = math.inf
+    for t0 in (1.2, 1.5, 2.0, 3.0, 5.0):
+        e, f, fs = min_energy_under_deadline(0.5, P0, t0)
+        assert e <= prev * (1 + 1e-9)
+        assert 0 <= f <= P0.f_max and 0 <= fs <= P0.f_server_max
+        prev = e
+
+
+def test_energy_optimal_frequencies_meet_deadline():
+    for w in (0.1, 0.5, 1.0):
+        t0 = 1.4
+        e, f, fs = min_energy_under_deadline(w, P0, t0)
+        assert math.isfinite(e)
+        t = float(total_delay(w * P0.b_full, f, fs, P0))
+        assert t <= t0 * (1 + 1e-6)
+
+
+def test_oracle_picks_largest_feasible_bitwidth():
+    sol = solve_oracle(LAM, P0, t0=1.2, e0=2.0)
+    assert sol is not None
+    ok_here, _, _, _ = feasible_bitwidth(sol.b_hat, LAM, P0, 3.5, 2.0)
+    assert ok_here
+    if sol.b_hat < 16:
+        ok_up, _, _, _ = feasible_bitwidth(sol.b_hat + 1, LAM, P0, 1.2, 2.0)
+        assert not ok_up
+
+
+def test_sca_matches_oracle_on_paper_setup():
+    """Algorithm 1 should land on (or next to) the oracle optimum across a
+    (T0, E0) sweep like Figs. 5-8."""
+    for t0 in (1.1, 1.2, 1.35, 1.5, 2.0):
+        for e0 in (0.8, 1.2, 2.0, 3.0):
+            o = solve_oracle(LAM, P0, t0, e0)
+            s = solve_sca(LAM, P0, t0, e0)
+            assert (o is None) == (s is None)
+            if o is not None:
+                assert abs(s.b_hat - o.b_hat) <= 1, (t0, e0, s.b_hat,
+                                                     o.b_hat)
+                assert s.objective <= distortion_gap(max(o.b_hat - 1, 1),
+                                                     LAM) * (1 + 1e-9)
+
+
+def test_sca_solution_feasible():
+    sol = solve_sca(LAM, P0, t0=1.3, e0=2.0)
+    assert sol is not None and sol.feasible
+    assert sol.delay <= 1.3 * (1 + 1e-6)
+    assert sol.energy <= 2.0 * (1 + 1e-6)
+    assert 1 <= sol.b_hat <= 16
+    assert sol.iterations >= 1
+
+
+def test_infeasible_detected():
+    assert solve_sca(LAM, P0, t0=1e-6, e0=1e-9) is None
+    assert solve_oracle(LAM, P0, t0=1e-6, e0=1e-9) is None
+
+
+def test_fixed_frequency_never_beats_oracle():
+    for t0, e0 in ((1.2, 1.5), (1.4, 2.0), (1.3, 6.0)):
+        o = solve_oracle(LAM, P0, t0, e0)
+        f = solve_fixed_frequency(LAM, P0, t0, e0)
+        if o is None:
+            continue
+        if f is None:
+            continue
+        assert f.b_hat <= o.b_hat
+        assert f.objective >= o.objective * (1 - 1e-9)
+
+
+def test_feasible_random_all_feasible():
+    sols = solve_feasible_random(LAM, P0, t0=1.4, e0=2.0, trials=100)
+    assert sols
+    for s in sols:
+        assert s.delay <= 1.4 * (1 + 1e-6)
+        assert s.energy <= 2.0 * (1 + 1e-6)
+
+
+def test_ppo_returns_feasible_and_suboptimal_or_equal():
+    o = solve_oracle(LAM, P0, t0=1.4, e0=2.0)
+    p = solve_ppo(LAM, P0, t0=1.4, e0=2.0, iters=150, seed=1)
+    assert p is not None
+    assert p.delay <= 1.4 * (1 + 1e-6) and p.energy <= 2.0 * (1 + 1e-6)
+    assert p.objective >= o.objective * (1 - 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(lam=st.floats(1.0, 200.0),
+       t0=st.floats(1.0, 3.0),
+       e0=st.floats(0.3, 4.0))
+def test_prop_sca_never_worse_than_oracle_minus_rounding(lam, t0, e0):
+    o = solve_oracle(lam, P0, t0, e0)
+    s = solve_sca(lam, P0, t0, e0)
+    assert (o is None) == (s is None)
+    if o is not None:
+        # rounding can cost at most one bit
+        assert s.b_hat >= o.b_hat - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(lam=st.floats(1.0, 200.0), t0=st.floats(1.05, 3.0),
+       e0=st.floats(0.5, 4.0))
+def test_prop_relaxing_constraints_never_hurts(lam, t0, e0):
+    a = solve_oracle(lam, P0, t0, e0)
+    b = solve_oracle(lam, P0, t0 * 1.5, e0 * 1.5)
+    if a is not None:
+        assert b is not None and b.b_hat >= a.b_hat

@@ -1,0 +1,109 @@
+"""Output-distortion approximation (paper §III, Prop 3.1, Fig. 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distortion import (chain_bound_coefficients, fc_chain_bound,
+                                   estimate_grad_norm_H, induced_l1_norm,
+                                   measured_output_distortion,
+                                   param_distortion, taylor_surrogate_bound)
+from repro.core.quantization import QuantConfig, quantize_dequantize
+from repro.models.fcdnn import apply_fcdnn, init_fcdnn, layer_dims
+
+
+def _quantize_weights(ws, bits, scheme="uniform"):
+    cfg = QuantConfig(bits=bits, scheme=scheme, granularity="per-tensor")
+    return [quantize_dequantize(w, cfg) for w in ws]
+
+
+def test_induced_l1_norm_definition():
+    w = jnp.asarray([[1.0, -2.0], [3.0, 0.5]])
+    # max column abs-sum: col0 = 4, col1 = 2.5
+    assert float(induced_l1_norm(w)) == pytest.approx(4.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_prop_induced_norm_submultiplicative(seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (8, 6))
+    b = jax.random.normal(k2, (6, 5))
+    assert float(induced_l1_norm(a @ b)) <= \
+        float(induced_l1_norm(a)) * float(induced_l1_norm(b)) * (1 + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_prop_operator_bound_holds(seed):
+    """||Wx||_1 <= ||W||_1 ||x||_1 — the proof's key step."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (8, 6))
+    x = jax.random.normal(k2, (6,))
+    assert float(jnp.sum(jnp.abs(w @ x))) <= \
+        float(induced_l1_norm(w)) * float(jnp.sum(jnp.abs(x))) * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 6, 8])
+@pytest.mark.parametrize("scheme", ["uniform", "pot-log"])
+def test_prop31_chain_bound_upper_bounds_output(bits, scheme):
+    """Proposition 3.1 on the paper's FCDNN-16 (reduced widths for CI)."""
+    dims = [32, 24, 16, 24, 16, 32]   # same family, CI-sized
+    ws = init_fcdnn(jax.random.PRNGKey(0), dims)
+    ws_hat = _quantize_weights(ws, bits, scheme)
+    # Assumption 1: ||x||_1 <= 1
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, dims[0]))
+    x = x / jnp.sum(jnp.abs(x), axis=-1, keepdims=True)
+    out = apply_fcdnn(ws, x)
+    out_hat = apply_fcdnn(ws_hat, x)
+    measured = float(jnp.max(jnp.sum(jnp.abs(out - out_hat), axis=-1)))
+    bound = float(fc_chain_bound(ws, ws_hat))
+    assert measured <= bound * (1 + 1e-5), (measured, bound)
+
+
+def test_prop31_bound_tightens_with_bits():
+    dims = [32, 24, 16, 24, 32]
+    ws = init_fcdnn(jax.random.PRNGKey(2), dims)
+    prev = np.inf
+    for bits in (3, 5, 7, 9):
+        ws_hat = _quantize_weights(ws, bits)
+        b = float(fc_chain_bound(ws, ws_hat))
+        assert b <= prev * (1 + 1e-6)
+        prev = b
+
+
+def test_chain_coefficients_independent_of_quantized_weights():
+    """Remark 3.1: A^(l) depends only on W and tau, not on W_hat."""
+    ws = init_fcdnn(jax.random.PRNGKey(3), [16, 12, 8, 16])
+    taus = [jnp.float32(0.1)] * len(ws)
+    c1 = chain_bound_coefficients(ws, taus)
+    c2 = chain_bound_coefficients(ws, taus)
+    for a, b in zip(c1, c2):
+        assert float(a) == float(b)
+    assert all(float(c) > 0 for c in c1)
+
+
+def test_param_distortion_is_l1():
+    a = {"w": jnp.asarray([1.0, -1.0]), "v": jnp.asarray([[2.0]])}
+    b = {"w": jnp.asarray([0.0, 1.0]), "v": jnp.asarray([[0.0]])}
+    assert float(param_distortion(a, b)) == pytest.approx(5.0)
+
+
+def test_taylor_surrogate_tracks_measured(capsys):
+    """Eq. (17): H ||W - W_hat||_1 upper-bounds measured distortion for
+    small perturbations (first-order regime)."""
+    dims = [24, 16, 12, 24]
+    ws = init_fcdnn(jax.random.PRNGKey(4), dims)
+    xs = jax.random.normal(jax.random.PRNGKey(5), (8, dims[0]))
+    xs = xs / jnp.sum(jnp.abs(xs), axis=-1, keepdims=True)
+
+    def apply_list(params, x):
+        return apply_fcdnn(params, x)
+
+    H = estimate_grad_norm_H(apply_list, ws, xs)
+    ws_hat = _quantize_weights(ws, 10)   # fine quantization: linear regime
+    measured = float(measured_output_distortion(apply_list, ws, ws_hat, xs))
+    bound = float(taylor_surrogate_bound(H, ws, ws_hat))
+    assert measured <= bound * (1 + 1e-4), (measured, bound)

@@ -1,0 +1,125 @@
+"""Fault-tolerance: checkpoint/restart supervisor, stragglers, corruption."""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, available_steps, save_tree
+from repro.configs import get_smoke
+from repro.data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.optim import AdamW
+from repro.runtime import (HostFailure, HostSet, StragglerMonitor,
+                           Supervisor, TrainConfig, Trainer)
+
+
+class _Session:
+    """A restartable training session for the Supervisor tests."""
+
+    def __init__(self, ckpt_dir: str, n_hosts: int):
+        cfg = get_smoke("qwen2-0.5b")
+        self.model = build_model(cfg)
+        self.tr = Trainer(self.model, AdamW(learning_rate=1e-3),
+                          make_host_mesh(), TrainConfig(log_every=100),
+                          ckpt=CheckpointManager(ckpt_dir, save_interval=5))
+        self.loader = ShardedLoader(MarkovLMDataset(MarkovLMConfig(
+            vocab_size=cfg.vocab_size, seq_len=16, batch_size=4)))
+        self.n_hosts = n_hosts
+        self.state = None
+        self.losses = []
+
+    @property
+    def step(self):
+        return self.tr.step
+
+    def run_until(self, target: int, hosts):
+        params, opt, err = self.tr.init_state(jax.random.PRNGKey(0))
+        params, opt, err, start = self.tr.maybe_restore(params, opt, err)
+        self.loader.seek(start)
+        self.tr.build_step(self.loader.peek_structure())
+        state = (params, opt, err)
+        while self.tr.step < target:
+            hosts.check(self.tr.step)       # may raise HostFailure
+            state, hist = self.tr.fit(self.loader, 1, state=state)
+            self.losses.extend(h["loss"] for h in hist)
+            if self.tr.ckpt.should_save(self.tr.step):
+                self.tr.ckpt.save(self.tr.step,
+                                  {"params": state[0], "opt": state[1],
+                                   "err": state[2]},
+                                  metadata={"data_step": self.tr.step})
+
+
+def test_supervisor_survives_host_failures():
+    with tempfile.TemporaryDirectory() as d:
+        hosts = HostSet(n_hosts=4, fail_at={7: 3, 13: 2})
+        sup = Supervisor(lambda n: _Session(d, n), hosts)
+        report = sup.run(target_steps=20)
+        assert report.final_step >= 20
+        assert report.restarts == 2
+        assert report.failures == [3, 2]
+        assert hosts.n_alive == 2
+        assert report.remesh_history == [4, 3, 2]
+
+
+def test_supervisor_restart_budget():
+    with tempfile.TemporaryDirectory() as d:
+        hosts = HostSet(n_hosts=4, fail_at={1: 0, 2: 1, 3: 2})
+        sup = Supervisor(lambda n: _Session(d, n), hosts, max_restarts=1)
+        with pytest.raises(RuntimeError, match="restart budget"):
+            sup.run(target_steps=20)
+
+
+def test_supervisor_resumes_from_checkpoint_not_zero():
+    with tempfile.TemporaryDirectory() as d:
+        hosts = HostSet(n_hosts=2, fail_at={8: 1})
+        sessions = []
+
+        def make(n):
+            s = _Session(d, n)
+            sessions.append(s)
+            return s
+
+        Supervisor(make, hosts).run(target_steps=12)
+        # second session must have started from the step-5 checkpoint
+        assert len(sessions) == 2
+        assert sessions[1].step == 12
+        assert available_steps(d)
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(factor=3.0)
+    rng = np.random.default_rng(0)
+    for step in range(30):
+        for host in range(8):
+            base = 1.0 + 0.05 * rng.standard_normal()
+            mon.report(host, base * (10.0 if host == 5 else 1.0))
+    assert mon.stragglers() == [5]
+
+
+def test_straggler_monitor_quiet_when_uniform():
+    mon = StragglerMonitor(factor=3.0)
+    for step in range(20):
+        for host in range(4):
+            mon.report(host, 1.0 + 0.01 * host)
+    assert mon.stragglers() == []
+
+
+def test_corrupt_checkpoint_falls_back():
+    """Manifest sha mismatch on the newest checkpoint -> previous one."""
+    with tempfile.TemporaryDirectory() as d:
+        import jax.numpy as jnp
+        tree = {"a": jnp.arange(4.0)}
+        save_tree(tree, d, 10)
+        save_tree({"a": jnp.arange(4.0) * 2}, d, 20)
+        # corrupt step 20's payload
+        with open(os.path.join(d, "step_20", "tree.msgpack.zst"), "ab") as f:
+            f.write(b"garbage")
+        mgr = CheckpointManager(d)
+        restored, manifest = mgr.restore_latest(tree)
+        assert manifest["step"] == 10
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(4.0))

@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (128, 256, 128, 128),     # M, K, N, G — minimal aligned
+    (256, 512, 256, 128),
+    (64, 1024, 384, 256),     # non-square, bigger groups
+    (512, 256, 128, 64),      # small group
+    (1, 896, 4864, 128),      # decode row  x  qwen2 MLP
+    (7, 512, 256, 128),       # ragged M (padding path)
+    (33, 640, 256, 128),      # K not multiple of default block_k
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,g", SHAPES)
+def test_qmm_int8_matches_ref(m, k, n, g):
+    dtype = jnp.float32
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 7 + k))
+    x = jax.random.normal(kx, (m, k), dtype)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    codes, scales = ref.group_quantize_ref(w, g)
+    out = ops.quantized_matmul(x, codes, scales)
+    want = ref.qmm_ref(x, codes, scales)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_qmm_dtype_sweep(dtype):
+    m, k, n, g = 128, 512, 256, 128
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), dtype)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    codes, scales = ref.group_quantize_ref(w, g)
+    out = ops.quantized_matmul(x, codes, scales)
+    assert out.dtype == dtype
+    want = ref.qmm_ref(x, codes, scales)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,k,n,g", SHAPES)
+def test_qmm_int4_matches_ref(m, k, n, g):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + k + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    codes, scales = ref.group_quantize_ref(w, g, bits=4)
+    packed = ref.pack_int4_ref(codes)
+    out = ops.quantized_matmul_int4(x, packed, scales)
+    want = ref.qmm_int4_ref(x, packed, scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,n,g,bits", [
+    (256, 128, 128, 8), (512, 256, 64, 8), (1024, 384, 256, 8),
+    (256, 128, 128, 4), (512, 512, 128, 4),
+])
+def test_group_quantize_matches_ref(k, n, g, bits):
+    w = jax.random.normal(jax.random.PRNGKey(k + n), (k, n))
+    codes, scales = ops.group_quantize(w, group_size=g, bits=bits)
+    codes_r, scales_r = ref.group_quantize_ref(w, g, bits=bits)
+    assert bool(jnp.all(codes == codes_r))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_r),
+                               rtol=1e-6)
+
+
+def test_pack_unpack_int4_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-7, 8, (256, 128)), jnp.int8)
+    packed = ref.pack_int4_ref(codes)
+    assert packed.shape == (128, 128)
+    out = ref.unpack_int4_ref(packed)
+    assert bool(jnp.all(out == codes))
+
+
+def test_leading_dims_flattened():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 256))
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 128))
+    codes, scales = ops.group_quantize(w, group_size=128)
+    out = ops.quantized_matmul(x, codes, scales)
+    assert out.shape == (4, 8, 128)
+    want = ref.qmm_ref(x.reshape(-1, 256), codes, scales).reshape(4, 8, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_linear_end_to_end_error_scales_with_bits():
+    """int4 residency must cost more accuracy than int8 — and both must be
+    within the analytic per-group error bound."""
+    k, n = 512, 256
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, k))
+    w = jax.random.normal(jax.random.PRNGKey(4), (k, n))
+    exact = x @ w
+    err8 = float(jnp.mean(jnp.abs(
+        ops.quantize_linear(w, bits=8).apply(x) - exact)))
+    err4 = float(jnp.mean(jnp.abs(
+        ops.quantize_linear(w, bits=4).apply(x) - exact)))
+    assert err8 < err4 < 10 * err8 * 16 + 1.0
+    assert err8 < 0.05 * float(jnp.mean(jnp.abs(exact)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(mm=st.sampled_from([1, 3, 64, 128]),
+       kk=st.sampled_from([256, 512]),
+       nn=st.sampled_from([128, 384]),
+       seed=st.integers(0, 1000))
+def test_prop_qmm_random_shapes(mm, kk, nn, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (mm, kk))
+    w = jax.random.normal(kw, (kk, nn))
+    codes, scales = ref.group_quantize_ref(w, 128)
+    np.testing.assert_allclose(
+        np.asarray(ops.quantized_matmul(x, codes, scales)),
+        np.asarray(ref.qmm_ref(x, codes, scales)), rtol=1e-4, atol=1e-4)

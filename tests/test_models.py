@@ -1,0 +1,250 @@
+"""Per-arch smoke tests + model-level equivalences.
+
+Every assigned architecture instantiates its REDUCED config and runs one
+forward/train step on CPU asserting output shapes + no NaNs (assignment
+§ARCHITECTURES), plus decode-vs-prefill and MoE/SSM equivalence oracles.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke, smoke_shape
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.registry import build_model
+
+
+def _batch_for(model, cfg, shape, seed=0):
+    specs = model.input_specs(shape)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[k] = jax.random.randint(key, s.shape, 0,
+                                        max(cfg.vocab_size, 2))
+        else:
+            out[k] = jax.random.normal(key, s.shape, s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    shape = smoke_shape("train")
+    batch = _batch_for(model, cfg, shape)
+    params = model.init(jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    gsum = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.abs(g)), grads, jnp.float32(0.0))
+    assert jnp.isfinite(gsum) and float(gsum) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_shapes(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    shape = smoke_shape("train")
+    batch = _batch_for(model, cfg, shape)
+    logits, _ = model.forward(params := model.init(jax.random.PRNGKey(2)),
+                              batch)
+    assert logits.shape[0] == shape.global_batch
+    assert logits.shape[-1] == cfg.vocab_size
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    shape = smoke_shape("prefill")
+    batch = _batch_for(model, cfg, shape)
+    params = model.init(jax.random.PRNGKey(3))
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (shape.global_batch, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    # decode into a fresh, larger cache (prefill caches are snug)
+    logits2, cache2 = model.decode_step(
+        params, model.init_cache(shape.global_batch, shape.seq_len + 8),
+        {"token": tok, "pos": jnp.zeros((shape.global_batch,), jnp.int32)})
+    assert logits2.shape == (shape.global_batch, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits2)))
+    assert int(cache2["len"][0]) == 1
+
+
+def test_decode_matches_prefill_dense():
+    """Greedy decode after prefill == teacher-forced forward (dense LM)."""
+    cfg = get_smoke("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0,
+                              cfg.vocab_size)
+    # full forward logits at position t
+    full_logits, _ = model.forward(params, {"tokens": toks})
+    # prefill on the first 8, then decode token-by-token with the cache
+    cache = model.init_cache(2, 16)
+    logits, cache_pre = model.prefill(params, {"tokens": toks[:, :8]})
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, 7]),
+                               rtol=2e-3, atol=2e-3)
+    # continue: feed ground-truth tokens 8..11
+    cache = model.init_cache(2, 16)
+    for t in range(8):
+        dl, cache = model.decode_step(
+            params, cache, {"token": toks[:, t:t + 1],
+                            "pos": jnp.full((2,), t, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(dl),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_ce_equals_direct():
+    cfg = get_smoke("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 32), 0,
+                              cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(8), (2, 32), 0,
+                                cfg.vocab_size)
+    x, _ = model._embed(params, {"tokens": toks})
+    h, _ = model._run_stack(params["layers"], x,
+                            jnp.broadcast_to(jnp.arange(32), (2, 32)))
+    h = L.apply_norm(cfg, h, params["final_norm"])
+    direct = L.softmax_cross_entropy(
+        L.unembed(cfg, params["embed"], h), labels)
+    chunked = L.chunked_cross_entropy(cfg, h, params["embed"], labels,
+                                      chunk=8)
+    assert float(direct) == pytest.approx(float(chunked), rel=1e-5)
+
+
+def test_moe_dispatch_matches_dense_oracle():
+    cfg = dataclasses.replace(get_smoke("qwen3-moe-235b-a22b"),
+                              capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(9))
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 32, cfg.d_model))
+    y_dense, _ = M.apply_moe_dense(cfg, lp, x)
+    y_disp, _ = M.apply_moe_dispatch(cfg, lp, x, group_size=32)
+    np.testing.assert_allclose(np.asarray(y_disp), np.asarray(y_dense),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_moe_chunked_dispatch_equals_single_shot():
+    cfg = dataclasses.replace(get_smoke("qwen3-moe-235b-a22b"),
+                              capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(11))
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 64, cfg.d_model))
+    y1, _ = M._dispatch_one(cfg, lp, x, group_size=32)
+    y2, _ = M.apply_moe_dispatch(cfg, lp, x, group_size=32,
+                                 max_chunk_tokens=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_mamba_decode_matches_forward():
+    """Step-by-step Mamba recurrence == chunked parallel forward."""
+    cfg = get_smoke("jamba-1.5-large-398b")
+    key = jax.random.PRNGKey(13)
+    p, _ = S.init_mamba(cfg, key)
+    x = jax.random.normal(jax.random.PRNGKey(14), (2, 16, cfg.d_model))
+    y_par = S.mamba_forward(cfg, p, x, chunk=4)
+    state = S.mamba_init_state(cfg, 2)
+    ys = []
+    for t in range(16):
+        y, state = S.mamba_decode_step(cfg, p, x[:, t:t + 1], state)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_par),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_decode_matches_forward():
+    cfg = get_smoke("xlstm-350m")
+    p, _ = S.init_mlstm(cfg, jax.random.PRNGKey(15))
+    x = jax.random.normal(jax.random.PRNGKey(16), (2, 12, cfg.d_model))
+    y_par = S.mlstm_forward(cfg, p, x, chunk=4)
+    state = S.mlstm_init_state(cfg, 2)
+    ys = []
+    for t in range(12):
+        y, state = S.mlstm_decode_step(cfg, p, x[:, t:t + 1], state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_par), rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_decode_matches_forward():
+    cfg = get_smoke("xlstm-350m")
+    p, _ = S.init_slstm(cfg, jax.random.PRNGKey(17))
+    x = jax.random.normal(jax.random.PRNGKey(18), (2, 10, cfg.d_model))
+    y_par = S.slstm_forward(cfg, p, x)
+    state = S.slstm_init_state(cfg, 2)
+    ys = []
+    for t in range(10):
+        y, state = S.slstm_decode_step(cfg, p, x[:, t:t + 1], state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_par), rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_attention_matches_naive():
+    B, S_, H, dh = 2, 24, 4, 8
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(19), 3)
+    q = jax.random.normal(kq, (B, S_, H, dh))
+    k = jax.random.normal(kk, (B, S_, H, dh))
+    v = jax.random.normal(kv, (B, S_, H, dh))
+    out = L.blockwise_attention(q, k, v, causal=True, q_block=8, kv_block=8)
+    # naive reference
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh ** -0.5
+    mask = jnp.tril(jnp.ones((S_, S_), bool))
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_attention_gqa_and_window():
+    B, S_, KV, G, dh = 1, 32, 2, 3, 8
+    H = KV * G
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(20), 3)
+    q = jax.random.normal(kq, (B, S_, H, dh))
+    k = jax.random.normal(kk, (B, S_, KV, dh))
+    v = jax.random.normal(kv, (B, S_, KV, dh))
+    out = L.blockwise_attention(q, k, v, causal=True, window=8,
+                                q_block=16, kv_block=16)
+    # reference with expanded KV
+    ke = jnp.repeat(k, G, axis=2)
+    ve = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, ke) * dh ** -0.5
+    idx = jnp.arange(S_)
+    mask = (idx[:, None] >= idx[None, :]) & \
+        ((idx[:, None] - idx[None, :]) < 8)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), ve)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_run_layers_split_composes():
+    """Co-inference invariant: agent[0,k) then server[k,L) == full stack."""
+    cfg = get_smoke("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(21))
+    toks = jax.random.randint(jax.random.PRNGKey(22), (2, 16), 0,
+                              cfg.vocab_size)
+    x, pos = model._embed(params, {"tokens": toks})
+    full, _ = model._run_stack(params["layers"], x, pos)
+    for k in (1, 2, 3):
+        a, _ = model.run_layers(params, x, pos, 0, k)
+        b, _ = model.run_layers(params, a, pos, k, cfg.n_layers)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,158 @@
+"""Quantizer unit + property tests (core/quantization.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (QuantConfig, dequantize, max_quant_error,
+                                     pack_int4, qat_quantize, quantize,
+                                     quantize_dequantize, quantize_tree,
+                                     quantize_tree_stacked, unpack_int4,
+                                     fake_quantize_tree)
+
+SCHEMES = ("uniform", "pot-log")
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# basic invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("gran", ["per-tensor", "per-channel", "per-group"])
+def test_qdq_error_bounded(scheme, bits, gran):
+    x = _rand(0, (256, 64))
+    cfg = QuantConfig(bits=bits, scheme=scheme, granularity=gran)
+    xq = quantize_dequantize(x, cfg)
+    err = jnp.max(jnp.abs(x - xq))
+    tau = max_quant_error(x, cfg)
+    assert float(err) <= float(tau) * (1 + 1e-5), (float(err), float(tau))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_qdq_sign_preserved(scheme):
+    x = _rand(1, (128, 32))
+    cfg = QuantConfig(bits=4, scheme=scheme)
+    xq = quantize_dequantize(x, cfg)
+    # paper §II-C: sign bits are kept; only magnitudes quantized
+    assert bool(jnp.all((jnp.sign(xq) == jnp.sign(x)) | (xq == 0)))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_qdq_idempotent(scheme):
+    x = _rand(2, (64, 64))
+    cfg = QuantConfig(bits=5, scheme=scheme, granularity="per-tensor")
+    x1 = quantize_dequantize(x, cfg)
+    x2 = quantize_dequantize(x1, cfg)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_distortion_monotone_in_bits():
+    """Paper Remark 4.1: more bits -> less distortion."""
+    x = _rand(3, (512, 128))
+    prev = np.inf
+    for bits in range(2, 10):
+        cfg = QuantConfig(bits=bits, scheme="uniform",
+                          granularity="per-channel")
+        d = float(jnp.mean(jnp.abs(x - quantize_dequantize(x, cfg))))
+        assert d <= prev * (1 + 1e-6), (bits, d, prev)
+        prev = d
+
+
+def test_int_code_roundtrip():
+    x = _rand(4, (256, 64))
+    cfg = QuantConfig(bits=8, scheme="uniform", granularity="per-channel")
+    qt = quantize(x, cfg)
+    assert qt.codes.dtype == jnp.int8
+    xq = dequantize(qt)
+    np.testing.assert_allclose(np.asarray(xq),
+                               np.asarray(quantize_dequantize(x, cfg)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_quantized_tensor_astype_transparent():
+    """astype() on QuantizedTensor dequantizes (dequant-on-read serving)."""
+    x = _rand(5, (64, 32))
+    cfg = QuantConfig(bits=8, scheme="uniform")
+    qt = quantize(x, cfg)
+    y = qt.astype(jnp.float32)
+    assert y.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(y - x))) < float(max_quant_error(x, cfg)) \
+        * 1.01
+
+
+def test_pack_unpack_int4():
+    codes = jnp.asarray(
+        np.random.default_rng(0).integers(-7, 8, (64, 32)), jnp.int8)
+    packed = pack_int4(codes.T).T  # pack along first axis via transpose
+    codes2 = unpack_int4(packed.T).T
+    assert bool(jnp.all(codes == codes2))
+
+
+def test_tree_quantization_skips_small_leaves():
+    tree = {"w": _rand(6, (32, 16)), "b": _rand(7, (16,)),
+            "n": jnp.ones((8,))}
+    cfg = QuantConfig(bits=4)
+    fq = fake_quantize_tree(tree, cfg)
+    assert bool(jnp.all(fq["b"] == tree["b"]))  # 1-D untouched
+    assert not bool(jnp.all(fq["w"] == tree["w"]))
+    qt = quantize_tree(tree, cfg)
+    assert qt["w"].codes.dtype == jnp.int8
+    assert qt["b"] is tree["b"]
+
+
+def test_stacked_tree_per_layer_scales():
+    w = jnp.stack([_rand(8, (16, 8)), _rand(9, (16, 8)) * 100.0])
+    cfg = QuantConfig(bits=8, granularity="per-channel")
+    qt = quantize_tree_stacked({"w": w}, cfg)["w"]
+    # layer 1 is 100x larger -> its scales must be ~100x larger
+    s0, s1 = np.asarray(qt.scale[0]), np.asarray(qt.scale[1])
+    assert np.median(s1 / np.maximum(s0, 1e-12)) > 10
+
+
+def test_qat_straight_through_gradient():
+    x = _rand(10, (32, 16))
+    cfg = QuantConfig(bits=4)
+
+    def f(x):
+        return jnp.sum(qat_quantize(x, cfg) ** 2)
+
+    g = jax.grad(f)(x)
+    # STE: d/dx sum(q(x)^2) = 2 q(x) (identity through the quantizer)
+    expect = 2 * quantize_dequantize(x, cfg)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 10),
+       scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2 ** 16))
+def test_prop_uniform_error_le_half_step(bits, scale, seed):
+    x = _rand(seed, (64, 16), scale)
+    cfg = QuantConfig(bits=bits, scheme="uniform", granularity="per-tensor")
+    xq = quantize_dequantize(x, cfg)
+    levels = 2 ** (bits - 1) - 1
+    step = float(jnp.max(jnp.abs(x))) / levels
+    assert float(jnp.max(jnp.abs(x - xq))) <= step / 2 * (1 + 1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), bits=st.integers(1, 8))
+def test_prop_qdq_never_amplifies(seed, bits):
+    x = _rand(seed, (32, 32))
+    cfg = QuantConfig(bits=bits, scheme="uniform", granularity="per-tensor")
+    xq = quantize_dequantize(x, cfg)
+    assert float(jnp.max(jnp.abs(xq))) <= float(jnp.max(jnp.abs(x))) \
+        * (1 + 1e-5)

@@ -1,0 +1,97 @@
+"""Rate-distortion bounds (paper §IV, Props 4.1/4.2, Fig. 4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rate_distortion import (blahut_arimoto_distortion_rate,
+                                        distortion_lower_bound,
+                                        distortion_upper_bound,
+                                        exponential_entropy, exponential_mle,
+                                        rate_lower_bound, rate_upper_bound)
+
+
+def test_entropy_closed_form():
+    # h(Exp(lam)) = log2(e/lam)
+    assert float(exponential_entropy(1.0)) == pytest.approx(
+        np.log2(np.e), rel=1e-6)
+    assert float(exponential_entropy(2.0)) == pytest.approx(
+        np.log2(np.e / 2), rel=1e-6)
+
+
+def test_mle_recovers_lambda():
+    rng = np.random.default_rng(0)
+    for lam in (0.5, 3.0, 40.0):
+        sample = rng.exponential(1.0 / lam, size=200_000)
+        lam_hat = float(exponential_mle(jnp.asarray(sample)))
+        assert lam_hat == pytest.approx(lam, rel=0.02)
+
+
+@settings(max_examples=40, deadline=None)
+@given(lam=st.floats(0.1, 500.0), rate=st.floats(0.25, 12.0))
+def test_prop_bounds_ordering(lam, rate):
+    """D^L(R) <= D^U(R) for every (lam, R) — Props 4.1 vs 4.2."""
+    dl = float(distortion_lower_bound(rate, lam))
+    du = float(distortion_upper_bound(rate, lam))
+    assert 0 < dl <= du * (1 + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(lam=st.floats(0.1, 500.0), d=st.floats(1e-6, 0.49))
+def test_prop_rate_bounds_consistent(lam, d):
+    """R^L and D^L are inverses; same for the upper pair."""
+    dd = d / lam  # keep lam*D < 0.5 so R^L > 0
+    rl = float(rate_lower_bound(dd, lam))
+    dl = float(distortion_lower_bound(rl, lam))
+    assert dl == pytest.approx(dd, rel=1e-4)
+    ru = float(rate_upper_bound(dd, lam))
+    du = float(distortion_upper_bound(ru, lam))
+    # D^U(R^U(D)) returns D by construction of the test channel (f32 slack)
+    assert du == pytest.approx(dd, rel=2e-2)
+
+
+def test_bounds_decay_and_converge():
+    """Both bounds decrease in R and the gap shrinks (paper Fig. 4)."""
+    lam = 30.0
+    rates = np.linspace(1.0, 10.0, 19)
+    dl = np.array([float(distortion_lower_bound(r, lam)) for r in rates])
+    du = np.array([float(distortion_upper_bound(r, lam)) for r in rates])
+    assert np.all(np.diff(dl) < 0) and np.all(np.diff(du) < 0)
+    gap = du - dl
+    assert gap[-1] < gap[0] * 0.02
+
+
+def test_blahut_arimoto_between_bounds():
+    """Numerical D(R) must sit in [D^L, D^U] in the rate window where the
+    discretized source is a faithful stand-in (rates well below
+    log2(n_source) ~ 7.6 bits, exactly how paper Fig. 4 sweeps it)."""
+    lam = 20.0
+    res = blahut_arimoto_distortion_rate(lam, n_source=192, n_repro=192,
+                                         n_iters=150)
+    mask = (res.rates > 0.5) & (res.rates < 3.5)
+    assert mask.sum() >= 5
+    for r, d in zip(res.rates[mask], res.distortions[mask]):
+        dl = float(distortion_lower_bound(r, lam))
+        du = float(distortion_upper_bound(r, lam))
+        assert d >= dl * 0.90, (r, d, dl)   # 10% discretization slack
+        assert d <= du * 1.10, (r, d, du)
+
+
+def test_blahut_arimoto_monotone():
+    res = blahut_arimoto_distortion_rate(20.0, n_source=128, n_repro=128,
+                                         n_iters=100)
+    mask = (res.rates > 0.25) & (res.rates < 3.5)
+    order = np.argsort(res.rates[mask])
+    d_sorted = res.distortions[mask][order]
+    # distortion decreases (weakly) as rate grows
+    assert np.all(np.diff(d_sorted) <= 1e-4)
+
+
+def test_lambda_scaling_insight():
+    """Remark 4.1: larger lam (sharper peak at 0) -> less distortion at the
+    same rate — quantization-sensitivity is captured by lam."""
+    for r in (2.0, 4.0, 6.0):
+        d_small = float(distortion_upper_bound(r, 5.0))
+        d_large = float(distortion_upper_bound(r, 50.0))
+        assert d_large < d_small

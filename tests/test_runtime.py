@@ -1,0 +1,180 @@
+"""Training loop + co-inference engine integration tests (CPU, 1 device)."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.core.quantization import QuantConfig
+from repro.data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.optim import AdamW
+from repro.runtime import (CoInferenceEngine, QosClass, TrainConfig, Trainer)
+from repro.runtime.qat import fake_quantize_agent
+
+
+def _mk(arch="stablelm-3b", **tc):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    ds = MarkovLMDataset(MarkovLMConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=32, batch_size=8))
+    loader = ShardedLoader(ds)
+    tr = Trainer(model, AdamW(learning_rate=3e-3), mesh,
+                 TrainConfig(log_every=5, **tc))
+    return cfg, model, tr, loader, ds
+
+
+def test_loss_decreases_on_markov_data():
+    _, _, tr, loader, _ = _mk()
+    _, hist = tr.fit(loader, 40)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1, hist
+
+
+def test_qat_training_runs_and_learns():
+    _, _, tr, loader, _ = _mk(qat_bits=8)
+    _, hist = tr.fit(loader, 30)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_int8_ef_compression_training():
+    _, _, tr, loader, _ = _mk(grad_compression="int8_ef")
+    _, hist = tr.fit(loader, 30)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_checkpoint_resume_reproduces_stream():
+    """Stop at step 20, restart from checkpoint -> identical metrics to an
+    uninterrupted run (deterministic data + state round-trip)."""
+    with tempfile.TemporaryDirectory() as d:
+        cfg, model, tr, loader, ds = _mk()
+        tr.ckpt = CheckpointManager(d, save_interval=10, keep=3)
+        _, hist_a = tr.fit(loader, 20)
+
+        # fresh trainer resumes from the step-20 checkpoint
+        cfg2 = get_smoke("stablelm-3b")
+        model2 = build_model(cfg2)
+        tr2 = Trainer(model2, AdamW(learning_rate=3e-3),
+                      make_host_mesh(), TrainConfig(log_every=5),
+                      ckpt=CheckpointManager(d, save_interval=10))
+        loader2 = ShardedLoader(MarkovLMDataset(MarkovLMConfig(
+            vocab_size=cfg2.vocab_size, seq_len=32, batch_size=8)))
+        _, hist_b = tr2.fit(loader2, 10)
+        assert tr2.step == 30
+        assert hist_b[0]["step"] > 20  # resumed, not restarted
+
+        # uninterrupted control run
+        cfg3, model3, tr3, loader3, _ = _mk()
+        _, hist_c = tr3.fit(loader3, 30)
+        ctrl = {h["step"]: h["loss"] for h in hist_c}
+        for h in hist_b:
+            if h["step"] in ctrl:
+                assert h["loss"] == pytest.approx(ctrl[h["step"]],
+                                                  rel=1e-4), h
+
+
+def test_qat_fake_quant_masks_agent_partition_only():
+    cfg = get_smoke("stablelm-3b")   # split_layer=1 of 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    q = fake_quantize_agent(params, model.logical_axes(), cfg,
+                            QuantConfig(bits=4))
+    wq = params["layers"]["attn"]["wq"]
+    wq_q = q["layers"]["attn"]["wq"]
+    # layer 0 (agent) quantized, layers >= split untouched
+    assert not bool(jnp.all(wq[0] == wq_q[0]))
+    for i in range(cfg.split_layer, cfg.n_layers):
+        assert bool(jnp.all(wq[i] == wq_q[i]))
+    # embeddings untouched
+    assert bool(jnp.all(params["embed"]["tok"] == q["embed"]["tok"]))
+
+
+# ---------------------------------------------------------------------------
+# co-inference engine
+# ---------------------------------------------------------------------------
+
+def _engine(path="fake", arch="stablelm-3b"):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    sysp = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+    return cfg, model, params, CoInferenceEngine(model, params, sysp,
+                                                 path=path)
+
+
+def test_engine_full_precision_matches_monolithic():
+    """b̂=16 (no quantization) through the split must equal model.forward."""
+    cfg, model, params, eng = _engine()
+    eng.configure(16)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg.vocab_size)
+    logits, _ = eng.serve_batch({"tokens": toks})
+    want, _ = model.forward(params, {"tokens": toks})
+    # only the uplink quantization (b_emb=8) separates them
+    assert float(jnp.mean(jnp.abs(logits - want))) < 0.05 * float(
+        jnp.mean(jnp.abs(want)) + 1e-9)
+    eng.b_emb = 16
+    logits2, stats = eng.serve_batch({"tokens": toks})
+    np.testing.assert_allclose(np.asarray(logits2), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_engine_distortion_monotone_in_bits():
+    """Lower b̂ -> larger output distortion (the paper's core trade-off)."""
+    cfg, model, params, eng = _engine()
+    eng.b_emb = 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0,
+                              cfg.vocab_size)
+    want, _ = model.forward(params, {"tokens": toks})
+    dists = []
+    for b in (2, 4, 8, 12):
+        eng.configure(b)
+        logits, _ = eng.serve_batch({"tokens": toks})
+        dists.append(float(jnp.sum(jnp.abs(logits - want))))
+    assert dists[0] > dists[-1]
+    assert all(d >= 0 for d in dists)
+
+
+def test_engine_kernel_path_close_to_fake_path():
+    cfg, model, params, eng_f = _engine("fake")
+    _, _, _, eng_k = _engine("kernel")
+    for e in (eng_f, eng_k):
+        e.b_emb = 16
+        e.configure(8)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0,
+                              cfg.vocab_size)
+    lf, _ = eng_f.serve_batch({"tokens": toks})
+    lk, _ = eng_k.serve_batch({"tokens": toks})
+    # different 8-bit quantizers (per-channel fake vs per-group kernel) —
+    # outputs must agree to quantization precision
+    assert float(jnp.mean(jnp.abs(lf - lk))) < 0.1 * float(
+        jnp.mean(jnp.abs(lf)) + 1e-9)
+
+
+def test_engine_auto_configure_respects_qos():
+    _, _, _, eng = _engine()
+    sol = eng.auto_configure(QosClass("rt", t0=1.3, e0=2.0))
+    assert sol is not None
+    assert sol.delay <= 1.3 * (1 + 1e-6)
+    assert sol.energy <= 2.0 * (1 + 1e-6)
+    assert eng.b_hat == sol.b_hat
+    logits, stats = eng.serve_batch(
+        {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert stats.b_hat == sol.b_hat
+
+
+def test_engine_transport_bytes_scale_with_b_emb():
+    _, _, _, eng = _engine()
+    toks = jnp.zeros((2, 16), jnp.int32)
+    eng.b_emb = 8
+    _, s8 = eng.serve_batch({"tokens": toks})
+    eng.b_emb = 4
+    _, s4 = eng.serve_batch({"tokens": toks})
+    assert abs(s4.emb_bytes * 2 - s8.emb_bytes) <= 8

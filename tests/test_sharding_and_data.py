@@ -1,0 +1,163 @@
+"""Sharding rules, data determinism, checkpoint store, hloparse units."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.data import (CaptionProxyConfig, CaptionProxyDataset,
+                        MarkovLMConfig, MarkovLMDataset, ShardedLoader)
+from repro.launch import hloparse
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.parallel.sharding import (batch_shardings, default_rules,
+                                     spec_for, tree_shardings)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_divisibility_fallback():
+    # abstract 16x16 production mesh: no devices needed for spec logic
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    rules = {"heads": "model", "embed": "data", "kv": "model"}
+    # divisible dims shard
+    assert spec_for(("embed", "heads"), (64, 64), rules, mesh) == \
+        P("data", "model")
+    # 14 q-heads don't divide 16 -> that dim replicates (qwen2 case)
+    assert spec_for(("embed", "heads"), (64, 14), rules, mesh) == P("data")
+    # kv=1 (granite MQA) can't shard either
+    assert spec_for(("kv",), (1,), rules, mesh) == P()
+
+
+def test_tree_shardings_cover_params():
+    cfg = get_smoke("kimi-k2-1t-a32b")
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    shardings = tree_shardings(model.logical_axes(), model.param_structs(),
+                               default_rules(cfg), mesh)
+    n_params = len(jax.tree_util.tree_leaves(model.param_structs()))
+    n_shard = len(jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec")))
+    assert n_params == n_shard
+
+
+def test_jit_with_shardings_runs():
+    cfg = get_smoke("stablelm-3b")
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    rules = default_rules(cfg)
+    p_sh = tree_shardings(model.logical_axes(), model.param_structs(),
+                          rules, mesh)
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    b_sh = batch_shardings(
+        {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+         for k, v in batch.items()}, rules, mesh)
+    with jax.set_mesh(mesh):
+        params = jax.jit(model.init, out_shardings=p_sh)(
+            jax.random.PRNGKey(0))
+        loss = jax.jit(model.loss, in_shardings=(p_sh, b_sh))(params, batch)
+    assert jnp.isfinite(loss)
+
+
+# ---------------------------------------------------------------------------
+# data determinism
+# ---------------------------------------------------------------------------
+
+def test_markov_deterministic_per_step():
+    cfg = MarkovLMConfig(vocab_size=128, seq_len=16, batch_size=4)
+    a, b = MarkovLMDataset(cfg), MarkovLMDataset(cfg)
+    for step in (0, 3, 17):
+        np.testing.assert_array_equal(a.batch_at(step)["tokens"],
+                                      b.batch_at(step)["tokens"])
+    # distinct steps differ
+    assert not np.array_equal(a.batch_at(0)["tokens"],
+                              a.batch_at(1)["tokens"])
+
+
+def test_markov_labels_shifted_and_learnable():
+    cfg = MarkovLMConfig(vocab_size=64, seq_len=32, batch_size=4,
+                         branching=2)
+    ds = MarkovLMDataset(cfg)
+    b = ds.batch_at(0)
+    # label t must be a valid successor of token t in the chain
+    for row_t, row_l in zip(b["tokens"], b["labels"]):
+        for t, l in zip(row_t, row_l):
+            assert l in ds.table[t]
+
+
+def test_markov_hosts_get_different_data():
+    cfg = MarkovLMConfig(vocab_size=128, seq_len=16, batch_size=4)
+    a = MarkovLMDataset(cfg, host_id=0, num_hosts=2)
+    b = MarkovLMDataset(cfg, host_id=1, num_hosts=2)
+    assert not np.array_equal(a.batch_at(5)["tokens"],
+                              b.batch_at(5)["tokens"])
+
+
+def test_loader_seek_resumes_stream():
+    cfg = MarkovLMConfig(vocab_size=128, seq_len=16, batch_size=2)
+    ds = MarkovLMDataset(cfg)
+    l1 = ShardedLoader(ds)
+    seen = [next(l1)["tokens"] for _ in range(5)]
+    l2 = ShardedLoader(ds)
+    l2.seek(3)
+    np.testing.assert_array_equal(np.asarray(next(l2)["tokens"]),
+                                  np.asarray(seen[3]))
+
+
+def test_caption_proxy_references_stable():
+    cfg = CaptionProxyConfig(vocab_size=256, seq_len=8, d_model=16,
+                             n_vis=4, batch_size=4, n_images=32)
+    ds = CaptionProxyDataset(cfg)
+    b = ds.batch_at(0)
+    refs = ds.references(b["image_id"])
+    assert refs.shape == (4, 8)
+    # ~90% of caption labels match the reference (10% injected noise)
+    match = (b["labels"] == refs).mean()
+    assert 0.7 < match <= 1.0
+    # teacher-forcing shift: tokens = [BOS, labels[:-1]]
+    assert (b["tokens"][:, 0] == 0).all()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# hloparse units
+# ---------------------------------------------------------------------------
+
+def test_hloparse_counts_plain_matmul():
+    m, k, n = 64, 32, 16
+
+    def f(a, b):
+        return a @ b
+
+    lowered = jax.jit(f).lower(jnp.zeros((m, k)), jnp.zeros((k, n)))
+    costs = hloparse.analyze(lowered.compile().as_text())
+    assert costs.flops == pytest.approx(2 * m * k * n, rel=1e-6)
+
+
+def test_hloparse_multiplies_scan_bodies():
+    def f(x, ws):
+        def step(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(step, x, ws)
+        return x
+
+    L, d = 8, 16
+    lowered = jax.jit(f).lower(jnp.zeros((4, d)), jnp.zeros((L, d, d)))
+    costs = hloparse.analyze(lowered.compile().as_text())
+    assert costs.n_while >= 1
+    assert max(costs.trip_counts) == L
+    assert costs.flops == pytest.approx(L * 2 * 4 * d * d, rel=0.01)
+
+
+def test_hloparse_shape_bytes():
+    assert hloparse._shape_bytes("f32[4,8]{1,0}") == 128
+    assert hloparse._shape_bytes("bf16[10]") == 20
+    assert hloparse._shape_bytes("(f32[2], s8[4])") == 12
+    assert hloparse._shape_bytes("pred[]") == 1
