@@ -9,6 +9,7 @@ Sections (paper artifact -> module):
     fig5-8  CIDEr vs (T0, E0), 4 schemes            codesign_sweep.py
     table1  coarse frequency profiles               testbed_profiles.py
     kernels quantized-matmul TPU economics          kernel_bench.py
+    serve   batched co-inference throughput         serve_throughput.py
 """
 
 from __future__ import annotations
@@ -18,7 +19,7 @@ import sys
 import time
 
 from . import (codesign_sweep, distortion, kernel_bench, rd_bounds,
-               testbed_profiles, weight_stats)
+               serve_throughput, testbed_profiles, weight_stats)
 from .common import banner
 
 SECTIONS = {
@@ -28,6 +29,8 @@ SECTIONS = {
     "fig5-8": ("Figs 5-8  joint co-design sweeps", codesign_sweep.run),
     "table1": ("Table I  coarse frequency profiles", testbed_profiles.run),
     "kernels": ("Kernels  quantized matmul", kernel_bench.run),
+    "serve": ("Serving  batched vs sequential throughput",
+              serve_throughput.run),
 }
 
 

@@ -1,0 +1,212 @@
+"""Serving throughput: batched vs sequential co-inference (DESIGN.md §7).
+
+Three sweeps on the ``qwen2_0_5b`` config (smoke-scaled so the sweep runs
+on CPU; the engine code is identical at full scale):
+
+  1. batch size  — wall-clock requests/s of one fused forward of R requests
+                   vs R single-request forwards, plus bitwise verification
+                   that batching never changes a request's logits.  The
+                   acceptance bar is >= 2x at R = 8.
+  2. bit-width   — the same comparison across agent bit-widths (kernel path
+                   where int8/int4-resident weights apply, fake elsewhere).
+  3. QoS mix     — the full BatchedCoInferenceEngine queue under different
+                   traffic mixes: batch occupancy, modeled queue wait,
+                   amortized delay/energy per class, and codesign cache
+                   hit/miss counts ((P1) solved once per class, not once
+                   per request).
+
+Wall-clock numbers measure host dispatch + compute of the smoke model and
+are the point of batching on this CPU container; the modeled delay/energy
+columns come from the paper's cost model (eqs. 4-9) and are what the
+co-design optimizes.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only serve
+  or  PYTHONPATH=src python benchmarks/serve_throughput.py
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, CodesignCache,
+                           CoInferenceEngine, QosClass)
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SEQ = 32
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+CLASSES = [
+    QosClass("realtime", t0=1.10, e0=0.9),
+    QosClass("interactive", t0=1.30, e0=1.5),
+    QosClass("batch", t0=2.50, e0=4.0),
+]
+MIXES = {
+    "uniform": ("realtime", "interactive", "batch"),
+    "rt-heavy": ("realtime", "realtime", "realtime", "interactive"),
+    "batch-only": ("batch",),
+}
+
+
+def _tokens(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, SEQ)).astype(np.int32)
+
+
+def _time_sequential(eng: CoInferenceEngine, toks: np.ndarray,
+                     repeats: int = 3) -> float:
+    """Best-of wall-clock seconds to serve each row as its own request."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for i in range(toks.shape[0]):
+            logits, _ = eng.serve_batch({"tokens": jnp.asarray(toks[i:i+1])})
+        logits.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _time_batched(eng: CoInferenceEngine, toks: np.ndarray,
+                  batch: int, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for lo in range(0, toks.shape[0], batch):
+            logits, _ = eng.serve_batch(
+                {"tokens": jnp.asarray(toks[lo:lo + batch])})
+        logits.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _verify_bitwise(eng: CoInferenceEngine, toks: np.ndarray) -> bool:
+    batched, _ = eng.serve_batch({"tokens": jnp.asarray(toks)})
+    batched = np.asarray(batched)
+    for i in range(toks.shape[0]):
+        single, _ = eng.serve_batch({"tokens": jnp.asarray(toks[i:i+1])})
+        if not np.array_equal(batched[i], np.asarray(single[0])):
+            return False
+    return True
+
+
+def sweep_batch_size(model, params, path: str = "kernel",
+                     sizes: Sequence[int] = (1, 2, 4, 8, 16),
+                     n_requests: int = 16) -> List[dict]:
+    eng = CoInferenceEngine(model, params, SYSP, path=path)
+    eng.configure(8)
+    toks = _tokens(model.cfg, n_requests)
+    # warm up every shape the sweep will dispatch
+    for b in set(sizes) | {1}:
+        eng.serve_batch({"tokens": jnp.asarray(toks[:b])})
+    t_seq = _time_sequential(eng, toks)
+    rows = []
+    for b in sizes:
+        t = _time_batched(eng, toks, b)
+        rows.append({
+            "batch": b,
+            "req_per_s": n_requests / t,
+            "speedup": t_seq / t,
+            "bitwise": _verify_bitwise(eng, toks[:b]),
+        })
+    rows[0]["seq_req_per_s"] = n_requests / t_seq
+    return rows
+
+
+def sweep_bitwidth(model, params, batch: int = 8,
+                   n_requests: int = 16) -> List[dict]:
+    toks = _tokens(model.cfg, n_requests, seed=1)
+    rows = []
+    for b_hat, path in ((4, "kernel"), (8, "kernel"), (8, "fake"),
+                        (16, "fake")):
+        eng = CoInferenceEngine(model, params, SYSP, path=path)
+        eng.configure(b_hat)
+        eng.serve_batch({"tokens": jnp.asarray(toks[:batch])})  # warm
+        eng.serve_batch({"tokens": jnp.asarray(toks[:1])})
+        t_seq = _time_sequential(eng, toks)
+        t_bat = _time_batched(eng, toks, batch)
+        rows.append({
+            "b_hat": b_hat, "path": path,
+            "seq_rps": n_requests / t_seq,
+            "batched_rps": n_requests / t_bat,
+            "speedup": t_seq / t_bat,
+        })
+    return rows
+
+
+def sweep_qos_mix(model, params, n_requests: int = 24,
+                  max_batch: int = 8) -> List[dict]:
+    rows = []
+    cache = CodesignCache()   # shared: later mixes hit earlier solves
+    for mix_name, mix in MIXES.items():
+        eng = BatchedCoInferenceEngine(
+            model, params, SYSP, classes=CLASSES, max_batch=max_batch,
+            path="kernel", codesign_cache=cache)
+        rng = np.random.default_rng(7)
+        for i in range(n_requests):
+            toks = rng.integers(0, model.cfg.vocab_size,
+                                size=int(rng.integers(SEQ // 2, SEQ + 1)))
+            eng.submit(toks, mix[i % len(mix)])
+        eng.drain()
+        rep = eng.report()
+        rows.append({
+            "mix": mix_name,
+            "batches": rep.batches_served,
+            "mean_batch": rep.mean_batch_size,
+            "occupancy": rep.mean_occupancy,
+            "amort_delay_s": rep.total_delay_s / rep.requests_served,
+            "amort_energy_j": rep.total_energy_j / rep.requests_served,
+            "model_rps": rep.throughput_rps,
+            "p1_solves": rep.codesign_misses,
+        })
+    rows[-1]["cache"] = f"{cache.hits} hits / {cache.misses} misses"
+    return rows
+
+
+def run() -> None:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} seq={SEQ} (smoke scale; CPU interpret kernels)")
+
+    bs = sweep_batch_size(model, params)
+    print(f"\nbatch-size sweep, kernel path, b_hat=8 "
+          f"(sequential: {bs[0]['seq_req_per_s']:.1f} req/s):")
+    table(["batch", "req/s", "speedup vs sequential", "bitwise == seq"],
+          [[r["batch"], f"{r['req_per_s']:.1f}", f"{r['speedup']:.2f}x",
+            "yes" if r["bitwise"] else "NO"] for r in bs])
+    at8 = next(r for r in bs if r["batch"] == 8)
+    ok = at8["speedup"] >= 2.0 and at8["bitwise"]
+    print(f"acceptance (>=2x at batch 8, bitwise-identical): "
+          f"{'PASS' if ok else 'FAIL'} ({at8['speedup']:.2f}x)")
+
+    bw = sweep_bitwidth(model, params)
+    print("\nbit-width sweep at batch 8:")
+    table(["b_hat", "path", "seq req/s", "batched req/s", "speedup"],
+          [[r["b_hat"], r["path"], f"{r['seq_rps']:.1f}",
+            f"{r['batched_rps']:.1f}", f"{r['speedup']:.2f}x"] for r in bw])
+
+    qm = sweep_qos_mix(model, params)
+    print("\nQoS-mix sweep through the batched queue (modeled time):")
+    table(["mix", "batches", "mean batch", "occupancy", "amort T (s)",
+           "amort E (J)", "model req/s", "(P1) solves"],
+          [[r["mix"], r["batches"], f"{r['mean_batch']:.2f}",
+            f"{r['occupancy']:.2f}", f"{r['amort_delay_s']:.3e}",
+            f"{r['amort_energy_j']:.3e}", f"{r['model_rps']:.0f}",
+            r["p1_solves"]] for r in qm])
+    print(f"shared codesign cache across mixes: {qm[-1]['cache']} — "
+          "every request after the first of a class reuses its solve")
+
+
+if __name__ == "__main__":
+    run()

@@ -4,7 +4,9 @@ Format (one directory per step, ``step_<N>/``):
 
   tree.msgpack.zst   — flattened pytree: list of (path, dtype, shape, raw
                        little-endian bytes) records, msgpack-framed then
-                       zstd-compressed
+                       zstd-compressed (``zstandard`` is a *soft* dependency:
+                       without it, saves fall back to uncompressed payloads
+                       and the manifest records ``compression: none``)
   manifest.json      — step, leaf count, total bytes, per-file sha256,
                        user metadata (data step, mesh shape, ...)
 
@@ -34,11 +36,24 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # soft dependency: checkpoints fall back to uncompressed without it
+    import zstandard as zstd
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    zstd = None
 
 _TREE_FILE = "tree.msgpack.zst"
 _MANIFEST = "manifest.json"
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _require_zstd(action: str):
+    if zstd is None:
+        raise ModuleNotFoundError(
+            f"cannot {action}: the optional dependency 'zstandard' is not "
+            "installed. Install it (pip install zstandard) or save with "
+            "compress=False.")
+    return zstd
 
 
 def _path_str(path) -> str:
@@ -79,21 +94,34 @@ def _deserialize_records(raw: bytes) -> Dict[str, np.ndarray]:
 
 
 def save_tree(tree: Any, directory: str, step: int,
-              metadata: Optional[Dict[str, Any]] = None) -> str:
-    """Synchronous checkpoint write; returns the step directory."""
+              metadata: Optional[Dict[str, Any]] = None,
+              compress: Optional[bool] = None) -> str:
+    """Synchronous checkpoint write; returns the step directory.
+
+    ``compress=None`` (default) uses zstd when available and falls back to
+    uncompressed otherwise; ``compress=True`` demands zstd and raises a
+    clear ``ModuleNotFoundError`` when the module is missing.
+    """
+    if compress is None:
+        compress = zstd is not None
     step_dir = os.path.join(directory, f"step_{step}")
     tmp_dir = step_dir + ".tmp"
     os.makedirs(tmp_dir, exist_ok=True)
     payload = _serialize_tree(tree)
-    compressed = zstd.ZstdCompressor(level=3).compress(payload)
+    if compress:
+        z = _require_zstd("write a zstd-compressed checkpoint")
+        blob = z.ZstdCompressor(level=3).compress(payload)
+    else:
+        blob = payload
     tree_path = os.path.join(tmp_dir, _TREE_FILE)
     with open(tree_path, "wb") as f:
-        f.write(compressed)
+        f.write(blob)
     manifest = {
         "step": step,
+        "compression": "zstd" if compress else "none",
         "bytes_raw": len(payload),
-        "bytes_compressed": len(compressed),
-        "sha256": hashlib.sha256(compressed).hexdigest(),
+        "bytes_compressed": len(blob),
+        "sha256": hashlib.sha256(blob).hexdigest(),
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp_dir, _MANIFEST), "w") as f:
@@ -124,7 +152,15 @@ def load_tree(directory: str, step: int, like: Any,
     step_dir = os.path.join(directory, f"step_{step}")
     manifest = _verify(step_dir)
     with open(os.path.join(step_dir, _TREE_FILE), "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        blob = f.read()
+    # manifests before the soft-import change carry no "compression" key;
+    # they were always zstd-compressed
+    if manifest.get("compression", "zstd") == "zstd":
+        raw = _require_zstd(
+            f"load the zstd-compressed checkpoint {step_dir}") \
+            .ZstdDecompressor().decompress(blob)
+    else:
+        raw = blob
     records = _deserialize_records(raw)
 
     flat_like = jax.tree_util.tree_leaves_with_path(like)

@@ -6,6 +6,13 @@
   ops.py       — jit'd wrappers (+ CPU interpret fallback, padding,
                  QuantizedLinear record)
   ref.py       — pure-jnp oracles the tests allclose against
+
+Batch contract (DESIGN.md §3, §7): activations may carry any number of
+leading dimensions — ``[S, K]``, ``[B, S, K]``, deeper stacks — which the
+ops.py wrappers flatten into the kernel's M axis and restore on the way
+out.  Rows are computed independently, so the batched serving engine
+(``runtime/serve_engine.py``) packs many requests into one kernel dispatch
+with per-request results bitwise identical to single-request serving.
 """
 
 from .ops import (QuantizedLinear, group_quantize, quantize_linear,  # noqa: F401

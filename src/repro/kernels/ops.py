@@ -4,6 +4,12 @@ Handles: CPU fallback (interpret mode), shape padding to block multiples,
 >2-D activations (leading dims are flattened into M), and a convenience
 ``QuantizedLinear`` record the serving engine stores per weight matrix.
 
+The leading-dim flattening is the serving batch contract (DESIGN.md §7):
+``[B, S, K]`` — B requests packed by the batched engine — and ``[S, K]``
+hit the identical kernel with rows computed independently, so batching
+requests never changes a request's output bits (tests/test_kernels.py::
+test_batch_rows_independent).
+
 On TPU these dispatch the compiled Pallas kernels; on this CPU container the
 same kernel bodies run under ``interpret=True`` (numerics identical, speed
 irrelevant — tests assert allclose vs ref.py).

@@ -2,5 +2,8 @@
 
 from .fault_tolerance import (HostFailure, HostSet, StragglerMonitor,  # noqa: F401
                               Supervisor, SupervisorReport)
-from .serve_engine import CoInferenceEngine, QosClass, ServeStats  # noqa: F401
+from .serve_engine import (BatchedCoInferenceEngine, BatchStats,  # noqa: F401
+                           CodesignCache, CoInferenceEngine, EngineReport,
+                           QosClass, RequestStats, ServeRequest,
+                           ServeResponse, ServeStats)
 from .train_loop import TrainConfig, Trainer  # noqa: F401

@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
 
 from repro.core.baselines import (solve_feasible_random,
                                   solve_fixed_frequency, solve_ppo)

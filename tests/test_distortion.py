@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
 
 from repro.core.distortion import (chain_bound_coefficients, fc_chain_bound,
                                    estimate_grad_norm_H, induced_l1_norm,

@@ -1,0 +1,31 @@
+"""Every ``DESIGN.md §N`` citation in src/ must resolve (the same check CI
+runs via tools/check_design_refs.py)."""
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_design_refs_resolve():
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_design_refs.py"),
+         "--root", str(ROOT)],
+        capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK:" in out.stdout
+
+
+def test_design_refs_catch_dangling(tmp_path):
+    """The checker actually fails on a dangling reference."""
+    (tmp_path / "DESIGN.md").write_text("## §1 Only section\n")
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "mod.py").write_text('"""See DESIGN.md §9."""\n')
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_design_refs.py"),
+         "--root", str(tmp_path)],
+        capture_output=True, text=True, timeout=60)
+    assert out.returncode == 1
+    assert "§9" in out.stdout

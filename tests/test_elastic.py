@@ -20,6 +20,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_smoke
 from repro.data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
 from repro.models.registry import build_model
+from repro.launch.mesh import compat_make_mesh
 from repro.optim import AdamW
 from repro.parallel.sharding import default_rules
 from repro.runtime import TrainConfig, Trainer
@@ -29,9 +30,8 @@ assert len(jax.devices()) == 8, jax.devices()
 
 def make_mesh(n):
     # (data, model) over n devices, TP degree 2
-    return jax.make_mesh((n // 2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=jax.devices()[:n])
+    return compat_make_mesh((n // 2, 2), ("data", "model"),
+                            devices=jax.devices()[:n])
 
 
 def session(ckpt_dir, n_devices, steps):

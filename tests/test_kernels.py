@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
 
 from repro.kernels import ops, ref
 
@@ -100,6 +100,34 @@ def test_leading_dims_flattened():
     want = ref.qmm_ref(x.reshape(-1, 256), codes, scales).reshape(4, 8, 128)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_leading_dims_flattened_int4():
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 2, 8, 256))
+    w = jax.random.normal(jax.random.PRNGKey(6), (256, 128))
+    codes, scales = ref.group_quantize_ref(w, 128, bits=4)
+    packed = ref.pack_int4_ref(codes)
+    out = ops.quantized_matmul_int4(x, packed, scales)
+    assert out.shape == (3, 2, 8, 128)
+    want = ref.qmm_int4_ref(x.reshape(-1, 256), packed,
+                            scales).reshape(3, 2, 8, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_batch_rows_independent(bits):
+    """Serving invariant (DESIGN.md §7): each batch row's result equals the
+    row served alone — bitwise, so batching requests never changes
+    per-request logits."""
+    b, s, k, n = 5, 16, 256, 128
+    x = jax.random.normal(jax.random.PRNGKey(7), (b, s, k))
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, n))
+    ql = ops.quantize_linear(w, bits=bits)
+    batched = np.asarray(ql.apply(x))
+    for i in range(b):
+        single = np.asarray(ql.apply(x[i:i + 1]))
+        np.testing.assert_array_equal(batched[i], single[0])
 
 
 def test_quantize_linear_end_to_end_error_scales_with_bits():

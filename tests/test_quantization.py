@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
 
 from repro.core.quantization import (QuantConfig, dequantize, max_quant_error,
                                      pack_int4, qat_quantize, quantize,

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
 
 from repro.core.rate_distortion import (blahut_arimoto_distortion_rate,
                                         distortion_lower_bound,

@@ -1,0 +1,217 @@
+"""Batched co-inference engine (DESIGN.md §7): bitwise parity with the
+sequential path, codesign-cache behavior, and mixed-QoS accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, CodesignCache,
+                           CoInferenceEngine, QosClass)
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+CLASSES = [
+    QosClass("realtime", t0=1.10, e0=0.9),
+    QosClass("interactive", t0=1.30, e0=1.5),
+    QosClass("batch", t0=2.50, e0=4.0),
+]
+
+
+def _model(arch="stablelm-3b"):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _mixed_requests(eng, cfg, n=9, seed=0):
+    """Round-robin classes, varying sequence lengths; returns id -> req."""
+    rng = np.random.default_rng(seed)
+    sent = {}
+    for i in range(n):
+        qos = CLASSES[i % len(CLASSES)].name
+        toks = rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 17)),
+                            dtype=np.int64)
+        sent[eng.submit(toks, qos)] = (toks, qos)
+    return sent
+
+
+@pytest.mark.parametrize("path", ["fake", "kernel"])
+def test_batched_bitwise_identical_to_sequential(path):
+    cfg, model, params = _model("qwen2-0.5b" if path == "kernel"
+                                else "stablelm-3b")
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=4, path=path)
+    sent = _mixed_requests(eng, cfg)
+    responses = eng.drain()
+    assert len(responses) == len(sent)
+
+    seq = CoInferenceEngine(model, params, SYSP, path=path,
+                            cache_weights=True)
+    for r in responses:
+        toks, qos = sent[r.request_id]
+        sol = eng.solution_for(qos)
+        seq.configure(sol.b_hat, sol.f, sol.f_server)
+        want, _ = seq.serve_batch(
+            {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        np.testing.assert_array_equal(np.asarray(r.logits),
+                                      np.asarray(want[0]))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_ragged_batch_padding_cannot_change_uplink_scale(seed):
+    """Regression: a short request padded next to a longer one must keep
+    its own per-request absmax for b_emb quantization — padding positions
+    are zeroed before transport, so batched logits stay bitwise equal to
+    sequential for *every* seed, not by luck of the draw."""
+    cfg, model, params = _model()
+    eng = BatchedCoInferenceEngine(model, params, SYSP,
+                                   classes=[CLASSES[1]], max_batch=2)
+    rng = np.random.default_rng(seed)
+    short = rng.integers(0, cfg.vocab_size, size=6)
+    long = rng.integers(0, cfg.vocab_size, size=16)
+    rid_short = eng.submit(short, CLASSES[1].name)
+    eng.submit(long, CLASSES[1].name)
+    responses = {r.request_id: r for r in eng.drain()}
+    assert responses[rid_short].logits.shape[0] == 6
+
+    seq = CoInferenceEngine(model, params, SYSP)
+    sol = eng.solution_for(CLASSES[1].name)
+    seq.configure(sol.b_hat, sol.f, sol.f_server)
+    want, stats = seq.serve_batch(
+        {"tokens": jnp.asarray(short, jnp.int32)[None]})
+    np.testing.assert_array_equal(
+        np.asarray(responses[rid_short].logits), np.asarray(want[0]))
+    # and its reported uplink bytes are the request's own, not a padded share
+    assert responses[rid_short].stats.emb_bytes == stats.emb_bytes
+
+
+def test_codesign_cache_hit_miss():
+    cfg, model, params = _model()
+    cache = CodesignCache()
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   codesign_cache=cache)
+    # one miss per distinct (T0, E0); no per-request solves
+    assert cache.misses == len(CLASSES)
+    assert cache.hits == 0
+    for i in range(12):
+        eng.submit(np.arange(8), CLASSES[i % 3].name)
+    eng.drain()
+    assert cache.misses == len(CLASSES)  # serving never re-solved (P1)
+
+    # a second engine sharing the cache resolves every class from it
+    eng2 = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                    codesign_cache=cache)
+    assert cache.hits == len(CLASSES)
+    assert cache.misses == len(CLASSES)
+    for c in CLASSES:
+        assert eng2.solution_for(c.name) == eng.solution_for(c.name)
+    # report() attributes each engine only its own hits/misses, not the
+    # shared cache's cumulative counters
+    assert eng.report().codesign_misses == len(CLASSES)
+    assert eng.report().codesign_hits == 0
+    assert eng2.report().codesign_misses == 0
+    assert eng2.report().codesign_hits == len(CLASSES)
+
+
+def test_codesign_cache_keys_on_numbers_not_names():
+    cache = CodesignCache()
+    a = QosClass("a", t0=1.3, e0=1.5)
+    b = QosClass("b", t0=1.3, e0=1.5)
+    s1 = cache.solve(30.0, SYSP, a, b_max=16)
+    s2 = cache.solve(30.0, SYSP, b, b_max=16)
+    assert s1 == s2
+    assert cache.misses == 1 and cache.hits == 1
+    # different hardware -> different entry
+    cache.solve(30.0, SystemParams(n_flop_agent=3.2e10,
+                                   n_flop_server=1.92e11), a, b_max=16)
+    assert cache.misses == 2
+
+
+def test_mixed_qos_never_shares_a_batch_and_respects_qos():
+    cfg, model, params = _model()
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=8)
+    sent = _mixed_requests(eng, cfg, n=12)
+    responses = eng.drain()
+
+    # every batch is single-class, within max_batch, billed at its own b̂
+    for b in eng.batch_history:
+        assert b.qos in {c.name for c in CLASSES}
+        assert 1 <= b.batch_size <= 8
+        sol = eng.solution_for(b.qos)
+        assert b.b_hat == sol.b_hat
+        assert b.f == sol.f and b.f_server == sol.f_server
+        assert 0.0 < b.occupancy <= 1.0
+
+    # per-request accounting carries the request's own class configuration,
+    # and that configuration satisfies the class's (T0, E0) on the nominal
+    # per-request workload
+    by_name = {c.name: c for c in CLASSES}
+    for r in responses:
+        _, qos = sent[r.request_id]
+        assert r.stats.qos == qos
+        sol = eng.solution_for(qos)
+        assert r.stats.b_hat == sol.b_hat
+        c = by_name[qos]
+        assert sol.delay <= c.t0 * (1 + 1e-6)
+        assert sol.energy <= c.e0 * (1 + 1e-6)
+        assert r.stats.queue_wait_s >= 0.0
+        assert r.stats.total_delay_s == pytest.approx(
+            r.stats.queue_wait_s + r.stats.batch_delay_s)
+
+
+def test_fifo_order_and_max_batch():
+    cfg, model, params = _model()
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=2)
+    ids = [eng.submit(np.arange(8), "realtime") for _ in range(5)]
+    first = eng.step()
+    assert [r.request_id for r in first] == ids[:2]
+    rest = eng.drain()
+    assert [r.request_id for r in rest] == ids[2:]
+    assert [b.batch_size for b in eng.batch_history] == [2, 2, 1]
+
+
+def test_report_aggregates():
+    cfg, model, params = _model()
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=4)
+    _mixed_requests(eng, cfg, n=8)
+    eng.drain()
+    rep = eng.report()
+    assert rep.requests_served == 8
+    assert rep.batches_served == len(eng.batch_history)
+    assert rep.mean_batch_size == pytest.approx(8 / rep.batches_served)
+    assert 0.0 < rep.mean_occupancy <= 1.0
+    assert rep.total_delay_s > 0.0
+    assert rep.throughput_rps == pytest.approx(8 / rep.total_delay_s)
+    assert rep.total_energy_j == pytest.approx(
+        sum(b.energy_j for b in eng.batch_history))
+    # the virtual clock is the sum of batch delays (all arrivals at t=0)
+    assert rep.total_delay_s == pytest.approx(
+        sum(b.batch_delay_s for b in eng.batch_history))
+
+
+def test_submit_validation():
+    cfg, model, params = _model()
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES)
+    with pytest.raises(KeyError):
+        eng.submit(np.arange(4), "no-such-class")
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((0,)), "realtime")
+    with pytest.raises(ValueError):
+        BatchedCoInferenceEngine(
+            model, params, SYSP,
+            classes=[QosClass("impossible", t0=1e-9, e0=1e-9)])
+
+
+def test_infeasible_class_cached_as_none():
+    cache = CodesignCache()
+    bad = QosClass("bad", t0=1e-9, e0=1e-9)
+    assert cache.solve(30.0, SYSP, bad, b_max=16) is None
+    assert cache.solve(30.0, SYSP, bad, b_max=16) is None
+    assert cache.misses == 1 and cache.hits == 1

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Fail if any ``DESIGN.md §N`` reference in ``src/`` points at a section
+that does not exist in DESIGN.md.
+
+Usage:  python tools/check_design_refs.py [--root <repo-root>]
+
+Sections are headings of the form ``## §N <title>``.  References matched:
+``DESIGN.md §N`` (also ``DESIGN.md §N.M``, which resolves to section N).
+Exit code 0 when every reference resolves, 1 otherwise (each dangling
+reference is printed as file:line).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
+REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+
+
+def design_sections(design_path: pathlib.Path) -> set:
+    return {int(m) for m in SECTION_RE.findall(
+        design_path.read_text(encoding="utf-8"))}
+
+
+def find_refs(src_root: pathlib.Path):
+    """Yields (path, line_number, section) for every DESIGN.md §N mention."""
+    for path in sorted(src_root.rglob("*.py")):
+        for i, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            for m in REF_RE.finditer(line):
+                yield path, i, int(m.group(1))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: parent of this script's dir)")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root) if args.root \
+        else pathlib.Path(__file__).resolve().parent.parent
+
+    design = root / "DESIGN.md"
+    if not design.is_file():
+        print(f"FAIL: {design} does not exist")
+        return 1
+    sections = design_sections(design)
+    if not sections:
+        print(f"FAIL: no '## §N' sections found in {design}")
+        return 1
+
+    n_refs, dangling = 0, []
+    for path, line, sec in find_refs(root / "src"):
+        n_refs += 1
+        if sec not in sections:
+            dangling.append((path, line, sec))
+
+    for path, line, sec in dangling:
+        print(f"{path.relative_to(root)}:{line}: DESIGN.md §{sec} "
+              f"does not exist (have §{sorted(sections)})")
+    if dangling:
+        print(f"FAIL: {len(dangling)}/{n_refs} DESIGN.md references dangle")
+        return 1
+    print(f"OK: {n_refs} DESIGN.md references resolve into sections "
+          f"{sorted(sections)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
