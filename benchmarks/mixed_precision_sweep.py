@@ -1,0 +1,136 @@
+"""Mixed-precision vs uniform quantization at matched (T0, E0) budgets
+(DESIGN.md §8).
+
+For a sweep of delay/energy budgets on a qwen2-0.5b smoke model (split
+widened so the agent partition has several layers to allocate over),
+compare:
+
+  * **uniform**  — the largest feasible uniform b̂ (what ``solve_oracle``
+    assigns; the repo's behavior before mixed precision);
+  * **allocated** — the per-layer plan of
+    ``core.mixed_precision.allocate_bits``, which spends the *same*
+    total bit budget where the chain-bound sensitivities A^(l) and
+    per-layer rates λ^(l) say it buys the most distortion reduction.
+
+Both operating points are feasible under the same (T0, E0) — the
+allocation's mean bit-width never exceeds the feasibility frontier the
+uniform b̂ is the floor of — so any distortion difference is pure
+allocation, not extra budget headroom in delay or energy.
+
+Two columns matter:
+
+  * the model-side bound Σ_l A^(l)·D^U(b_l − 1; λ_l) (what the allocator
+    minimizes), and
+  * the *measured* output distortion ‖f(x, W) − f(x, Ŵ)‖₁ through the
+    actual quantized forward (``measured_output_distortion``), which
+    must show the same ordering for the bound to be a useful proxy.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only mixed
+  or  PYTHONPATH=src python benchmarks/mixed_precision_sweep.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import mixed_precision as mp
+from repro.core.cost_model import SystemParams
+from repro.core.distortion import measured_output_distortion
+from repro.core.quantization import QuantConfig
+from repro.models.registry import build_model
+from repro.runtime.qat import fake_quantize_agent
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SPLIT = 3                      # widen the smoke split: 3 agent layers of 4
+SEQ = 24
+BATCH = 4
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+# budgets spanning tight -> loose; uniform b̂ lands on different widths
+BUDGETS = [(1.12, 0.92), (1.18, 1.05), (1.30, 1.50), (1.60, 2.50)]
+
+
+def _measured(model, params, axes, cfg, qcfg, x) -> float:
+    """Output distortion of the whole forward with the agent partition
+    fake-quantized by ``qcfg`` (a QuantConfig or a QuantPlan)."""
+    params_hat = fake_quantize_agent(params, axes, cfg, qcfg, ste=False)
+
+    def apply_fn(p, toks):
+        return model.forward(p, {"tokens": toks})[0]
+
+    return float(measured_output_distortion(apply_fn, params, params_hat, x))
+
+
+def sweep(model, params, stats: mp.LayerStats, x) -> List[dict]:
+    cfg = model.cfg
+    axes = model.logical_axes()
+    rows = []
+    for t0, e0 in BUDGETS:
+        sol = mp.allocate_bits(stats, SYSP, t0, e0, b_max=16)
+        if sol is None:
+            rows.append({"t0": t0, "e0": e0, "infeasible": True})
+            continue
+        ucfg = QuantConfig(bits=sol.uniform_b, granularity="per-channel")
+        plan = mp.plan_from_bits(sol.bits)
+        d_uni = _measured(model, params, axes, cfg, ucfg, x)
+        d_mix = _measured(model, params, axes, cfg, plan, x)
+        rows.append({
+            "t0": t0, "e0": e0, "infeasible": False,
+            "uniform_b": sol.uniform_b, "bits": sol.bits,
+            "mean_bits": sol.mean_bits,
+            "bound_uniform": sol.uniform_objective,
+            "bound_mixed": sol.objective,
+            "measured_uniform": d_uni, "measured_mixed": d_mix,
+        })
+    return rows
+
+
+def run() -> List[dict]:
+    cfg = dataclasses.replace(get_smoke(ARCH), split_layer=SPLIT)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stats = mp.decoder_layer_stats(params, SPLIT)
+    print(f"arch={cfg.name} split={SPLIT}/{cfg.n_layers} "
+          f"lambda^(l)={[f'{v:.1f}' for v in stats.lam]} "
+          f"A^(l)={[f'{v:.3g}' for v in stats.sens]}")
+
+    x = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (BATCH, SEQ)), jnp.int32)
+    rows = sweep(model, params, stats, x)
+
+    table(["T0 (s)", "E0 (J)", "uniform b", "allocated bits", "mean",
+           "bound uni", "bound mix", "meas uni", "meas mix"],
+          [[r["t0"], r["e0"], r["uniform_b"],
+            "/".join(map(str, r["bits"])), f"{r['mean_bits']:.2f}",
+            f"{r['bound_uniform']:.3e}", f"{r['bound_mixed']:.3e}",
+            f"{r['measured_uniform']:.1f}", f"{r['measured_mixed']:.1f}"]
+           for r in rows if not r["infeasible"]])
+
+    feas = [r for r in rows if not r["infeasible"]]
+    bound_ok = all(r["bound_mixed"] <= r["bound_uniform"] * (1 + 1e-9)
+                   for r in feas)
+    bound_strict = any(r["bound_mixed"] < r["bound_uniform"] * (1 - 1e-6)
+                       for r in feas)
+    meas_ok = sum(r["measured_mixed"] <= r["measured_uniform"]
+                  for r in feas)
+    print(f"bound: allocated <= uniform on {len(feas)}/{len(feas)} budgets "
+          f"({'strictly better on >=1' if bound_strict else 'never strict'})"
+          f" -> {'PASS' if bound_ok and bound_strict else 'FAIL'}")
+    print(f"measured output distortion: allocated <= uniform on "
+          f"{meas_ok}/{len(feas)} budgets -> "
+          f"{'PASS' if meas_ok == len(feas) else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,10 @@ Sections (paper artifact -> module):
     table1  coarse frequency profiles               testbed_profiles.py
     kernels quantized-matmul TPU economics          kernel_bench.py
     serve   batched co-inference throughput         serve_throughput.py
+            (also writes BENCH_serve.json at the repo root: req/s,
+             batch size, bit-width, measured distortion — the
+             machine-readable perf record diffed across PRs)
+    mixed   per-layer bit allocation vs uniform     mixed_precision_sweep.py
 """
 
 from __future__ import annotations
@@ -18,8 +22,9 @@ import argparse
 import sys
 import time
 
-from . import (codesign_sweep, distortion, kernel_bench, rd_bounds,
-               serve_throughput, testbed_profiles, weight_stats)
+from . import (codesign_sweep, distortion, kernel_bench,
+               mixed_precision_sweep, rd_bounds, serve_throughput,
+               testbed_profiles, weight_stats)
 from .common import banner
 
 SECTIONS = {
@@ -31,6 +36,8 @@ SECTIONS = {
     "kernels": ("Kernels  quantized matmul", kernel_bench.run),
     "serve": ("Serving  batched vs sequential throughput",
               serve_throughput.run),
+    "mixed": ("Mixed precision  allocated plans vs uniform b̂",
+              mixed_precision_sweep.run),
 }
 
 

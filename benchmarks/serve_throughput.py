@@ -20,12 +20,19 @@ are the point of batching on this CPU container; the modeled delay/energy
 columns come from the paper's cost model (eqs. 4-9) and are what the
 co-design optimizes.
 
+Besides the printed tables, ``run()`` writes the machine-readable
+``BENCH_serve.json`` at the repo root (requests/s per batch size,
+bit-width sweep with measured output distortion, QoS-mix stats) so the
+serving-perf trajectory is tracked across PRs instead of only printed.
+
 Run:  PYTHONPATH=src python -m benchmarks.run --only serve
   or  PYTHONPATH=src python benchmarks/serve_throughput.py
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import List, Sequence
 
@@ -126,6 +133,11 @@ def sweep_batch_size(model, params, path: str = "kernel",
 def sweep_bitwidth(model, params, batch: int = 8,
                    n_requests: int = 16) -> List[dict]:
     toks = _tokens(model.cfg, n_requests, seed=1)
+    # full-precision reference for the distortion column (b_emb=16 so the
+    # uplink quantizer does not blur the weight-quantization signal)
+    ref_eng = CoInferenceEngine(model, params, SYSP, path="fake", b_emb=16)
+    ref_eng.configure(16)
+    ref, _ = ref_eng.serve_batch({"tokens": jnp.asarray(toks[:batch])})
     rows = []
     for b_hat, path in ((4, "kernel"), (8, "kernel"), (8, "fake"),
                         (16, "fake")):
@@ -135,11 +147,14 @@ def sweep_bitwidth(model, params, batch: int = 8,
         eng.serve_batch({"tokens": jnp.asarray(toks[:1])})
         t_seq = _time_sequential(eng, toks)
         t_bat = _time_batched(eng, toks, batch)
+        eng.b_emb = 16   # eng is per-iteration; only the distortion read
+        logits, _ = eng.serve_batch({"tokens": jnp.asarray(toks[:batch])})
         rows.append({
             "b_hat": b_hat, "path": path,
             "seq_rps": n_requests / t_seq,
             "batched_rps": n_requests / t_bat,
             "speedup": t_seq / t_bat,
+            "distortion": float(jnp.sum(jnp.abs(logits - ref))) / batch,
         })
     return rows
 
@@ -173,7 +188,7 @@ def sweep_qos_mix(model, params, n_requests: int = 24,
     return rows
 
 
-def run() -> None:
+def run() -> dict:
     cfg = get_smoke(ARCH)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -191,10 +206,13 @@ def run() -> None:
           f"{'PASS' if ok else 'FAIL'} ({at8['speedup']:.2f}x)")
 
     bw = sweep_bitwidth(model, params)
-    print("\nbit-width sweep at batch 8:")
-    table(["b_hat", "path", "seq req/s", "batched req/s", "speedup"],
+    print("\nbit-width sweep at batch 8 (distortion: sum|Δlogits|/request "
+          "vs full precision at b_emb=16):")
+    table(["b_hat", "path", "seq req/s", "batched req/s", "speedup",
+           "distortion"],
           [[r["b_hat"], r["path"], f"{r['seq_rps']:.1f}",
-            f"{r['batched_rps']:.1f}", f"{r['speedup']:.2f}x"] for r in bw])
+            f"{r['batched_rps']:.1f}", f"{r['speedup']:.2f}x",
+            f"{r['distortion']:.2f}"] for r in bw])
 
     qm = sweep_qos_mix(model, params)
     print("\nQoS-mix sweep through the batched queue (modeled time):")
@@ -206,6 +224,25 @@ def run() -> None:
             r["p1_solves"]] for r in qm])
     print(f"shared codesign cache across mixes: {qm[-1]['cache']} — "
           "every request after the first of a class reuses its solve")
+
+    results = {"arch": cfg.name, "seq": SEQ,
+               "batch_size_sweep": bs, "bitwidth_sweep": bw,
+               "qos_mix_sweep": qm}
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    return results
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the serving-benchmark numbers as ``BENCH_serve.json`` at the
+    repo root — the machine-readable perf record diffed across PRs."""
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_serve.json"
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
 
 
 if __name__ == "__main__":

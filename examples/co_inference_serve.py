@@ -11,7 +11,18 @@ batch-level occupancy/queue-wait stats.  A full-precision engine measures
 the realized output distortion per class.
 
 Run:  PYTHONPATH=src python examples/co_inference_serve.py
+      PYTHONPATH=src python examples/co_inference_serve.py --mixed-precision
+
+With ``--mixed-precision`` each class gets a *per-layer* bit allocation
+(core/mixed_precision.py, DESIGN.md §8) instead of one uniform b̂: the
+allocator spends the same delay/energy budget where the chain-bound
+sensitivities say it buys the most distortion reduction, and each agent
+layer runs the kernel container its bits admit (int4-packed / int8 /
+fp16 fallback).
 """
+
+import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +47,17 @@ N_REQUESTS = 24
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mixed-precision", action="store_true",
+                    help="per-layer bit allocation per class "
+                         "(DESIGN.md §8) instead of one uniform b̂")
+    args = ap.parse_args()
+
     cfg = get_smoke("stablelm-3b")
+    if args.mixed_precision:
+        # widen the agent partition (smoke default is a single layer) so
+        # the allocator has layers to trade bits between
+        cfg = dataclasses.replace(cfg, split_layer=2)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     sysp = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
@@ -45,21 +66,25 @@ def main():
     # are actually int4/int8-resident via the Pallas quantized matmul
     # (interpret mode on CPU); other bit-widths fall back to fake
     # quantization — each batch below prints which path really ran.  One
-    # engine serves all classes, re-materializing weights only on a b̂ it
-    # has not seen yet
+    # engine serves all classes, re-materializing weights only on an
+    # operating point it has not seen yet (weight cache keyed on the
+    # stable plan hash)
     cache = CodesignCache()
     eng = BatchedCoInferenceEngine(model, params, sysp, classes=CLASSES,
                                    max_batch=8, path="kernel",
-                                   codesign_cache=cache)
+                                   codesign_cache=cache,
+                                   mixed_precision=args.mixed_precision)
     clean = CoInferenceEngine(model, params, sysp)
     clean.configure(16)
     clean.b_emb = 16
 
-    print(f"{'class':13s} {'b_hat':>5s} {'f GHz':>6s} {'f~ GHz':>6s} "
+    print(f"{'class':13s} {'bits':>12s} {'f GHz':>6s} {'f~ GHz':>6s} "
           f"{'T (model)':>10s} {'E (model)':>10s}")
     for qos in CLASSES:
         s = eng.solution_for(qos.name)
-        print(f"{qos.name:13s} {s.b_hat:5d} {s.f / 1e9:6.2f} "
+        bdesc = "/".join(map(str, s.bits)) if args.mixed_precision \
+            else str(s.b_hat)
+        print(f"{qos.name:13s} {bdesc:>12s} {s.f / 1e9:6.2f} "
               f"{s.f_server / 1e9:6.2f} {s.delay:9.3f}s {s.energy:9.3f}J")
 
     # mixed traffic: round-robin classes, ragged lengths
@@ -84,7 +109,9 @@ def main():
     print(f"\nserved {len(responses)} requests in "
           f"{len(eng.batch_history)} single-class batches:")
     for b in eng.batch_history:
-        print(f"  [{b.qos:12s}] n={b.batch_size} b_hat={b.b_hat:2d} "
+        bdesc = "/".join(map(str, b.plan_bits)) if b.plan_bits \
+            else f"{b.b_hat:2d}"
+        print(f"  [{b.qos:12s}] n={b.batch_size} b_hat={bdesc} "
               f"({b.agent_path}) occupancy={b.occupancy:.2f} "
               f"amortized T={b.amortized_delay_s * 1e3:7.2f}ms/req "
               f"E={b.amortized_energy_j:.4f}J/req "

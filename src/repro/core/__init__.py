@@ -7,10 +7,16 @@ from .codesign import (CodesignSolution, distortion_gap, solve_oracle,  # noqa: 
                        min_energy_under_deadline)
 from .baselines import (solve_fixed_frequency, solve_feasible_random,  # noqa: F401
                         solve_ppo)
-from .quantization import (QuantConfig, QuantizedTensor, quantize,  # noqa: F401
-                           dequantize, quantize_dequantize, quantize_tree,
+from .quantization import (QuantConfig, QuantPlan, QuantizedTensor,  # noqa: F401
+                           quantize, dequantize, quantize_dequantize,
+                           quantize_tree, quantize_tree_stacked,
                            fake_quantize_tree, qat_quantize, max_quant_error,
-                           pack_int4, unpack_int4)
+                           pack_int4, unpack_int4, as_plan, wire_bytes)
+from .mixed_precision import (LayerStats, MixedSolution,  # noqa: F401
+                              decoder_layer_stats, allocate_bits,
+                              best_uniform_bits, max_mean_bits,
+                              allocation_objective, uniform_objective,
+                              plan_from_bits)
 from .rate_distortion import (exponential_mle, exponential_entropy,  # noqa: F401
                               rate_lower_bound, rate_upper_bound,
                               distortion_lower_bound, distortion_upper_bound,

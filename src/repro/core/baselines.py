@@ -47,7 +47,7 @@ def solve_feasible_random(lam: float, p: SystemParams, t0: float, e0: float,
     out: List[CodesignSolution] = []
     for _ in range(trials):
         b_hat = int(rng.integers(1, b_max + 1))
-        ok, f, fs, _ = feasible_bitwidth(b_hat, lam, p, t0, e0)
+        ok, f, fs, _ = feasible_bitwidth(b_hat, p, t0, e0)
         if ok:
             out.append(_pack(b_hat, f, fs, lam, p))
     return out

@@ -137,10 +137,18 @@ def min_energy_under_deadline(workload_frac: float, p: SystemParams,
     return e, min(f_opt, p.f_max), min(fs_opt, p.f_server_max)
 
 
-def feasible_bitwidth(b_hat: float, lam: float, p: SystemParams,
-                      t0: float, e0: float):
-    """Feasibility of a bit-width under (T0, E0); returns (ok, f, f~, E)."""
-    del lam
+def feasible_bitwidth(b_hat: float, p: SystemParams, t0: float,
+                      e0: float) -> "tuple[bool, float, float, float]":
+    """Can bit-width ``b_hat`` meet (T0, E0) at *some* frequency pair?
+
+    Pure feasibility: the objective (and thus the weight statistic λ)
+    plays no role here, only the cost model — frequencies are chosen by
+    the min-energy-under-deadline subproblem and checked against E0.
+
+    Returns ``(ok, f, f_server, e_min)``; on infeasibility ``f`` and
+    ``f_server`` are NaN and ``e_min`` is the (unmeetable) energy floor,
+    which may be ``inf`` when even the deadline alone cannot be met.
+    """
     w = b_hat / p.b_full
     e_min, f, fs = min_energy_under_deadline(w, p, t0)
     if e_min <= e0 * (1.0 + 1e-9):
@@ -193,7 +201,7 @@ def solve_oracle(lam: float, p: SystemParams, t0: float, e0: float,
     the optimum is the largest feasible bit-width with its min-energy
     frequency assignment."""
     for b_hat in range(b_max, 0, -1):
-        ok, f, fs, _ = feasible_bitwidth(b_hat, lam, p, t0, e0)
+        ok, f, fs, _ = feasible_bitwidth(b_hat, p, t0, e0)
         if ok:
             return _pack(b_hat, f, fs, lam, p)
     return None
@@ -285,7 +293,7 @@ def solve_sca(lam: float, p: SystemParams, t0: float, e0: float,
               ) -> Optional[CodesignSolution]:
     """Algorithm 1 (paper).  Returns None when (P1) is infeasible."""
     # Step 1-2: relax and initialize a feasible local point.
-    ok1, _, _, _ = feasible_bitwidth(1.0, lam, p, t0, e0)
+    ok1, _, _, _ = feasible_bitwidth(1.0, p, t0, e0)
     if not ok1:
         return None
     b_k, v_k = 1.0 + 1e-3, 1.0 / (1.0 + 1e-3)
@@ -310,7 +318,7 @@ def solve_sca(lam: float, p: SystemParams, t0: float, e0: float,
     b_round = int(round(b_k))
     b_round = max(1, min(b_max, b_round))
     for b_hat in range(b_round, 0, -1):
-        ok, f_r, fs_r, _ = feasible_bitwidth(b_hat, lam, p, t0, e0)
+        ok, f_r, fs_r, _ = feasible_bitwidth(b_hat, p, t0, e0)
         if ok:
             return _pack(b_hat, f_r, fs_r, lam, p, iterations=iters,
                          b_relaxed=b_k)

@@ -1,0 +1,298 @@
+"""Layer-wise mixed-precision bit allocation (DESIGN.md §8).
+
+The codesign of ``codesign.py`` fits one global λ and assigns one uniform
+b̂ to the whole agent partition.  The paper's own machinery is finer
+grained: the distortion-rate bounds of Props. 4.1/4.2 are functions of a
+*per-layer* rate parameter λ^(l), and the chain bound of Prop. 3.1 weighs
+layer l's parameter distortion by a sensitivity coefficient A^(l)
+(`distortion.chain_bound_coefficients`).  This module exploits both:
+
+  * :func:`decoder_layer_stats` — per-agent-layer λ^(l) via
+    ``rate_distortion.exponential_mle`` and A^(l) via the chain bound,
+    computed on the stacked-layers parameter tree of the DecoderLM
+    families;
+  * :func:`allocate_bits` — minimize  Σ_l A^(l) · D^U(b_l - 1; λ_l)
+    over b_l ∈ {1..B_max} subject to the same (T0, E0) feasibility as
+    problem (P1), via greedy marginal-gain descent (exact for this
+    separable convex objective under the total-bit budget implied by the
+    oracle frequency subproblem ``codesign.min_energy_under_deadline``);
+  * :func:`plan_from_bits` — wrap an allocation into a
+    :class:`~repro.core.quantization.QuantPlan` the serving engine and
+    the tree quantizers consume.
+
+Feasibility reduction: the DecoderLM agent layers are FLOP-homogeneous,
+so the cost model's workload fraction under a per-layer plan is
+mean(b_l)/b — delay and energy depend on the allocation only through its
+*mean* bit-width.  The (T0, E0) region therefore maps to a scalar budget
+B* = max feasible mean bits (monotone in the workload fraction, found by
+bisection), and the discrete problem becomes "spend ⌊B*·L⌋ bits over L
+layers" — which greedy descent on the convex per-layer distortion curves
+solves exactly.  A uniform allocation is the degenerate output when the
+budget divides evenly and the layer statistics are homogeneous.
+
+Host-side float64 numpy, like ``codesign.py``: this runs once per
+(model, QoS class), not in the serving hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codesign import _d_upper, min_energy_under_deadline
+from .cost_model import SystemParams, total_delay, total_energy
+from .distortion import chain_bound_coefficients, induced_l1_norm
+from .quantization import QuantConfig, QuantPlan, quantize_dequantize
+from .rate_distortion import exponential_mle
+
+__all__ = [
+    "LayerStats",
+    "MixedSolution",
+    "agent_layer_matrices",
+    "layer_lambdas",
+    "layer_sensitivities",
+    "decoder_layer_stats",
+    "max_mean_bits",
+    "best_uniform_bits",
+    "allocation_objective",
+    "uniform_objective",
+    "allocate_bits",
+    "plan_from_bits",
+]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer statistics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerStats:
+    """Per-agent-layer rate-distortion statistics.
+
+    ``lam[l]``  — Exponential MLE rate of layer l's weight magnitudes
+    (paper eq. (3), fitted per layer instead of globally).
+    ``sens[l]`` — chain-bound sensitivity A^(l) of Prop. 3.1, normalized
+    so min(sens) == 1 (only ratios matter for the allocation; the common
+    server-side suffix factor cancels — see :func:`layer_sensitivities`).
+    """
+
+    lam: tuple
+    sens: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "lam", tuple(float(x) for x in self.lam))
+        object.__setattr__(self, "sens", tuple(float(x) for x in self.sens))
+        if len(self.lam) != len(self.sens):
+            raise ValueError("lam and sens must have equal length")
+        if not self.lam:
+            raise ValueError("need at least one layer")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.lam)
+
+    def key(self) -> tuple:
+        """Hashable cache key (rounded so float jitter can't split it)."""
+        return (tuple(round(x, 10) for x in self.lam),
+                tuple(round(x, 10) for x in self.sens))
+
+
+def agent_layer_matrices(params, split: int) -> list:
+    """Per-layer 2-D weight matrices of the agent partition.
+
+    The DecoderLM families stack per-layer weights on a leading axis
+    (leaves of ndim >= 3 under ``params["layers"]``).  For each layer
+    l < split this returns every such leaf's slice, reshaped to
+    ``[out, in*]`` — the induced-L1 convention of ``distortion.py``
+    (columns index the input dimension).
+    """
+    out = [[] for _ in range(split)]
+    for leaf in jax.tree_util.tree_leaves(params["layers"]):
+        if not (hasattr(leaf, "ndim") and leaf.ndim >= 3
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            continue
+        for l in range(min(split, leaf.shape[0])):
+            w = leaf[l]
+            out[l].append(w.reshape(-1, w.shape[-1]).T)
+    if any(not mats for mats in out):
+        raise ValueError(f"no stacked weight leaves for some of the "
+                         f"{split} agent layers")
+    return out
+
+
+def layer_lambdas(layer_mats: Sequence[Sequence[jax.Array]]) -> np.ndarray:
+    """λ^(l): the Exponential MLE over all of layer l's weight magnitudes
+    (``exponential_mle``, i.e. 1 / mean|θ^(l)| — paper eq. (3) per layer)."""
+    return np.asarray(
+        [float(exponential_mle(jnp.concatenate(
+            [m.ravel() for m in mats]))) for mats in layer_mats],
+        np.float64)
+
+
+def layer_sensitivities(layer_mats: Sequence[Sequence[jax.Array]],
+                        ref_bits: int = 8) -> np.ndarray:
+    """Chain-bound coefficients A^(l) of Prop. 3.1 over the agent layers.
+
+    Each transformer layer is represented by its norm-dominant matrix
+    (the slice with the largest induced-L1 norm — for a column-wise
+    concatenation of a layer's matmuls the induced norm *is* that max),
+    and τ^(l) of Assumption 3 is instantiated as the realized induced-L1
+    quantization error of that representative at ``ref_bits``.  The
+    server layers (full precision) multiply every agent A^(l) by the same
+    ∏(‖W‖₁) suffix, so they drop out of the allocation and are omitted.
+    """
+    reps = []
+    for mats in layer_mats:
+        norms = [float(induced_l1_norm(m)) for m in mats]
+        reps.append(mats[int(np.argmax(norms))])
+    cfg = QuantConfig(bits=ref_bits, scheme="uniform",
+                      granularity="per-channel")
+    taus = [induced_l1_norm(w - quantize_dequantize(w, cfg)) for w in reps]
+    coeffs = np.asarray([float(c) for c in
+                         chain_bound_coefficients(reps, taus)], np.float64)
+    return coeffs / max(float(coeffs.min()), 1e-300)
+
+
+def decoder_layer_stats(params, split: int, ref_bits: int = 8) -> LayerStats:
+    """λ^(l) and A^(l) for the agent partition of a stacked-layers model."""
+    mats = agent_layer_matrices(params, split)
+    return LayerStats(lam=tuple(layer_lambdas(mats)),
+                      sens=tuple(layer_sensitivities(mats, ref_bits)))
+
+
+# ---------------------------------------------------------------------------
+# Feasibility: the (T0, E0) region as a mean-bit budget
+# ---------------------------------------------------------------------------
+
+def _mean_bits_feasible(mean_b: float, p: SystemParams, t0: float,
+                        e0: float) -> bool:
+    e_min, _, _ = min_energy_under_deadline(mean_b / p.b_full, p, t0)
+    return e_min <= e0 * (1.0 + 1e-9)
+
+
+def max_mean_bits(p: SystemParams, t0: float, e0: float,
+                  b_max: int = 16) -> Optional[float]:
+    """Largest mean agent bit-width meeting (T0, E0), or None if even
+    mean 1 is infeasible.  Monotone in the workload fraction (delay is
+    linear in b̄, min-energy increasing), so plain bisection."""
+    if not _mean_bits_feasible(1.0, p, t0, e0):
+        return None
+    if _mean_bits_feasible(float(b_max), p, t0, e0):
+        return float(b_max)
+    lo, hi = 1.0, float(b_max)
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if _mean_bits_feasible(mid, p, t0, e0):
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def best_uniform_bits(p: SystemParams, t0: float, e0: float,
+                      b_max: int = 16) -> Optional[int]:
+    """Largest feasible *uniform* b̂ — what ``solve_oracle`` assigns."""
+    b_star = max_mean_bits(p, t0, e0, b_max)
+    return None if b_star is None else int(math.floor(b_star + 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# The allocator
+# ---------------------------------------------------------------------------
+
+def allocation_objective(stats: LayerStats, bits: Sequence[int]) -> float:
+    """Σ_l A^(l) · D^U(b_l - 1; λ_l) — the plan's distortion bound."""
+    return float(sum(a * _d_upper(b - 1.0, lam)
+                     for a, lam, b in zip(stats.sens, stats.lam, bits)))
+
+
+def uniform_objective(stats: LayerStats, b_hat: int) -> float:
+    """The same bound under a uniform b̂ (comparison baseline)."""
+    return allocation_objective(stats, [b_hat] * stats.n_layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedSolution:
+    """One per-layer bit allocation + its frequency assignment."""
+
+    bits: tuple                 # per agent layer, len == stats.n_layers
+    f: float                    # device frequency realizing feasibility
+    f_server: float
+    objective: float            # Σ A^(l) D^U(b_l - 1; λ_l)
+    uniform_b: int              # best uniform b̂ under the same (T0, E0)
+    uniform_objective: float    # the bound that uniform b̂ achieves
+    mean_bits: float
+    delay: float                # realized T at mean_bits
+    energy: float               # realized E at mean_bits
+    feasible: bool = True
+
+    @property
+    def b_hat(self) -> int:
+        """Integer summary bit-width (display / legacy stats fields)."""
+        return int(round(self.mean_bits))
+
+
+def allocate_bits(stats: LayerStats, p: SystemParams, t0: float, e0: float,
+                  b_max: int = 16) -> Optional[MixedSolution]:
+    """Greedy/water-filling bit allocation under the (P1) constraints.
+
+    Start every layer at 1 bit (the cheapest plan; if that is infeasible
+    so is (P1) and we return None, matching ``solve_sca``), then spend
+    the remaining budget one bit at a time on the layer with the largest
+    marginal bound decrease A^(l)·[D^U(b_l-1) - D^U(b_l)].  D^U is
+    convex decreasing in b, so marginal gains shrink along each layer's
+    curve and the greedy optimum is exact for the separable objective.
+    """
+    b_star = max_mean_bits(p, t0, e0, b_max)
+    if b_star is None:
+        return None
+    n = stats.n_layers
+    budget = int(math.floor(b_star * n + 1e-9))   # total bits to spend
+    bits = [1] * n
+    budget -= n
+
+    def gain(l: int, b: int) -> float:
+        return stats.sens[l] * (_d_upper(b - 1.0, stats.lam[l])
+                                - _d_upper(float(b), stats.lam[l]))
+
+    # max-heap of (−gain, layer) for the next bit on each layer
+    heap = [(-gain(l, 1), l) for l in range(n)]
+    heapq.heapify(heap)
+    while budget > 0 and heap:
+        neg, l = heapq.heappop(heap)
+        if bits[l] >= b_max:
+            continue
+        bits[l] += 1
+        budget -= 1
+        if bits[l] < b_max:
+            heapq.heappush(heap, (-gain(l, bits[l]), l))
+
+    mean_b = sum(bits) / n
+    e, f, fs = min_energy_under_deadline(mean_b / p.b_full, p, t0)
+    u_b = int(math.floor(b_star + 1e-9))
+    return MixedSolution(
+        bits=tuple(bits), f=f, f_server=fs,
+        objective=allocation_objective(stats, bits),
+        uniform_b=u_b, uniform_objective=uniform_objective(stats, u_b),
+        mean_bits=mean_b,
+        delay=float(total_delay(mean_b, f, fs, p)),
+        energy=float(total_energy(mean_b, f, fs, p)))
+
+
+def plan_from_bits(bits: Sequence[int], *, scheme: str = "uniform",
+                   granularity: str = "per-channel",
+                   group_size: int = 128,
+                   default_bits: int = 16) -> QuantPlan:
+    """Wrap an allocation into the plan the quantizers/engine consume.
+
+    Layers beyond the allocation (the server partition) resolve to
+    ``default_bits`` = 16, i.e. stay full precision."""
+    return QuantPlan.from_layer_bits(
+        bits, scheme=scheme, granularity=granularity,
+        group_size=group_size, default_bits=default_bits)

@@ -29,16 +29,21 @@ import jax.numpy as jnp
 
 __all__ = [
     "QuantConfig",
+    "QuantPlan",
+    "as_plan",
+    "tree_path_str",
     "quantize_dequantize",
     "quantize",
     "dequantize",
     "quantize_tree",
     "fake_quantize_tree",
+    "quantize_tree_stacked",
     "qat_quantize",
     "uniform_step_size",
     "max_quant_error",
     "pack_int4",
     "unpack_int4",
+    "wire_bytes",
 ]
 
 Scheme = Literal["uniform", "pot-log"]
@@ -68,6 +73,130 @@ class QuantConfig:
     def magnitude_levels(self) -> int:
         """Number of magnitude codepoints: 2^(bits-1) (sign kept separately)."""
         return 2 ** (self.bits - 1)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision plans (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _key_part(k) -> str:
+    """One pytree key entry -> path component (DictKey/SequenceKey/attr)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def tree_path_str(key_path) -> str:
+    """Canonical '/'-joined path of a tree_map_with_path key path.
+
+    ``{"layers": {"attn": {"wq": ...}}}`` -> ``"layers/attn/wq"``.  This is
+    the string :class:`QuantPlan` entries match against.
+    """
+    return "/".join(_key_part(k) for k in key_path)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """Per-layer (per-subtree) bit-allocation plan.
+
+    ``entries`` is an ordered map of path prefixes to bit-widths, e.g.
+    ``(("layers/0", 4), ("layers/1", 8))``.  A leaf resolves to the bits of
+    its *longest* matching prefix ('/'-boundary aware), falling back to
+    ``default_bits``.  ``scheme``/``granularity``/``group_size``/``min_ndim``
+    play the same role as on :class:`QuantConfig` and are shared by every
+    resolved per-leaf config.
+
+    A plan with no entries is the degenerate uniform case: every leaf
+    resolves to ``default_bits``, making the plan-aware tree quantizers
+    bitwise identical to the single-:class:`QuantConfig` API.
+    """
+
+    entries: tuple = ()                 # ((path_prefix, bits), ...)
+    default_bits: int = 16
+    scheme: Scheme = "uniform"
+    granularity: Granularity = "per-channel"
+    group_size: int = 128
+    min_ndim: int = 2
+
+    def __post_init__(self):
+        ent = tuple((str(p), int(b)) for p, b in self.entries)
+        object.__setattr__(self, "entries", ent)
+        for p, b in ent:
+            if b < 1:
+                raise ValueError(f"bits must be >= 1 for {p!r}, got {b}")
+        if self.default_bits < 1:
+            raise ValueError(f"default_bits must be >= 1, "
+                             f"got {self.default_bits}")
+
+    # -- construction -------------------------------------------------
+    @staticmethod
+    def uniform(bits: int, **kw) -> "QuantPlan":
+        """The degenerate single-bit-width plan (no entries)."""
+        return QuantPlan(entries=(), default_bits=bits, **kw)
+
+    @staticmethod
+    def from_layer_bits(bits, prefix: str = "layers", **kw) -> "QuantPlan":
+        """Plan keyed ``<prefix>/<i> -> bits[i]`` (the allocator's output)."""
+        ent = tuple((f"{prefix}/{i}", int(b)) for i, b in enumerate(bits))
+        return QuantPlan(entries=ent, **kw)
+
+    # -- resolution ---------------------------------------------------
+    def resolve_bits(self, path: str) -> int:
+        """Bits of the longest entry prefix matching ``path``."""
+        best, best_len = self.default_bits, -1
+        for prefix, bits in self.entries:
+            if (path == prefix or path.startswith(prefix + "/")) \
+                    and len(prefix) > best_len:
+                best, best_len = bits, len(prefix)
+        return best
+
+    def config_for(self, path: str) -> QuantConfig:
+        return QuantConfig(bits=self.resolve_bits(path), scheme=self.scheme,
+                           granularity=self.granularity,
+                           group_size=self.group_size,
+                           min_ndim=self.min_ndim)
+
+    def layer_bits(self, i: int, prefix: str = "layers") -> int:
+        return self.resolve_bits(f"{prefix}/{i}")
+
+    def config_for_layer(self, i: int, prefix: str = "layers") -> QuantConfig:
+        return self.config_for(f"{prefix}/{i}")
+
+    def layer_bit_list(self, n_layers: int,
+                       prefix: str = "layers") -> tuple:
+        return tuple(self.layer_bits(i, prefix) for i in range(n_layers))
+
+    # -- aggregate views ----------------------------------------------
+    def uniform_layer_bits(self, n_layers: int,
+                           prefix: str = "layers"):
+        """The single bit-width all of layers [0, n) resolve to, or None."""
+        bs = set(self.layer_bit_list(n_layers, prefix))
+        return bs.pop() if len(bs) == 1 else None
+
+    def mean_bits(self, n_layers: int, prefix: str = "layers") -> float:
+        bl = self.layer_bit_list(n_layers, prefix)
+        return sum(bl) / max(len(bl), 1)
+
+    # -- caching ------------------------------------------------------
+    def key(self) -> tuple:
+        """Hashable, order-stable cache key (weight caches key on this)."""
+        return ("plan", self.entries, self.default_bits, self.scheme,
+                self.granularity, self.group_size, self.min_ndim)
+
+    def plan_hash(self) -> str:
+        """Short stable hex digest of :meth:`key` (logs / JSON reports)."""
+        import hashlib
+        return hashlib.sha1(repr(self.key()).encode()).hexdigest()[:12]
+
+
+def as_plan(cfg) -> QuantPlan:
+    """Lift a single :class:`QuantConfig` to the degenerate uniform plan."""
+    if isinstance(cfg, QuantPlan):
+        return cfg
+    return QuantPlan.uniform(cfg.bits, scheme=cfg.scheme,
+                             granularity=cfg.granularity,
+                             group_size=cfg.group_size, min_ndim=cfg.min_ndim)
 
 
 # ---------------------------------------------------------------------------
@@ -174,11 +303,12 @@ def quantize_dequantize(x: jax.Array, cfg: QuantConfig) -> jax.Array:
 class QuantizedTensor:
     """Integer codes + scale, the storage format for quantized weights.
 
-    ``codes`` is int8 regardless of bits<=8 (int4 values live in [-7, 7];
-    use :func:`pack_int4` for the 2-per-byte wire format).
+    ``codes`` is int8 for bits <= 8 (int4 values live in [-7, 7]; use
+    :func:`pack_int4` for the 2-per-byte wire format) and int16 for
+    9..16 bits — the containers :func:`wire_bytes` bills for.
     """
 
-    codes: jax.Array          # int8, same shape as original
+    codes: jax.Array          # int8 (<= 8 bits) / int16, original shape
     scale: jax.Array          # broadcastable to codes.shape
     bits: int
     scheme: Scheme
@@ -207,11 +337,16 @@ class QuantizedTensor:
         return dequantize(self, dtype)
 
     def nbytes_effective(self) -> int:
-        """Storage bytes at the nominal bit-width (what goes over the wire)."""
+        """Realizable wire/storage bytes for the codes + f32 scales.
+
+        Uses the byte layouts that actually exist (:func:`wire_bytes`):
+        bits <= 4 ships two codes per byte via :func:`pack_int4`; there is
+        no sub-byte packing beyond that, so 5..8 bits cost one byte per
+        code and 9..16 two — not the ``(n*bits+7)//8`` idealization."""
         import numpy as _np
         n = int(_np.prod(self.codes.shape))
         scale_bytes = int(_np.prod(self.scale.shape)) * 4
-        return (n * self.bits + 7) // 8 + scale_bytes
+        return wire_bytes(n, self.bits) + scale_bytes
 
 
 jax.tree_util.register_pytree_node(
@@ -227,17 +362,37 @@ def quantize(x: jax.Array, cfg: QuantConfig) -> QuantizedTensor:
         raise NotImplementedError(
             "integer-code storage implemented for the uniform scheme; "
             "pot-log uses quantize_dequantize (codes are exponents).")
+    if cfg.bits > 16:
+        raise ValueError(f"no integer container for bits={cfg.bits} (>16)")
     amax = _absmax(x, cfg)
     step = uniform_step_size(amax, cfg.bits)
     step = jnp.where(step <= 0, 1.0, step)
     levels = max(2 ** (cfg.bits - 1) - 1, 1)
-    q = jnp.clip(jnp.round(x / step), -levels, levels).astype(jnp.int8)
+    # container must hold ±levels: int8 through 8 bits, int16 above —
+    # an int8 cast at 9..16 bits would silently wrap the codes
+    dtype = jnp.int8 if cfg.bits <= 8 else jnp.int16
+    q = jnp.clip(jnp.round(x / step), -levels, levels).astype(dtype)
     return QuantizedTensor(codes=q, scale=step.astype(jnp.float32),
                            bits=cfg.bits, scheme=cfg.scheme)
 
 
 def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
     return (qt.codes.astype(dtype) * qt.scale.astype(dtype)).astype(dtype)
+
+
+def wire_bytes(n_codes: int, bits: int) -> int:
+    """Bytes to ship ``n_codes`` integer codes at ``bits`` (scales excluded).
+
+    The only sub-byte container in this codebase is :func:`pack_int4`
+    (two codes per byte), which holds any code of <= 4 bits; wider codes
+    are int8- or int16-resident.  So the realizable sizes are
+    ceil(n/2) for bits <= 4, n for 5..8, and 2n above.
+    """
+    if bits <= 4:
+        return (n_codes + 1) // 2
+    if bits <= 8:
+        return n_codes
+    return 2 * n_codes
 
 
 def pack_int4(codes: jax.Array) -> jax.Array:
@@ -269,38 +424,83 @@ def _should_quantize(path, leaf, cfg: QuantConfig) -> bool:
         jnp.issubdtype(leaf.dtype, jnp.floating)
 
 
-def fake_quantize_tree(params: Any, cfg: QuantConfig) -> Any:
-    """Apply quantize-dequantize to every eligible leaf of a param pytree."""
+def fake_quantize_tree(params: Any, cfg) -> Any:
+    """Apply quantize-dequantize to every eligible leaf of a param pytree.
+
+    ``cfg`` is a :class:`QuantConfig` (uniform bits) or a
+    :class:`QuantPlan` (per-leaf bits via longest-prefix path match).
+
+    Plan prefixes match the *dict path* of each leaf.  Scan-over-layers
+    models stack all layers into one leaf (path ``layers/attn/wq``, no
+    layer id), so an allocator plan keyed ``layers/<i>`` will not match
+    here — use :func:`quantize_tree_stacked` or
+    ``runtime.qat.fake_quantize_agent``, which index the leading axis."""
+    plan = as_plan(cfg)
+
     def f(path, leaf):
-        if _should_quantize(path, leaf, cfg):
-            return quantize_dequantize(leaf, cfg)
+        lc = plan.config_for(tree_path_str(path))
+        if _should_quantize(path, leaf, lc):
+            return quantize_dequantize(leaf, lc)
         return leaf
     return jax.tree_util.tree_map_with_path(f, params)
 
 
-def quantize_tree(params: Any, cfg: QuantConfig) -> Any:
-    """Integer-quantize every eligible leaf; others pass through unchanged."""
+def quantize_tree(params: Any, cfg) -> Any:
+    """Integer-quantize every eligible leaf; others pass through unchanged.
+
+    Accepts a :class:`QuantConfig` or a :class:`QuantPlan`; a uniform
+    plan is bitwise identical to the single-config call.  Plan prefixes
+    match dict paths — for stacked-layers models (one leaf per weight,
+    layers on the leading axis) see the caveat on
+    :func:`fake_quantize_tree`."""
+    plan = as_plan(cfg)
+
     def f(path, leaf):
-        if _should_quantize(path, leaf, cfg):
-            return quantize(leaf, cfg)
+        lc = plan.config_for(tree_path_str(path))
+        if _should_quantize(path, leaf, lc):
+            return quantize(leaf, lc)
         return leaf
     return jax.tree_util.tree_map_with_path(f, params)
 
 
-def quantize_tree_stacked(params: Any, cfg: QuantConfig,
+def quantize_tree_stacked(params: Any, cfg,
                           min_stacked_ndim: int = 3) -> Any:
     """Like :func:`quantize_tree` but scale computation is vmapped over the
     leading (stacked-layers) axis, so per-channel scales are per *layer* —
     the form the scan-over-layers models consume when serving with
     int8-resident weights.  Only >=3-D leaves (stacked weight matrices) are
     quantized; stacked 1-D-per-layer vectors (norm gains, biases) stay in
-    float, matching the paper's sign/magnitude treatment of weights only."""
+    float, matching the paper's sign/magnitude treatment of weights only.
+
+    With a :class:`QuantPlan`, layer i of each stacked leaf quantizes at
+    ``plan.layer_bits(i)`` (plan keys are ``layers/<i>``, indexing the
+    leading axis — not the leaf's dict path, which carries no layer id).
+    Dequantization is ``codes * scale`` and thus bits-independent, so
+    heterogeneous per-layer levels stack into one
+    :class:`QuantizedTensor`; its ``bits`` field records the max (the
+    value byte-accounting must assume)."""
+    plan = as_plan(cfg)
+    base = plan.config_for("")   # shared scheme/granularity/min_ndim
+
     def f(path, leaf):
-        if not _should_quantize(path, leaf, cfg):
+        if not _should_quantize(path, leaf, base):
             return leaf
-        if leaf.ndim >= min_stacked_ndim:
-            return jax.vmap(lambda w: quantize(w, cfg))(leaf)
-        return leaf
+        if leaf.ndim < min_stacked_ndim:
+            return leaf
+        n = leaf.shape[0]
+        bits = plan.layer_bit_list(n)
+        if len(set(bits)) == 1:
+            lc = dataclasses.replace(base, bits=bits[0])
+            return jax.vmap(lambda w: quantize(w, lc))(leaf)
+        qts = [quantize(leaf[i], dataclasses.replace(base, bits=bits[i]))
+               for i in range(n)]
+        # one container for the whole stack: wide enough for the widest
+        # layer (int8 unless some layer needs int16)
+        cdtype = jnp.int8 if max(bits) <= 8 else jnp.int16
+        return QuantizedTensor(
+            codes=jnp.stack([q.codes.astype(cdtype) for q in qts]),
+            scale=jnp.stack([q.scale for q in qts]),
+            bits=max(bits), scheme=base.scheme)
     return jax.tree_util.tree_map_with_path(f, params)
 
 

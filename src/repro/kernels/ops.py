@@ -128,18 +128,25 @@ def group_quantize(w: jax.Array, *, group_size: int = 128, bits: int = 8,
 
 @dataclasses.dataclass(frozen=True)
 class QuantizedLinear:
-    """One HBM-resident quantized weight matrix (int8 or packed int4)."""
+    """One HBM-resident quantized weight matrix (int8 or packed int4).
+
+    ``bits`` is the *quantization* bit-width (1..8); the storage
+    container follows from it — codes of <= 4 bits are nibble-packed two
+    per byte (the int4 kernel dequantizes any code in [-7, 7]), wider
+    codes are int8-resident.  This is the per-layer knob the
+    mixed-precision serving plans turn (DESIGN.md §8).
+    """
 
     codes: jax.Array            # int8 [K, N] or packed [K/2, N]
     scales: jax.Array           # f32 [K//G, N]
-    bits: int                   # 8 or 4
+    bits: int                   # quantization bits, 1..8
     k: int                      # logical contraction dim
 
     def __matmul__(self, other):
         raise TypeError("use .apply(x)")
 
     def apply(self, x: jax.Array) -> jax.Array:
-        if self.bits == 4:
+        if self.bits <= 4:
             return quantized_matmul_int4(x, self.codes, self.scales)
         return quantized_matmul(x, self.codes, self.scales)
 
@@ -158,12 +165,16 @@ jax.tree_util.register_pytree_node(
 
 def quantize_linear(w: jax.Array, *, bits: int = 8,
                     group_size: int = 128) -> QuantizedLinear:
-    """Quantize one [K, N] weight for HBM residency (int8 or packed int4)."""
+    """Quantize one [K, N] weight for HBM residency.
+
+    bits <= 4 quantizes at ``bits``-bit levels then packs two codes per
+    byte along K (served by the int4 kernel); 5..8 stays int8-resident.
+    """
+    if not 1 <= bits <= 8:
+        raise ValueError(f"kernel residency needs bits in 1..8, got {bits}")
     k = w.shape[0]
-    if bits == 4:
-        # quantize at 4-bit levels then pack two codes per byte along K
-        codes, scales = group_quantize(w, group_size=group_size, bits=4)
-        packed = _ref.pack_int4_ref(codes)
-        return QuantizedLinear(codes=packed, scales=scales, bits=4, k=k)
     codes, scales = group_quantize(w, group_size=group_size, bits=bits)
-    return QuantizedLinear(codes=codes, scales=scales, bits=8, k=k)
+    if bits <= 4:
+        return QuantizedLinear(codes=_ref.pack_int4_ref(codes),
+                               scales=scales, bits=bits, k=k)
+    return QuantizedLinear(codes=codes, scales=scales, bits=bits, k=k)

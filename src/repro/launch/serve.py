@@ -8,7 +8,9 @@ request queue packed into per-class batches, agent stage at b̂ ->
 embedding uplink -> server stage -> logits, with batch-level and
 per-request delay/energy accounting.  ``--engine sequential`` runs the
 original one-request-at-a-time path for comparison; the two produce
-bitwise-identical logits per request.
+bitwise-identical logits per request.  ``--mixed-precision`` replaces
+the scalar b̂ per class with the layer-wise bit allocation of
+``core.mixed_precision`` (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -44,6 +46,9 @@ def main(argv=None):
     ap.add_argument("--t0", type=float, default=3.5)
     ap.add_argument("--e0", type=float, default=2.0)
     ap.add_argument("--path", default="fake", choices=["fake", "kernel"])
+    ap.add_argument("--mixed-precision", action="store_true",
+                    help="per-layer bit allocation (DESIGN.md §8) instead "
+                         "of one uniform b̂ per QoS class")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -68,14 +73,27 @@ def serve_sequential(cfg, model, params, sysp, args):
           f"lambda_hat={eng.lam:.2f} path={args.path} engine=sequential")
 
     qos = QosClass("interactive", t0=args.t0, e0=args.e0)
-    sol = eng.auto_configure(qos)
-    if sol is None:
-        print(f"(P1) infeasible under T0={args.t0}s E0={args.e0}J")
-        return 1
-    print(f"codesign: b_hat={sol.b_hat} f={sol.f / 1e9:.2f}GHz "
-          f"f~={sol.f_server / 1e9:.2f}GHz gap={sol.objective:.3e} "
-          f"T={sol.delay:.3f}s E={sol.energy:.3f}J "
-          f"(SCA iters={sol.iterations})")
+    if args.mixed_precision:
+        msol = eng.auto_configure_mixed(qos)
+        if msol is None:
+            print(f"(P1) infeasible under T0={args.t0}s E0={args.e0}J")
+            return 1
+        print(f"mixed codesign: bits={list(msol.bits)} "
+              f"(mean {msol.mean_bits:.2f}, uniform best "
+              f"b_hat={msol.uniform_b}) f={msol.f / 1e9:.2f}GHz "
+              f"f~={msol.f_server / 1e9:.2f}GHz "
+              f"bound={msol.objective:.3e} (uniform "
+              f"{msol.uniform_objective:.3e}) "
+              f"T={msol.delay:.3f}s E={msol.energy:.3f}J")
+    else:
+        sol = eng.auto_configure(qos)
+        if sol is None:
+            print(f"(P1) infeasible under T0={args.t0}s E0={args.e0}J")
+            return 1
+        print(f"codesign: b_hat={sol.b_hat} f={sol.f / 1e9:.2f}GHz "
+              f"f~={sol.f_server / 1e9:.2f}GHz gap={sol.objective:.3e} "
+              f"T={sol.delay:.3f}s E={sol.energy:.3f}J "
+              f"(SCA iters={sol.iterations})")
 
     for name, solver in (("oracle", cd.solve_oracle),
                          ("fixed-freq", bl.solve_fixed_frequency),
@@ -109,18 +127,28 @@ def serve_batched(cfg, model, params, sysp, args):
     try:
         eng = BatchedCoInferenceEngine(
             model, params, sysp, classes=classes, max_batch=args.max_batch,
-            path=args.path, codesign_cache=cache)
+            path=args.path, codesign_cache=cache,
+            mixed_precision=args.mixed_precision)
     except ValueError as e:
         print(e)
         return 1
     print(f"arch={cfg.name} split={cfg.split_layer}/{cfg.n_layers} "
           f"lambda_hat={eng.engine.lam:.2f} path={args.path} "
-          f"engine=batched max_batch={args.max_batch}")
+          f"engine=batched max_batch={args.max_batch} "
+          f"mixed_precision={args.mixed_precision}")
     for c in classes:
         s = eng.solution_for(c.name)
-        print(f"  class {c.name:12s} (T0={c.t0:.2f}s, E0={c.e0:.2f}J): "
-              f"b_hat={s.b_hat} f={s.f / 1e9:.2f}GHz "
-              f"f~={s.f_server / 1e9:.2f}GHz gap={s.objective:.3e}")
+        if args.mixed_precision:
+            print(f"  class {c.name:12s} (T0={c.t0:.2f}s, E0={c.e0:.2f}J): "
+                  f"bits={list(s.bits)} (mean {s.mean_bits:.2f}) "
+                  f"f={s.f / 1e9:.2f}GHz f~={s.f_server / 1e9:.2f}GHz "
+                  f"bound={s.objective:.3e} "
+                  f"(uniform b_hat={s.uniform_b}: "
+                  f"{s.uniform_objective:.3e})")
+        else:
+            print(f"  class {c.name:12s} (T0={c.t0:.2f}s, E0={c.e0:.2f}J): "
+                  f"b_hat={s.b_hat} f={s.f / 1e9:.2f}GHz "
+                  f"f~={s.f_server / 1e9:.2f}GHz gap={s.objective:.3e}")
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -133,7 +161,9 @@ def serve_batched(cfg, model, params, sysp, args):
     print(f"served {len(responses)} requests in "
           f"{len(eng.batch_history)} batches:")
     for b in eng.batch_history:
-        print(f"  [{b.qos:12s}] n={b.batch_size} b_hat={b.b_hat:2d} "
+        bdesc = "/".join(map(str, b.plan_bits)) if b.plan_bits \
+            else f"{b.b_hat:2d}"
+        print(f"  [{b.qos:12s}] n={b.batch_size} b_hat={bdesc} "
               f"({b.agent_path}) occupancy={b.occupancy:.2f} "
               f"T={b.batch_delay_s * 1e3:.2f}ms "
               f"(amortized {b.amortized_delay_s * 1e3:.2f}ms/req) "

@@ -19,7 +19,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core.quantization import QuantConfig, qat_quantize, quantize_dequantize
+from ..core.quantization import (QuantConfig, QuantPlan, qat_quantize,
+                                 quantize_dequantize)
 
 
 def _is_axes(x) -> bool:
@@ -27,26 +28,42 @@ def _is_axes(x) -> bool:
 
 
 def agent_mask_fn(cfg):
-    """(stacked_axis_name, length) -> boolean mask of agent-owned entries."""
+    """(stacked_axis_name, length) -> boolean mask of agent-owned entries.
+
+    The returned function also exposes ``n_agent(name, length)``, the
+    host-side count of agent-owned leading entries (the mask is
+    ``arange(length) < n_agent``) — used where a static Python count is
+    needed, e.g. to skip per-layer work on server layers under a plan.
+    """
     per = getattr(cfg, "attn_period", 0) or getattr(cfg, "slstm_period", 0) \
         or 0
 
-    def mask(name: str, length: int) -> jnp.ndarray:
+    def n_agent(name: str, length: int) -> int:
         if name == "layers":
-            return jnp.arange(length) < cfg.split_layer
+            return min(int(cfg.split_layer), length)
         # 'blocks': super-block granularity (split rounded down to blocks)
         blocks = max(cfg.split_layer // max(per, 1), 0) if per else 0
-        return jnp.arange(length) < blocks
+        return min(int(blocks), length)
+
+    def mask(name: str, length: int) -> jnp.ndarray:
+        return jnp.arange(length) < n_agent(name, length)
+    mask.n_agent = n_agent
     return mask
 
 
-def fake_quantize_agent(params: Any, axes: Any, cfg, qcfg: QuantConfig,
+def fake_quantize_agent(params: Any, axes: Any, cfg, qcfg,
                         *, ste: bool = True) -> Any:
     """Return params with the agent partition fake-quantized.
 
     ``axes`` is the model's logical_axes() pytree.  Stacked weight leaves
     (leading 'layers'/'blocks' axis, >= 3 dims) are quantized per-layer and
     masked by the co-inference split; everything else passes through.
+
+    ``qcfg`` is a single :class:`QuantConfig` (uniform b̂, the paper's
+    knob) or a :class:`QuantPlan` whose ``layers/<i>`` entries index the
+    stacked axis — layer i then quantizes at its own bit-width
+    (DESIGN.md §8).  Entries past the split are masked out either way, so
+    a plan only needs to cover the agent partition.
     """
     mask_of = agent_mask_fn(cfg)
     q1 = qat_quantize if ste else quantize_dequantize
@@ -60,7 +77,16 @@ def fake_quantize_agent(params: Any, axes: Any, cfg, qcfg: QuantConfig,
             return leaf
         n = leaf.shape[0]
         flat = leaf.reshape(n, -1, leaf.shape[-1])   # [L, in*, out]
-        qflat = jax.vmap(lambda w: q1(w, qcfg))(flat)
+        if isinstance(qcfg, QuantPlan):
+            # per-layer bits: the stacked axis can't vmap over a varying
+            # Python-level level count, so stack per-layer quantizations
+            # — skipping masked-out (server) layers, which jnp.where
+            # would discard anyway
+            na = mask_of.n_agent(ax[0], n)
+            qflat = jnp.stack([q1(flat[i], qcfg.config_for_layer(i))
+                               if i < na else flat[i] for i in range(n)])
+        else:
+            qflat = jax.vmap(lambda w: q1(w, qcfg))(flat)
         q = qflat.reshape(leaf.shape)
         m = mask_of(ax[0], n).reshape((n,) + (1,) * (leaf.ndim - 1))
         return jnp.where(m, q, leaf)

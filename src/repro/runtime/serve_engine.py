@@ -30,8 +30,17 @@ dimension end-to-end, through ``kernels/ops.py`` into ``kernels/qmm.py``):
 
 Embedding transport: the boundary activation is quantized at ``b_emb``
 (per-tensor absmax, computed *per request*) before "transmission"; the
-engine reports exact wire bytes, so the uplink term of the cost model is
-grounded.
+engine reports exact wire bytes (realizable container sizes — nibble
+packing below 4 bits, int8/int16 above), so the uplink term of the cost
+model is grounded.
+
+Mixed precision (DESIGN.md §8): ``configure`` also accepts a
+``QuantPlan`` assigning per-layer bits to the agent partition, with
+per-layer kernel-container selection (int4-packed / int8 / fp16
+fallback); ``BatchedCoInferenceEngine(mixed_precision=True)`` solves the
+layer-wise allocation of ``core.mixed_precision`` per QoS class instead
+of the scalar (P1), and both the codesign and weight caches key on the
+resulting plan, so serving memoizes per (class, plan).
 """
 
 from __future__ import annotations
@@ -45,9 +54,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import codesign as cd
+from ..core import mixed_precision as mp
 from ..core.cost_model import (SystemParams, agent_delay, agent_energy,
                                server_delay, server_energy, transport_delay)
-from ..core.quantization import QuantConfig, quantize_dequantize
+from ..core.quantization import (QuantConfig, QuantPlan, quantize_dequantize,
+                                 wire_bytes)
 from ..kernels import ops as kops
 from ..models import layers as L
 from .qat import fake_quantize_agent
@@ -59,7 +70,7 @@ from .qat import fake_quantize_agent
 
 @dataclasses.dataclass(frozen=True)
 class ServeStats:
-    b_hat: int
+    b_hat: int                  # uniform b̂, or round(mean bits) of a plan
     f: float
     f_server: float
     agent_delay_s: float
@@ -73,6 +84,8 @@ class ServeStats:
     # wire bytes per leading batch row (sums to emb_bytes); the batched
     # engine reads a request's own uplink cost from here
     emb_row_bytes: tuple = ()
+    # per-agent-layer bits when a mixed-precision plan is active (else ())
+    plan_bits: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +146,8 @@ class BatchStats:
     emb_bytes: int
     queue_wait_mean_s: float
     queue_wait_max_s: float
+    # per-agent-layer bits when the class serves a mixed plan (else ())
+    plan_bits: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,7 +180,9 @@ class CodesignCache:
     """
 
     def __init__(self):
-        self._store: Dict[tuple, Optional[cd.CodesignSolution]] = {}
+        # values: CodesignSolution (uniform), MixedSolution (per-layer
+        # plans, "mixed"-tagged keys), or None for infeasible classes
+        self._store: Dict[tuple, Any] = {}
         self.hits = 0
         self.misses = 0
 
@@ -186,6 +203,26 @@ class CodesignCache:
             self.misses += 1
             self._store[k] = cd.solve_sca(lam, sysp, qos.t0, qos.e0,
                                           b_max=b_max)
+        return self._store[k]
+
+    def solve_mixed(self, stats: "mp.LayerStats", sysp: SystemParams,
+                    qos: QosClass, b_max: int) -> Optional[mp.MixedSolution]:
+        """Memoized per-layer bit allocation (DESIGN.md §8).
+
+        Keyed on the per-layer statistics (λ^(l), A^(l)) instead of the
+        global λ — the allocation's whole decision input — in a keyspace
+        disjoint from :meth:`solve`'s, so one cache serves engines in
+        both modes; the resulting plan's hash then keys the engine's
+        materialized-weight cache.
+        """
+        k = ("mixed", stats.key(), sysp, float(qos.t0), float(qos.e0),
+             int(b_max))
+        if k in self._store:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._store[k] = mp.allocate_bits(stats, sysp, qos.t0, qos.e0,
+                                              b_max=b_max)
         return self._store[k]
 
     def __len__(self) -> int:
@@ -220,13 +257,20 @@ class CoInferenceEngine:
         self._axes = model.logical_axes()
         self.lam = float(lam) if lam is not None else self._fit_lambda()
         self.b_hat: int = 8
+        # effective bit-width for the cost model: b̂ when uniform, the
+        # plan's mean agent bits when mixed (layers are FLOP-homogeneous,
+        # so delay/energy depend on the plan only through its mean)
+        self.b_eff: float = 8.0
+        self.plan: Optional[QuantPlan] = None
         self.f: float = sysp.f_max
         self.f_server: float = sysp.f_server_max
         self._agent_params = None       # set by configure()
         self._qlinears = None
-        # b̂ -> materialized agent weights; lets the batched engine flip
-        # between QoS classes without re-quantizing every batch
-        self._weight_cache: Optional[Dict[int, tuple]] = \
+        self._layer_stats: Optional[mp.LayerStats] = None
+        # stable plan key -> materialized agent weights; lets the batched
+        # engine flip between QoS classes (uniform b̂ *or* mixed plans)
+        # without re-quantizing every batch
+        self._weight_cache: Optional[Dict[tuple, tuple]] = \
             {} if cache_weights else None
         self.configure(self.b_hat, self.f, self.f_server)
 
@@ -255,40 +299,91 @@ class CoInferenceEngine:
     # ------------------------------------------------------------------
     # configuration (the paper's decision variables)
     # ------------------------------------------------------------------
-    def configure(self, b_hat: int, f: Optional[float] = None,
+    def configure(self, b_hat, f: Optional[float] = None,
                   f_server: Optional[float] = None) -> None:
-        """Set (b̂, f, f̃) and materialize the agent weights at b̂."""
-        self.b_hat = int(b_hat)
+        """Set the operating point and materialize the agent weights.
+
+        ``b_hat`` is a uniform bit-width (int, the paper's knob) or a
+        :class:`QuantPlan` assigning per-layer bits to the agent
+        partition (DESIGN.md §8).  A plan whose agent layers all resolve
+        to one bit-width degenerates to the uniform path — same weights,
+        same cache entry, bitwise-identical serving.  Materialized
+        weights are memoized on the stable plan key when
+        ``cache_weights`` is on.
+        """
+        # kernel containers are uniform-scheme group quantizers; a plan
+        # asking for another scheme runs the (scheme-honoring) fake path
+        kernel_ok = self.path == "kernel" and not self.cfg.n_experts
+        plan = None
+        if isinstance(b_hat, QuantPlan):
+            plan = b_hat
+            ub = plan.uniform_layer_bits(self.split)
+            # Degenerate a uniform plan to the legacy int path only when
+            # that path quantizes identically: the plan's scheme and
+            # granularity must match what the legacy path would use, and
+            # on the kernel path the width must be a legacy kernel one
+            # (b̂ ∈ {4, 8}) or > 8 (fake fallback either way).  Uniform
+            # plans at other widths stay plans so e.g. (6, 6) serves
+            # int8-kernel-resident exactly like the neighboring (6, 7) —
+            # no container or scheme cliff inside mixed-precision serving.
+            same_quant = plan.scheme == self.scheme \
+                and plan.granularity == "per-channel"
+            plan_kernel = kernel_ok and plan.scheme == "uniform"
+            if ub is not None and same_quant and \
+                    (not plan_kernel or ub in (4, 8) or ub > 8):
+                b_hat, plan = ub, None
         if f is not None:
             self.f = float(f)
         if f_server is not None:
             self.f_server = float(f_server)
-        if self._weight_cache is not None and self.b_hat in self._weight_cache:
-            self._agent_params, self._qlinears = \
-                self._weight_cache[self.b_hat]
+        self.plan = plan
+        if plan is None:
+            self.b_hat = int(b_hat)
+            self.b_eff = float(self.b_hat)
+            key = ("uniform", self.b_hat)
+        else:
+            self.b_eff = plan.mean_bits(self.split)
+            self.b_hat = int(round(self.b_eff))
+            key = plan.key()
+        if self._weight_cache is not None and key in self._weight_cache:
+            self._agent_params, self._qlinears = self._weight_cache[key]
             return
-        qcfg = QuantConfig(bits=self.b_hat, scheme=self.scheme,
-                           granularity="per-channel")
-        if self.path == "kernel" and self.b_hat in (4, 8) \
-                and not self.cfg.n_experts:
-            self._qlinears = self._quantize_kernel_weights(self.b_hat)
+        if plan is not None:
+            if kernel_ok and plan.scheme == "uniform":
+                self._qlinears = self._quantize_kernel_weights(plan)
+                self._agent_params = None
+            else:
+                self._agent_params = fake_quantize_agent(
+                    self.params, self._axes, self.cfg, plan, ste=False)
+                self._qlinears = None
+        elif kernel_ok and self.b_hat in (4, 8):
+            self._qlinears = self._quantize_kernel_weights(
+                QuantPlan.uniform(self.b_hat, scheme=self.scheme))
             self._agent_params = None
         else:
+            qcfg = QuantConfig(bits=self.b_hat, scheme=self.scheme,
+                               granularity="per-channel")
             self._agent_params = fake_quantize_agent(
                 self.params, self._axes, self.cfg, qcfg, ste=False)
             self._qlinears = None
         if self._weight_cache is not None:
-            self._weight_cache[self.b_hat] = (self._agent_params,
-                                              self._qlinears)
+            self._weight_cache[key] = (self._agent_params, self._qlinears)
 
     @property
     def agent_path(self) -> str:
-        """The agent execution that actually materialized at the current b̂:
-        ``kernel-int8``/``kernel-int4`` (HBM-resident Pallas matmuls) or
-        ``fake`` (quantize-dequantize).  The kernel path only exists for
-        dense models at b̂ ∈ {4, 8}; other bit-widths silently fall back, so
-        callers claiming kernel residency should check this."""
+        """The agent execution that actually materialized at the current
+        operating point: ``kernel-int8``/``kernel-int4`` (HBM-resident
+        Pallas matmuls), ``kernel-mixed[b0/b1/...]`` (per-layer kernel
+        residency under a plan, with > 8-bit layers falling back to
+        full-precision matmuls on fake-quantized weights), or ``fake``
+        (quantize-dequantize).  The uniform kernel path only exists for
+        dense models at b̂ ∈ {4, 8}; other uniform bit-widths silently
+        fall back, so callers claiming kernel residency should check
+        this."""
         if self._qlinears is not None:
+            if self.plan is not None:
+                bl = "/".join(str(r["bits"]) for r in self._qlinears)
+                return f"kernel-mixed[{bl}]"
             return f"kernel-int{self.b_hat}"
         return "fake"
 
@@ -312,13 +407,53 @@ class CoInferenceEngine:
         return sol
 
     # ------------------------------------------------------------------
+    # mixed-precision configuration (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def layer_stats(self) -> mp.LayerStats:
+        """Per-agent-layer (λ^(l), A^(l)), computed once and memoized —
+        the allocation's whole decision input besides the cost model."""
+        if self._layer_stats is None:
+            self._layer_stats = mp.decoder_layer_stats(self.params,
+                                                       self.split)
+        return self._layer_stats
+
+    def plan_of(self, sol: mp.MixedSolution) -> QuantPlan:
+        """The :class:`QuantPlan` realizing an allocation on this engine."""
+        return mp.plan_from_bits(sol.bits, scheme=self.scheme)
+
+    def auto_configure_mixed(self, qos: QosClass,
+                             cache: Optional[CodesignCache] = None
+                             ) -> Optional[mp.MixedSolution]:
+        """Solve the per-layer bit allocation for this QoS class and apply
+        its plan (the layer-wise counterpart of :meth:`auto_configure`).
+
+        With ``cache`` the allocation is memoized on the layer statistics
+        — see :meth:`CodesignCache.solve_mixed`.
+        """
+        b_max = int(self.sysp.b_full)
+        if cache is not None:
+            sol = cache.solve_mixed(self.layer_stats(), self.sysp, qos,
+                                    b_max)
+        else:
+            sol = mp.allocate_bits(self.layer_stats(), self.sysp, qos.t0,
+                                   qos.e0, b_max=b_max)
+        if sol is None:
+            return None
+        self.configure(self.plan_of(sol), sol.f, sol.f_server)
+        return sol
+
+    # ------------------------------------------------------------------
     # kernel-path weight prep (dense DecoderLM)
     # ------------------------------------------------------------------
-    def _quantize_kernel_weights(self, bits: int):
-        """Per-layer QuantizedLinear for wq/wk/wv/wo/mlp of layers [0,split).
+    def _quantize_kernel_weights(self, plan: QuantPlan):
+        """Per-layer weight records for wq/wk/wv/wo/mlp of layers [0,split).
 
-        Group size 128 along the contraction axis — exactly what the Pallas
-        qmm kernel consumes.
+        Layer i materializes at ``plan.layer_bits(i)`` with the kernel
+        container that width admits (kernels/ops.py): bits <= 4 →
+        int4-packed, 5..8 → int8 — group size 128 along the contraction
+        axis, exactly what the Pallas qmm kernel consumes.  Layers wider
+        than 8 bits have no quantized kernel; they store fake-quantized
+        full-precision matrices applied by plain matmuls.
         """
         lp = self.params["layers"]
         out = []
@@ -326,17 +461,32 @@ class CoInferenceEngine:
         mlp_names = [n for n in ("wi_gate", "wi_up", "wi", "wo")
                      if n in lp["ffn"]]
         for i in range(self.split):
-            rec = {"attn": {}, "ffn": {}}
+            bits = plan.layer_bits(i)
+            rec = {"attn": {}, "ffn": {}, "bits": bits}
+
+            def materialize(leaf):
+                w = jnp.asarray(np.asarray(leaf, np.float32))
+                if bits <= 8:
+                    return kops.quantize_linear(w, bits=bits,
+                                                group_size=plan.group_size)
+                # no kernel above 8 bits: fake-quantize with the plan's
+                # own scheme/granularity (what config_for_layer resolves)
+                return quantize_dequantize(w, plan.config_for_layer(i))
+
             for n in names:
-                w = np.asarray(lp["attn"][n][i], np.float32)
-                rec["attn"][n] = kops.quantize_linear(
-                    jnp.asarray(w), bits=bits, group_size=128)
+                rec["attn"][n] = materialize(lp["attn"][n][i])
             for n in mlp_names:
-                w = np.asarray(lp["ffn"][n][i], np.float32)
-                rec["ffn"][n] = kops.quantize_linear(
-                    jnp.asarray(w), bits=bits, group_size=128)
+                rec["ffn"][n] = materialize(lp["ffn"][n][i])
             out.append(rec)
         return out
+
+    @staticmethod
+    def _apply_q(wrec, x):
+        """Apply one per-layer weight record: Pallas quantized matmul for
+        kernel-resident layers, plain matmul for fake-quantized ones."""
+        if isinstance(wrec, kops.QuantizedLinear):
+            return wrec.apply(x)
+        return x @ wrec.astype(x.dtype)
 
     def _agent_forward_kernel(self, x, positions):
         """Dense DecoderLM agent stack with Pallas quantized matmuls.
@@ -345,14 +495,15 @@ class CoInferenceEngine:
         every leading dim into the kernel's M axis (kernels/ops.py)."""
         cfg = self.cfg
         lp = self.params["layers"]
+        ap = self._apply_q
         for i in range(self.split):
             ql = self._qlinears[i]
             ln1 = jax.tree_util.tree_map(lambda a: a[i], lp["ln1"])
             ln2 = jax.tree_util.tree_map(lambda a: a[i], lp["ln2"])
             h = L.apply_norm(cfg, x, ln1)
-            q = ql["attn"]["wq"].apply(h)
-            k = ql["attn"]["wk"].apply(h)
-            v = ql["attn"]["wv"].apply(h)
+            q = ap(ql["attn"]["wq"], h)
+            k = ap(ql["attn"]["wk"], h)
+            v = ap(ql["attn"]["wv"], h)
             if cfg.qkv_bias:
                 q = q + lp["attn"]["bq"][i].astype(x.dtype)
                 k = k + lp["attn"]["bk"][i].astype(x.dtype)
@@ -364,15 +515,15 @@ class CoInferenceEngine:
             k = L.apply_rope(k, positions, cfg.rope_theta)
             attn = L.blockwise_attention(q, k, v, causal=True,
                                          window=cfg.sliding_window)
-            x = x + ql["attn"]["wo"].apply(
-                attn.reshape(x.shape[:2] + (cfg.q_dim,)))
+            x = x + ap(ql["attn"]["wo"],
+                       attn.reshape(x.shape[:2] + (cfg.q_dim,)))
             h2 = L.apply_norm(cfg, x, ln2)
             if cfg.act == "silu":
-                y = jax.nn.silu(ql["ffn"]["wi_gate"].apply(h2)) \
-                    * ql["ffn"]["wi_up"].apply(h2)
+                y = jax.nn.silu(ap(ql["ffn"]["wi_gate"], h2)) \
+                    * ap(ql["ffn"]["wi_up"], h2)
             else:
-                y = jax.nn.gelu(ql["ffn"]["wi"].apply(h2))
-            x = x + ql["ffn"]["wo"].apply(y)
+                y = jax.nn.gelu(ap(ql["ffn"]["wi"], h2))
+            x = x + ap(ql["ffn"]["wo"], y)
         return x
 
     # ------------------------------------------------------------------
@@ -419,8 +570,11 @@ class CoInferenceEngine:
         qcfg = QuantConfig(bits=self.b_emb, scheme="uniform",
                            granularity="per-tensor")
         emb_q = jax.vmap(lambda row: quantize_dequantize(row, qcfg))(emb)
-        # + one f32 absmax scale per request
-        return emb_q, tuple((int(s) * d * self.b_emb + 7) // 8 + 4
+        # realizable wire size (quantization.wire_bytes): codes of <= 4
+        # bits ship nibble-packed via pack_int4, wider ones int8/int16 —
+        # not the fractional (n*bits+7)//8 idealization — plus one f32
+        # absmax scale per request
+        return emb_q, tuple(wire_bytes(int(s) * d, self.b_emb) + 4
                             for s in real)
 
     def server_stage(self, emb: jax.Array, positions):
@@ -447,16 +601,20 @@ class CoInferenceEngine:
                                 n_flop_server=n_s,
                                 emb_bytes_full=float(emb_bytes)
                                 * 16.0 / self.b_emb)
-        t_a = float(agent_delay(self.b_hat, self.f, p))
+        # b_eff = b̂ for uniform serving, mean plan bits for mixed —
+        # the exact linear-in-bitwidth workload of eq. (4)
+        t_a = float(agent_delay(self.b_eff, self.f, p))
         t_s = float(server_delay(self.f_server, p))
         t_x = float(transport_delay(self.b_emb, p))
-        e = float(agent_energy(self.b_hat, self.f, p)
+        e = float(agent_energy(self.b_eff, self.f, p)
                   + server_energy(self.f_server, p))
         stats = ServeStats(
             b_hat=self.b_hat, f=self.f, f_server=self.f_server,
             agent_delay_s=t_a, server_delay_s=t_s, transport_delay_s=t_x,
             total_delay_s=t_a + t_s + t_x, energy_j=e, emb_bytes=emb_bytes,
-            agent_flops=n_a, server_flops=n_s, emb_row_bytes=row_bytes)
+            agent_flops=n_a, server_flops=n_s, emb_row_bytes=row_bytes,
+            plan_bits=(self.plan.layer_bit_list(self.split)
+                       if self.plan is not None else ()))
         return logits, stats
 
 
@@ -493,7 +651,8 @@ class BatchedCoInferenceEngine:
                  lam: Optional[float] = None,
                  scheme: str = "uniform",
                  codesign_cache: Optional[CodesignCache] = None,
-                 pad_token: int = 0):
+                 pad_token: int = 0,
+                 mixed_precision: bool = False):
         if not classes:
             raise ValueError("need at least one QosClass")
         if max_batch < 1:
@@ -504,22 +663,30 @@ class BatchedCoInferenceEngine:
         self.sysp = sysp
         self.max_batch = int(max_batch)
         self.pad_token = int(pad_token)
+        self.mixed_precision = bool(mixed_precision)
         self.classes: Dict[str, QosClass] = {c.name: c for c in classes}
         if len(self.classes) != len(classes):
             raise ValueError("duplicate QosClass names")
         self.codesign_cache = codesign_cache \
             if codesign_cache is not None else CodesignCache()
-        # resolve every class eagerly: one (P1) solve per distinct
-        # (lam, sysp, T0, E0) for the engine's whole lifetime; hits/misses
-        # are counted per call so report() attributes this engine only its
-        # own lookups even when the cache is shared with other engines
+        # resolve every class eagerly: one (P1) solve — or per-layer
+        # allocation in mixed-precision mode — per distinct decision input
+        # for the engine's whole lifetime; hits/misses are counted per call
+        # so report() attributes this engine only its own lookups even when
+        # the cache is shared with other engines
         self._own_hits = 0
         self._own_misses = 0
-        self._solutions: Dict[str, cd.CodesignSolution] = {}
+        self._solutions: Dict[str, Any] = {}
+        self._plans: Dict[str, QuantPlan] = {}
         for c in classes:
             h0, m0 = self.codesign_cache.hits, self.codesign_cache.misses
-            sol = self.codesign_cache.solve(self.engine.lam, sysp, c,
-                                            b_max=int(sysp.b_full))
+            if self.mixed_precision:
+                sol = self.codesign_cache.solve_mixed(
+                    self.engine.layer_stats(), sysp, c,
+                    b_max=int(sysp.b_full))
+            else:
+                sol = self.codesign_cache.solve(self.engine.lam, sysp, c,
+                                                b_max=int(sysp.b_full))
             self._own_hits += self.codesign_cache.hits - h0
             self._own_misses += self.codesign_cache.misses - m0
             if sol is None:
@@ -527,6 +694,8 @@ class BatchedCoInferenceEngine:
                     f"QoS class {c.name!r} is infeasible under "
                     f"(T0={c.t0}, E0={c.e0})")
             self._solutions[c.name] = sol
+            if self.mixed_precision:
+                self._plans[c.name] = self.engine.plan_of(sol)
         self._queue: Deque[ServeRequest] = collections.deque()
         self._next_id = 0
         self._clock = 0.0
@@ -537,8 +706,14 @@ class BatchedCoInferenceEngine:
     # ------------------------------------------------------------------
     # queue API
     # ------------------------------------------------------------------
-    def solution_for(self, qos_name: str) -> cd.CodesignSolution:
+    def solution_for(self, qos_name: str):
+        """The class's operating point: a ``CodesignSolution`` (uniform
+        mode) or a ``MixedSolution`` (mixed-precision mode)."""
         return self._solutions[qos_name]
+
+    def plan_for(self, qos_name: str) -> Optional[QuantPlan]:
+        """The class's :class:`QuantPlan` (None in uniform mode)."""
+        return self._plans.get(qos_name)
 
     def submit(self, tokens, qos: str,
                arrival_s: Optional[float] = None) -> int:
@@ -589,8 +764,9 @@ class BatchedCoInferenceEngine:
         qos = self.classes[reqs[0].qos]
         sol = self._solutions[qos.name]
         # configure() is a dict lookup after the first batch of a class
-        # (weight cache keyed on b̂); frequencies are scalars
-        self.engine.configure(sol.b_hat, sol.f, sol.f_server)
+        # (weight cache keyed on the stable plan key); freqs are scalars
+        target = self._plans.get(qos.name, sol.b_hat)
+        self.engine.configure(target, sol.f, sol.f_server)
 
         s_max = max(r.tokens.size for r in reqs)
         lengths = [r.tokens.size for r in reqs]
@@ -618,7 +794,8 @@ class BatchedCoInferenceEngine:
             amortized_energy_j=stats.energy_j / n,
             emb_bytes=stats.emb_bytes,
             queue_wait_mean_s=sum(waits) / n,
-            queue_wait_max_s=max(waits))
+            queue_wait_max_s=max(waits),
+            plan_bits=stats.plan_bits)
         self.batch_history.append(bstats)
         self._served += n
         self._energy += stats.energy_j

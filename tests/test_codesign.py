@@ -56,10 +56,10 @@ def test_energy_optimal_frequencies_meet_deadline():
 def test_oracle_picks_largest_feasible_bitwidth():
     sol = solve_oracle(LAM, P0, t0=1.2, e0=2.0)
     assert sol is not None
-    ok_here, _, _, _ = feasible_bitwidth(sol.b_hat, LAM, P0, 3.5, 2.0)
+    ok_here, _, _, _ = feasible_bitwidth(sol.b_hat, P0, 3.5, 2.0)
     assert ok_here
     if sol.b_hat < 16:
-        ok_up, _, _, _ = feasible_bitwidth(sol.b_hat + 1, LAM, P0, 1.2, 2.0)
+        ok_up, _, _, _ = feasible_bitwidth(sol.b_hat + 1, P0, 1.2, 2.0)
         assert not ok_up
 
 

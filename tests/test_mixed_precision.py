@@ -1,0 +1,358 @@
+"""Mixed-precision plans, per-layer statistics, the bit allocator, and
+plan-aware serving (core/mixed_precision.py + DESIGN.md §8).
+
+Covers the tentpole acceptance criteria:
+  (a) a uniform QuantPlan reproduces the single-QuantConfig outputs
+      bitwise (tree quantizers and the serving engine);
+  (b) the allocator's plan achieves strictly lower Σ A^(l)·D^U than the
+      best uniform b̂ at equal (T0, E0) feasibility, and measured output
+      distortion orders the same way;
+  (c) batched serving with two QoS classes on different plans is bitwise
+      identical to sequential serving with the same plans.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import mixed_precision as mp
+from repro.core.cost_model import SystemParams
+from repro.core.distortion import measured_output_distortion
+from repro.core.quantization import (QuantConfig, QuantPlan, as_plan,
+                                     fake_quantize_tree, quantize_tree,
+                                     quantize_tree_stacked)
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, CodesignCache,
+                           CoInferenceEngine, QosClass)
+from repro.runtime.qat import fake_quantize_agent
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+
+
+def _model(split=2, arch="qwen2-0.5b", seed=0):
+    cfg = dataclasses.replace(get_smoke(arch), split_layer=split)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# QuantPlan semantics
+# ---------------------------------------------------------------------------
+
+def test_plan_longest_prefix_resolution():
+    plan = QuantPlan(entries=(("layers/1", 4), ("layers/1/attn", 3),
+                              ("layers/0", 8)), default_bits=16)
+    assert plan.resolve_bits("layers/1/attn/wq") == 3
+    assert plan.resolve_bits("layers/1/ffn/wi") == 4
+    assert plan.resolve_bits("layers/0/ffn/wi") == 8
+    # '/'-boundary aware: layers/10 must not match the layers/1 prefix
+    assert plan.resolve_bits("layers/10/attn/wq") == 16
+    assert plan.resolve_bits("embed/tok") == 16
+    assert plan.layer_bits(1) == 4        # exact prefix, not the attn leaf
+
+
+def test_plan_uniform_and_aggregates():
+    plan = QuantPlan.from_layer_bits([4, 8, 8])
+    assert plan.layer_bit_list(3) == (4, 8, 8)
+    assert plan.uniform_layer_bits(3) is None
+    assert plan.uniform_layer_bits(2, prefix="layers") is None
+    assert plan.mean_bits(3) == pytest.approx(20 / 3)
+    uni = QuantPlan.from_layer_bits([6, 6])
+    assert uni.uniform_layer_bits(2) == 6
+    assert QuantPlan.uniform(5).uniform_layer_bits(7) == 5
+
+
+def test_plan_key_and_hash_stability():
+    a = QuantPlan.from_layer_bits([4, 8])
+    b = QuantPlan.from_layer_bits([4, 8])
+    c = QuantPlan.from_layer_bits([8, 4])
+    assert a.key() == b.key() and a.plan_hash() == b.plan_hash()
+    assert a.key() != c.key() and a.plan_hash() != c.plan_hash()
+    assert hash(a.key()) == hash(b.key())  # usable as a dict key
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        QuantPlan(entries=(("layers/0", 0),))
+    with pytest.raises(ValueError):
+        QuantPlan.uniform(0)
+
+
+# ---------------------------------------------------------------------------
+# (a) uniform plan == single QuantConfig, bitwise
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    return {"layers": {"w": jax.random.normal(ks[0], (3, 16, 8)),
+                       "b": jax.random.normal(ks[1], (3, 8))},
+            "embed": jax.random.normal(ks[2], (32, 8))}
+
+
+@pytest.mark.parametrize("bits", [3, 5, 8])
+def test_uniform_plan_bitwise_equals_quantconfig(bits):
+    tree = _tree()
+    cfg = QuantConfig(bits=bits, granularity="per-channel")
+    plan = as_plan(cfg)
+    qc, qp = quantize_tree(tree, cfg), quantize_tree(tree, plan)
+    assert bool(jnp.all(qc["embed"].codes == qp["embed"].codes))
+    assert bool(jnp.all(qc["embed"].scale == qp["embed"].scale))
+    fc, fp = fake_quantize_tree(tree, cfg), fake_quantize_tree(tree, plan)
+    assert bool(jnp.all(fc["embed"] == fp["embed"]))
+    assert bool(jnp.all(fc["layers"]["w"] == fp["layers"]["w"]))
+    sc = quantize_tree_stacked(tree, cfg)["layers"]["w"]
+    sp = quantize_tree_stacked(tree, plan)["layers"]["w"]
+    assert bool(jnp.all(sc.codes == sp.codes))
+    assert bool(jnp.all(sc.scale == sp.scale))
+    assert sc.bits == sp.bits
+
+
+def test_stacked_plan_per_layer_bits():
+    tree = _tree(1)
+    plan = QuantPlan.from_layer_bits([2, 8, 8])
+    qt = quantize_tree_stacked(tree, plan)["layers"]["w"]
+    # layer 0 has 2-bit codes (magnitude level 1), layers 1-2 full int8
+    assert int(jnp.max(jnp.abs(qt.codes[0]))) <= 1
+    assert int(jnp.max(jnp.abs(qt.codes[1]))) > 1
+    assert qt.bits == 8   # records the max width for byte accounting
+    # each layer's dequant matches quantizing that slice alone
+    w1 = tree["layers"]["w"][1]
+    alone = quantize_tree({"w": w1}, QuantConfig(bits=8))["w"]
+    np.testing.assert_array_equal(np.asarray(qt.codes[1]),
+                                  np.asarray(alone.codes))
+
+
+def test_stacked_plan_wide_layers_reconstruct_better():
+    """A plan mixing <=8 and >8-bit layers stacks into one int16
+    container, and the wide layers really reconstruct *better* (the int8
+    wraparound regression would make them worse)."""
+    tree = _tree(2)
+    w = tree["layers"]["w"]
+    qt = quantize_tree_stacked(tree, QuantPlan.from_layer_bits(
+        [4, 12, 16]))["layers"]["w"]
+    assert qt.codes.dtype == jnp.int16 and qt.bits == 16
+    errs = [float(jnp.max(jnp.abs(w[i] - qt.codes[i] * qt.scale[i])))
+            for i in range(3)]
+    assert errs[1] < errs[0] and errs[2] < errs[1]
+
+
+def test_engine_uniform_plan_bitwise_identical():
+    for path in ("fake", "kernel"):
+        cfg, model, params = _model(split=2)
+        eng = CoInferenceEngine(model, params, SYSP, path=path)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                                  cfg.vocab_size)
+        eng.configure(8)
+        a, _ = eng.serve_batch({"tokens": toks})
+        eng.configure(QuantPlan.from_layer_bits([8, 8]))
+        b, _ = eng.serve_batch({"tokens": toks})
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert eng.plan is None           # degenerated to the uniform path
+        assert eng.b_eff == 8.0
+
+
+# ---------------------------------------------------------------------------
+# per-layer statistics
+# ---------------------------------------------------------------------------
+
+def test_decoder_layer_stats_shape_and_positivity():
+    cfg, model, params = _model(split=3)
+    stats = mp.decoder_layer_stats(params, 3)
+    assert stats.n_layers == 3
+    assert all(v > 0 for v in stats.lam)
+    assert all(v >= 1.0 for v in stats.sens)   # normalized to min == 1
+    assert min(stats.sens) == pytest.approx(1.0)
+    # memoizable key: stable across recomputation
+    again = mp.decoder_layer_stats(params, 3)
+    assert stats.key() == again.key()
+
+
+def test_layer_stats_validation():
+    with pytest.raises(ValueError):
+        mp.LayerStats(lam=(1.0,), sens=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        mp.LayerStats(lam=(), sens=())
+
+
+# ---------------------------------------------------------------------------
+# the allocator
+# ---------------------------------------------------------------------------
+
+def test_max_mean_bits_monotone_and_uniform_floor():
+    prev = 0.0
+    for t0 in (1.1, 1.2, 1.4, 1.8):
+        b = mp.max_mean_bits(SYSP, t0, 2.0)
+        assert b is None or b >= prev
+        prev = b or prev
+    # the uniform floor agrees with the exhaustive oracle
+    from repro.core.codesign import solve_oracle
+    for t0, e0 in ((1.15, 0.95), (1.3, 1.5), (1.6, 2.5)):
+        o = solve_oracle(30.0, SYSP, t0, e0)
+        assert mp.best_uniform_bits(SYSP, t0, e0) == o.b_hat
+    assert mp.max_mean_bits(SYSP, 1e-9, 1e-9) is None
+
+
+def test_allocator_infeasible_and_degenerate():
+    stats = mp.LayerStats(lam=(30.0,), sens=(1.0,))
+    assert mp.allocate_bits(stats, SYSP, 1e-9, 1e-9) is None
+    # single layer: the allocation *is* the best uniform bit-width
+    sol = mp.allocate_bits(stats, SYSP, 1.3, 1.5)
+    assert sol.bits == (sol.uniform_b,)
+    assert sol.objective == pytest.approx(sol.uniform_objective)
+
+
+def test_allocator_never_worse_and_strictly_better_somewhere():
+    """Acceptance (b), model side: Σ A^(l)·D^U under the allocated plan
+    is never above the best uniform b̂ at the same (T0, E0), and strictly
+    below it on at least one budget."""
+    cfg, model, params = _model(split=3)
+    stats = mp.decoder_layer_stats(params, 3)
+    strict = 0
+    for t0, e0 in ((1.12, 0.92), (1.18, 1.05), (1.3, 1.5), (1.6, 2.5)):
+        sol = mp.allocate_bits(stats, SYSP, t0, e0)
+        assert sol is not None
+        # equal feasibility: the plan's mean bits stay on the same
+        # (T0, E0) frontier the uniform b̂ is the floor of
+        b_star = mp.max_mean_bits(SYSP, t0, e0)
+        assert sol.mean_bits <= b_star + 1e-9
+        assert sol.delay <= t0 * (1 + 1e-6)
+        assert sol.energy <= e0 * (1 + 1e-6)
+        assert all(1 <= b <= 16 for b in sol.bits)
+        assert sol.objective <= sol.uniform_objective * (1 + 1e-9)
+        if sol.objective < sol.uniform_objective * (1 - 1e-6):
+            strict += 1
+    assert strict >= 1
+
+
+def test_allocated_plan_lowers_measured_distortion():
+    """Acceptance (b), measured side: the allocation's win on the bound
+    shows up in ‖f(x,W) − f(x,Ŵ)‖₁ through the real forward."""
+    cfg, model, params = _model(split=3)
+    stats = mp.decoder_layer_stats(params, 3)
+    sol = mp.allocate_bits(stats, SYSP, 1.12, 0.92)
+    assert sol.objective < sol.uniform_objective  # mixed plan is distinct
+    axes = model.logical_axes()
+    x = jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0,
+                           cfg.vocab_size)
+
+    def apply_fn(p, toks):
+        return model.forward(p, {"tokens": toks})[0]
+
+    d_uni = measured_output_distortion(
+        apply_fn, params,
+        fake_quantize_agent(params, axes, cfg,
+                            QuantConfig(bits=sol.uniform_b), ste=False), x)
+    d_mix = measured_output_distortion(
+        apply_fn, params,
+        fake_quantize_agent(params, axes, cfg, mp.plan_from_bits(sol.bits),
+                            ste=False), x)
+    assert float(d_mix) < float(d_uni)
+
+
+# ---------------------------------------------------------------------------
+# plan-aware serving
+# ---------------------------------------------------------------------------
+
+def test_engine_mixed_plan_kernel_containers():
+    cfg, model, params = _model(split=2)
+    eng = CoInferenceEngine(model, params, SYSP, path="kernel",
+                            cache_weights=True)
+    eng.configure(QuantPlan.from_layer_bits([4, 8]))
+    assert eng.agent_path == "kernel-mixed[4/8]"
+    assert eng.b_eff == pytest.approx(6.0)
+    first = eng._qlinears
+    # flipping away and back hits the plan-keyed weight cache
+    eng.configure(16)
+    eng.configure(QuantPlan.from_layer_bits([4, 8]))
+    assert eng._qlinears is first
+    # >8-bit layers fall back to full-precision matmuls on fake weights
+    eng.configure(QuantPlan.from_layer_bits([3, 12]))
+    assert eng.agent_path == "kernel-mixed[3/12]"
+    logits, stats = eng.serve_batch(
+        {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert stats.plan_bits == (3, 12)
+    # no container cliff: a plan uniform at a non-legacy width keeps
+    # kernel residency like its mixed neighbors, instead of degenerating
+    # into the (4, 8)-only legacy branch's fake fallback
+    eng.configure(QuantPlan.from_layer_bits([6, 6]))
+    assert eng.agent_path == "kernel-mixed[6/6]"
+    # legacy widths and the fake path still degenerate to the int path
+    eng.configure(QuantPlan.from_layer_bits([8, 8]))
+    assert eng.plan is None and eng.agent_path == "kernel-int8"
+    feng = CoInferenceEngine(model, params, SYSP, path="fake")
+    feng.configure(QuantPlan.from_layer_bits([6, 6]))
+    assert feng.plan is None and feng.b_hat == 6
+    # ...but never when degenerating would drop the plan's quantizer
+    # metadata: a pot-log plan on a uniform-scheme engine stays a plan
+    feng.configure(QuantPlan.from_layer_bits([6, 6], scheme="pot-log"))
+    assert feng.plan is not None
+    logits_plan, _ = feng.serve_batch({"tokens": jnp.zeros((1, 8),
+                                                           jnp.int32)})
+    peng = CoInferenceEngine(model, params, SYSP, path="fake",
+                             scheme="pot-log")
+    peng.configure(6)
+    logits_ref, _ = peng.serve_batch({"tokens": jnp.zeros((1, 8),
+                                                          jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(logits_plan),
+                                  np.asarray(logits_ref))
+
+
+def test_solve_mixed_cached_on_stats_not_names():
+    cfg, model, params = _model(split=2)
+    eng = CoInferenceEngine(model, params, SYSP)
+    cache = CodesignCache()
+    a = cache.solve_mixed(eng.layer_stats(), SYSP,
+                          QosClass("a", t0=1.3, e0=1.5), b_max=16)
+    b = cache.solve_mixed(eng.layer_stats(), SYSP,
+                          QosClass("b", t0=1.3, e0=1.5), b_max=16)
+    assert a == b
+    assert cache.misses == 1 and cache.hits == 1
+    # disjoint keyspace from the uniform solver
+    cache.solve(eng.lam, SYSP, QosClass("a", t0=1.3, e0=1.5), b_max=16)
+    assert cache.misses == 2
+
+
+@pytest.mark.parametrize("path", ["fake", "kernel"])
+def test_batched_mixed_two_classes_bitwise_vs_sequential(path):
+    """Acceptance (c): two QoS classes on *different* plans through the
+    batched engine produce per-request logits identical to sequential
+    serving with the same plans."""
+    cfg, model, params = _model(split=2, seed=1)
+    classes = [QosClass("tight", t0=1.15, e0=0.95),
+               QosClass("loose", t0=1.3, e0=1.5)]
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=classes,
+                                   max_batch=3, path=path,
+                                   mixed_precision=True)
+    pa, pb = eng.plan_for("tight"), eng.plan_for("loose")
+    assert pa.key() != pb.key()   # genuinely different plans
+    rng = np.random.default_rng(5)
+    sent = {}
+    for i in range(8):
+        qos = classes[i % 2].name
+        toks = rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 15)))
+        sent[eng.submit(toks, qos)] = (toks, qos)
+    responses = eng.drain()
+    assert len(responses) == len(sent)
+
+    seq = CoInferenceEngine(model, params, SYSP, path=path,
+                            cache_weights=True)
+    for r in responses:
+        toks, qos = sent[r.request_id]
+        sol = eng.solution_for(qos)
+        seq.configure(eng.plan_for(qos), sol.f, sol.f_server)
+        want, _ = seq.serve_batch(
+            {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        np.testing.assert_array_equal(np.asarray(r.logits),
+                                      np.asarray(want[0]))
+    # batches of a mixed class report their per-layer bits
+    for b in eng.batch_history:
+        sol = eng.solution_for(b.qos)
+        if len(set(sol.bits)) > 1:
+            assert b.plan_bits == sol.bits

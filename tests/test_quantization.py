@@ -10,7 +10,8 @@ from repro.core.quantization import (QuantConfig, dequantize, max_quant_error,
                                      pack_int4, qat_quantize, quantize,
                                      quantize_dequantize, quantize_tree,
                                      quantize_tree_stacked, unpack_int4,
-                                     fake_quantize_tree)
+                                     fake_quantize_tree, wire_bytes,
+                                     _absmax)
 
 SCHEMES = ("uniform", "pot-log")
 
@@ -129,6 +130,91 @@ def test_qat_straight_through_gradient():
     expect = 2 * quantize_dequantize(x, cfg)
     np.testing.assert_allclose(np.asarray(g), np.asarray(expect),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# per-group -> per-channel fallback (contraction axis not divisible)
+# ---------------------------------------------------------------------------
+
+def test_absmax_per_group_fallback_equals_per_channel():
+    """group_size that does not tile the contraction axis falls back to
+    per-channel scales — bitwise the same reduction."""
+    x = _rand(11, (100, 16))             # 100 % 128 != 0
+    grp = QuantConfig(bits=8, granularity="per-group", group_size=128)
+    chan = QuantConfig(bits=8, granularity="per-channel")
+    np.testing.assert_array_equal(np.asarray(_absmax(x, grp)),
+                                  np.asarray(_absmax(x, chan)))
+    # sanity: a divisible axis does NOT fall back (per-row groups differ)
+    x2 = _rand(12, (256, 16))
+    assert _absmax(x2, grp).shape == (256, 16)
+    assert _absmax(x2, chan).shape == (1, 16)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_roundtrip_under_group_fallback(bits):
+    """quantize/dequantize under the fallback matches both the fake-quant
+    reference and the explicit per-channel config."""
+    x = _rand(13, (100, 16))
+    grp = QuantConfig(bits=bits, granularity="per-group", group_size=128)
+    chan = QuantConfig(bits=bits, granularity="per-channel")
+    qt = quantize(x, grp)
+    np.testing.assert_allclose(np.asarray(dequantize(qt)),
+                               np.asarray(quantize_dequantize(x, grp)),
+                               rtol=1e-5, atol=1e-6)
+    qt_chan = quantize(x, chan)
+    np.testing.assert_array_equal(np.asarray(qt.codes),
+                                  np.asarray(qt_chan.codes))
+    np.testing.assert_array_equal(np.asarray(qt.scale),
+                                  np.asarray(qt_chan.scale))
+    # the fallback still bounds the error by the per-channel tau
+    err = float(jnp.max(jnp.abs(x - dequantize(qt))))
+    assert err <= float(max_quant_error(x, chan)) * (1 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# realizable wire sizes
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_uses_real_containers():
+    # <= 4 bits: two codes per byte (pack_int4), NOT (n*bits+7)//8
+    assert wire_bytes(100, 3) == 50
+    assert wire_bytes(101, 4) == 51
+    # 5..8 bits: int8-resident, one byte per code
+    assert wire_bytes(100, 6) == 100
+    assert wire_bytes(100, 8) == 100
+    # 9..16: int16
+    assert wire_bytes(100, 12) == 200
+
+
+@pytest.mark.parametrize("bits", [9, 12, 16])
+def test_wide_codes_use_int16_container(bits):
+    """9..16-bit codes need int16: an int8 cast would silently wrap and
+    make *higher*-precision layers reconstruct worse than 8-bit ones."""
+    x = _rand(15, (128, 32))
+    cfg = QuantConfig(bits=bits, scheme="uniform", granularity="per-channel")
+    qt = quantize(x, cfg)
+    assert qt.codes.dtype == jnp.int16
+    err = float(jnp.max(jnp.abs(x - dequantize(qt))))
+    assert err <= float(max_quant_error(x, cfg)) * (1 + 1e-5)
+    # monotonicity across the container boundary survives
+    err8 = float(jnp.max(jnp.abs(
+        x - dequantize(quantize(x, QuantConfig(bits=8))))))
+    assert err <= err8 * (1 + 1e-6)
+    with pytest.raises(ValueError):
+        quantize(x, QuantConfig(bits=17))
+
+
+def test_nbytes_effective_matches_pack_int4_wire_size():
+    x = _rand(14, (64, 32))
+    for bits, code_bytes in ((3, 64 * 32 // 2), (4, 64 * 32 // 2),
+                             (6, 64 * 32), (8, 64 * 32)):
+        qt = quantize(x, QuantConfig(bits=bits, granularity="per-channel"))
+        scale_bytes = int(np.prod(qt.scale.shape)) * 4
+        assert qt.nbytes_effective() == code_bytes + scale_bytes, bits
+    # bits <= 4 really fits the packed container pack_int4 produces
+    qt4 = quantize(x, QuantConfig(bits=4, granularity="per-channel"))
+    packed = pack_int4(qt4.codes.T).T
+    assert int(np.prod(packed.shape)) == wire_bytes(64 * 32, 4)
 
 
 # ---------------------------------------------------------------------------

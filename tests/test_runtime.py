@@ -207,3 +207,17 @@ def test_engine_transport_bytes_scale_with_b_emb():
     assert s4.emb_bytes * 2 - s8.emb_bytes == 4 * toks.shape[0]
     assert len(s8.emb_row_bytes) == toks.shape[0]
     assert sum(s8.emb_row_bytes) == s8.emb_bytes
+
+
+def test_engine_transport_bytes_use_real_containers():
+    """Uplink accounting bills the containers that exist: nibble packing
+    (pack_int4) for b_emb <= 4, int8 for 5..8 — not (n*bits+7)//8."""
+    _, _, _, eng = _engine()
+    toks = jnp.zeros((2, 16), jnp.int32)
+    d = eng.cfg.d_model
+    eng.b_emb = 2
+    _, s2 = eng.serve_batch({"tokens": toks})
+    assert s2.emb_row_bytes[0] == (16 * d + 1) // 2 + 4
+    eng.b_emb = 6
+    _, s6 = eng.serve_batch({"tokens": toks})
+    assert s6.emb_row_bytes[0] == 16 * d + 4
