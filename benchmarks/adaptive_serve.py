@@ -1,0 +1,266 @@
+"""Trace-driven adaptive serving: static vs oracle-per-step vs adaptive
+(DESIGN.md §9).
+
+One seeded dynamic environment — Markov-chain Wi-Fi uplink, the Table I
+coarse frequency profiles of ``testbed_profiles.py`` replayed as a
+time-varying f_max cap, and a battery running below its reserve — drives
+three policies over the *identical* request stream through
+``AdaptiveCoInferenceEngine``:
+
+  static   — (P1) solved once under the initial state, never replanned;
+             the environment still bills it (frequency caps clip f).
+  oracle   — re-solved on every exact per-step state change: the
+             clairvoyant upper bound.
+  adaptive — quantized-state drift detection + QoS-miss monitoring with
+             hysteresis, the deployable middle.
+
+Scored on measured output distortion (vs a full-precision engine),
+deadline-violation rate, modeled energy, and replan count.  The
+acceptance criteria of ISSUE 3:
+
+  * adaptive strictly fewer deadline violations than static;
+  * adaptive distortion within 10% of oracle;
+  * replan count bounded by batches/hysteresis;
+  * on a constant trace the adaptive engine is bitwise identical to
+    ``BatchedCoInferenceEngine``.
+
+All timescales are calibrated to the *smoke* model's realized workload
+(DESIGN.md §7 cost-model calibration): the engine bills batches at the
+model's actual FLOPs, so QoS budgets and environment dwell times live at
+that scale — the structure (linear-in-b̂ delay, cubic-in-f energy,
+transport off the top of both budgets) is scale-free.
+
+Besides the printed tables, ``run()`` writes machine-readable
+``BENCH_adaptive.json`` at the repo root, the adaptive-serving perf
+record diffed across PRs.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only adaptive
+  or  PYTHONPATH=src python benchmarks/adaptive_serve.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.env import Battery, Environment, MarkovLink, TraceReplay
+from repro.models.registry import build_model
+from repro.runtime import (AdaptiveCoInferenceEngine,
+                           BatchedCoInferenceEngine, CoInferenceEngine,
+                           QosClass)
+
+try:
+    from .common import table
+    from .testbed_profiles import PROFILES
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+    # testbed_profiles uses package-relative imports; in script mode fall
+    # back to its literal Table I map (asserted equal under the package)
+    PROFILES = {"low": 0.6e9, "medium": 1.2e9, "high": 2.0e9}
+
+ARCH = "qwen2-0.5b"
+SEQ = 32
+MAX_BATCH = 4
+N_REQUESTS = 30
+HYSTERESIS = 2
+
+# QoS classes at the smoke model's realized per-request workload scale
+# (see module docstring): "interactive" is tight — under throttled f or
+# a faded link some windows are genuinely infeasible and must degrade —
+# "bulk" is loose
+CLASSES = [
+    QosClass("interactive", t0=4.0e-5, e0=2.0e-3),
+    QosClass("bulk", t0=1.2e-4, e0=6.0e-3),
+]
+MIX = ("interactive", "interactive", "bulk")
+
+# Markov Wi-Fi uplink (bytes/s), scaled so transport is commensurate
+# with the smoke compute delay: good ~10 us, fair ~26 us, bad ~103 us
+# per nominal request at b_emb=8
+LINK_RATES = (2.0e8, 8.0e7, 2.0e7)
+LINK_TRANSITION = ((0.92, 0.06, 0.02),
+                   (0.10, 0.82, 0.08),
+                   (0.06, 0.24, 0.70))
+
+
+def smoke_sysparams(model) -> SystemParams:
+    """Base SystemParams billed at the smoke model's actual FLOPs for
+    one nominal SEQ-token request, with the uplink terms enabled.  (P1)
+    plans against this per-request workload; batches bill their real
+    token count, so a backed-up queue packing multiple requests really
+    does run past the single-request plan — slow policies pay for it."""
+    eng = CoInferenceEngine(model, model.init(jax.random.PRNGKey(9)),
+                            SystemParams(n_flop_agent=1.0,
+                                         n_flop_server=1.0))
+    n_a, n_s = eng.flop_split(SEQ)
+    d = model.cfg.d_model
+    return SystemParams(
+        n_flop_agent=n_a, n_flop_server=n_s,
+        emb_bytes_full=float(SEQ * d * 2),  # f16 boundary activation
+        link_bps=LINK_RATES[0],
+        tx_power_w=0.25)
+
+
+def build_environment(seed: int = 0, horizon_s: float = 0.04) -> Environment:
+    """Markov link + Table I profile replay as the f_max cap + battery."""
+    schedule = ("high", "low", "high", "low")
+    dwell = horizon_s / len(schedule)
+    return Environment(
+        seed=seed, dt_s=1.0e-3, horizon_s=horizon_s,
+        link=MarkovLink(rates_bps=LINK_RATES, transition=LINK_TRANSITION),
+        f_cap=TraceReplay(values=[PROFILES[n] for n in schedule],
+                          dwell_s=dwell),
+        battery=Battery(capacity_j=0.6, drain_w=3.0, soc0=0.4))
+
+
+def request_stream(cfg, n: int = N_REQUESTS, seed: int = 5,
+                   gap_mean_s: float = 1.0e-3) -> List[tuple]:
+    """(tokens, qos, arrival_s) — one stream shared by every policy."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(SEQ // 2, SEQ + 1)))
+        out.append((toks, MIX[i % len(MIX)], t))
+        t += float(rng.exponential(gap_mean_s))
+    return out
+
+
+def run_policy(policy: str, model, params, sysp: SystemParams,
+               env: Environment, stream, refs) -> Dict:
+    eng = AdaptiveCoInferenceEngine(
+        model, params, sysp, classes=CLASSES, max_batch=MAX_BATCH,
+        environment=env, policy=policy, hysteresis_steps=HYSTERESIS)
+    sent = {}
+    for toks, qos, arr in stream:
+        sent[eng.submit(toks, qos, arrival_s=arr)] = toks
+    responses = eng.drain()
+    dist = sum(float(jnp.sum(jnp.abs(r.logits - refs[r.request_id])))
+               for r in responses) / len(responses)
+    rep, arep = eng.report(), eng.adaptive_report()
+    return {
+        "policy": policy,
+        "violation_rate": arep.deadline_violation_rate,
+        "violations": arep.deadline_violations,
+        "distortion": dist,
+        "energy_j": rep.total_energy_j,
+        "replans": arep.replans,
+        "plan_switches": arep.plan_switches,
+        "degraded_batches": arep.degraded_batches,
+        "weight_variants": arep.weight_variants,
+        "env_keys_seen": arep.env_keys_seen,
+        "batches": rep.batches_served,
+        "p1_solves": rep.codesign_misses,
+    }
+
+
+def verify_constant_trace_bitwise(model, params, sysp, stream) -> bool:
+    """Identity environment ⇒ the adaptive engine must reproduce the
+    static batched engine bit for bit."""
+    env = Environment(dt_s=1.0e-3, horizon_s=0.04, seed=0)
+    a = AdaptiveCoInferenceEngine(model, params, sysp, classes=CLASSES,
+                                  max_batch=MAX_BATCH, environment=env)
+    b = BatchedCoInferenceEngine(model, params, sysp, classes=CLASSES,
+                                 max_batch=MAX_BATCH)
+    for eng in (a, b):
+        for toks, qos, arr in stream:
+            eng.submit(toks, qos, arrival_s=arr)
+    ra, rb = a.drain(), b.drain()
+    if len(ra) != len(rb) or a.adaptive_report().plan_switches:
+        return False
+    return all(x.stats == y.stats
+               and np.array_equal(np.asarray(x.logits), np.asarray(y.logits))
+               for x, y in zip(ra, rb))
+
+
+def run() -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = smoke_sysparams(model)
+    env = build_environment()
+    stream = request_stream(cfg)
+    print(f"arch={cfg.name} requests={len(stream)} max_batch={MAX_BATCH} "
+          f"hysteresis={HYSTERESIS} env: {env.n_steps} steps x "
+          f"{env.dt_s * 1e3:.1f}ms (markov wifi + Table I profile replay "
+          f"+ battery)")
+
+    # full-precision references, once per request (shared across policies)
+    clean = CoInferenceEngine(model, params, sysp, b_emb=16)
+    clean.configure(16)
+    refs = {}
+    for rid, (toks, _, _) in enumerate(stream):
+        out, _ = clean.serve_batch(
+            {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        refs[rid] = out[0]
+
+    rows = [run_policy(p, model, params, sysp, env, stream, refs)
+            for p in ("static", "oracle", "adaptive")]
+    by = {r["policy"]: r for r in rows}
+    table(["policy", "violation rate", "distortion", "energy (J)",
+           "replans", "switches", "degraded", "weight sets"],
+          [[r["policy"], f"{r['violation_rate']:.3f}",
+            f"{r['distortion']:.1f}", f"{r['energy_j']:.3e}",
+            r["replans"], r["plan_switches"], r["degraded_batches"],
+            r["weight_variants"]] for r in rows])
+
+    replan_bound = by["adaptive"]["batches"] // HYSTERESIS
+    bitwise = verify_constant_trace_bitwise(model, params, sysp, stream)
+    acceptance = {
+        "adaptive_beats_static_violations":
+            by["adaptive"]["violations"] < by["static"]["violations"],
+        "adaptive_distortion_within_10pct_of_oracle":
+            by["adaptive"]["distortion"]
+            <= 1.10 * by["oracle"]["distortion"],
+        "replans_bounded_by_hysteresis":
+            by["adaptive"]["replans"] <= replan_bound,
+        "replan_bound": replan_bound,
+        "constant_trace_bitwise": bitwise,
+    }
+    ok = all(v for k, v in acceptance.items() if isinstance(v, bool))
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'}")
+    for k, v in acceptance.items():
+        print(f"  {k}: {v}")
+
+    results = {
+        "acceptance_ok": ok,
+        "arch": cfg.name, "seq": SEQ, "max_batch": MAX_BATCH,
+        "n_requests": len(stream), "hysteresis_steps": HYSTERESIS,
+        "classes": [{"name": c.name, "t0": c.t0, "e0": c.e0}
+                    for c in CLASSES],
+        "policies": by,
+        "acceptance": acceptance,
+    }
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    if not ok:
+        # CI runs this section on every PR (extras job); a regression of
+        # the ISSUE 3 acceptance criteria must fail the build, not just
+        # print — benchmarks/run.py converts the raise into a failed
+        # section and a nonzero exit
+        raise RuntimeError(f"adaptive-serving acceptance failed: "
+                           f"{acceptance}")
+    return results
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the adaptive-serving numbers as ``BENCH_adaptive.json`` at
+    the repo root — the machine-readable record diffed across PRs."""
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_adaptive.json"
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+if __name__ == "__main__":
+    run()

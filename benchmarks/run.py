@@ -14,6 +14,9 @@ Sections (paper artifact -> module):
              batch size, bit-width, measured distortion — the
              machine-readable perf record diffed across PRs)
     mixed   per-layer bit allocation vs uniform     mixed_precision_sweep.py
+    adaptive static/oracle/adaptive serving on a     adaptive_serve.py
+            dynamic link/thermal/battery trace
+            (also writes BENCH_adaptive.json at the repo root)
 """
 
 from __future__ import annotations
@@ -22,7 +25,7 @@ import argparse
 import sys
 import time
 
-from . import (codesign_sweep, distortion, kernel_bench,
+from . import (adaptive_serve, codesign_sweep, distortion, kernel_bench,
                mixed_precision_sweep, rd_bounds, serve_throughput,
                testbed_profiles, weight_stats)
 from .common import banner
@@ -38,6 +41,8 @@ SECTIONS = {
               serve_throughput.run),
     "mixed": ("Mixed precision  allocated plans vs uniform b̂",
               mixed_precision_sweep.run),
+    "adaptive": ("Adaptive serving  static vs oracle vs adaptive on a "
+                 "dynamic trace", adaptive_serve.run),
 }
 
 

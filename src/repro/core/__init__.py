@@ -1,10 +1,11 @@
 """Paper core: distortion approximation, rate-distortion bounds, quantizers,
 and the joint bit-width x frequency co-design (paper §III-§V)."""
 
-from .cost_model import SystemParams, total_delay, total_energy  # noqa: F401
+from .cost_model import (SystemParams, total_delay, total_energy,  # noqa: F401
+                         transport_delay, transport_energy)
 from .codesign import (CodesignSolution, distortion_gap, solve_oracle,  # noqa: F401
                        solve_sca, feasible_bitwidth,
-                       min_energy_under_deadline)
+                       min_energy_under_deadline, net_budgets)
 from .baselines import (solve_fixed_frequency, solve_feasible_random,  # noqa: F401
                         solve_ppo)
 from .quantization import (QuantConfig, QuantPlan, QuantizedTensor,  # noqa: F401

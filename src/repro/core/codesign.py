@@ -37,11 +37,12 @@ from typing import Optional
 
 import numpy as np
 
-from .cost_model import SystemParams
+from .cost_model import (SystemParams, transport_delay, transport_energy)
 
 __all__ = [
     "CodesignSolution",
     "distortion_gap",
+    "net_budgets",
     "min_energy_under_deadline",
     "feasible_bitwidth",
     "solve_oracle",
@@ -80,6 +81,26 @@ def _gap_grad(b: float, lam: float) -> float:
     d_upper = dg / (4.0 * lam * math.sqrt(g))
     d_lower = -math.log(2.0) / (lam * 2.0 ** (r + 1.0))
     return d_upper - d_lower
+
+
+# ---------------------------------------------------------------------------
+# Link-aware budget reduction
+# ---------------------------------------------------------------------------
+
+def net_budgets(p: SystemParams, t0: float, e0: float,
+                b_emb: Optional[float]) -> "tuple[float, float]":
+    """(T0, E0) left for computation after the uplink takes its share.
+
+    The embedding transport at ``b_emb`` is independent of the decision
+    variables (b̂, f, f̃), so a link-aware solve is the computation-only
+    solve against the *reduced* budgets T0 − t_x and E0 − e_x (tx power ×
+    uplink time).  With ``b_emb=None`` or link modeling disabled the
+    budgets pass through untouched — the faithful model of eqs. (4)–(9).
+    """
+    if b_emb is None:
+        return t0, e0
+    return (t0 - float(transport_delay(b_emb, p)),
+            e0 - float(transport_energy(b_emb, p)))
 
 
 # ---------------------------------------------------------------------------
@@ -138,20 +159,28 @@ def min_energy_under_deadline(workload_frac: float, p: SystemParams,
 
 
 def feasible_bitwidth(b_hat: float, p: SystemParams, t0: float,
-                      e0: float) -> "tuple[bool, float, float, float]":
+                      e0: float, b_emb: Optional[float] = None
+                      ) -> "tuple[bool, float, float, float]":
     """Can bit-width ``b_hat`` meet (T0, E0) at *some* frequency pair?
 
     Pure feasibility: the objective (and thus the weight statistic λ)
     plays no role here, only the cost model — frequencies are chosen by
     the min-energy-under-deadline subproblem and checked against E0.
+    With ``b_emb`` the uplink's delay/energy share is deducted from the
+    budgets first (:func:`net_budgets`).
 
     Returns ``(ok, f, f_server, e_min)``; on infeasibility ``f`` and
     ``f_server`` are NaN and ``e_min`` is the (unmeetable) energy floor,
     which may be ``inf`` when even the deadline alone cannot be met.
     """
+    t0, e0 = net_budgets(p, t0, e0, b_emb)
+    if t0 <= 0.0 or e0 <= 0.0:
+        return False, math.nan, math.nan, math.inf
     w = b_hat / p.b_full
     e_min, f, fs = min_energy_under_deadline(w, p, t0)
-    if e_min <= e0 * (1.0 + 1e-9):
+    # isfinite guard: an unmeetable deadline reports e_min = inf, which
+    # must stay infeasible even under a relaxed (infinite) energy budget
+    if math.isfinite(e_min) and e_min <= e0 * (1.0 + 1e-9):
         return True, f, fs, e_min
     return False, math.nan, math.nan, e_min
 
@@ -177,10 +206,11 @@ class CodesignSolution:
 
 def _pack(b_hat: int, f: float, fs: float, lam: float, p: SystemParams,
           iterations: int = 0, b_relaxed: float = float("nan"),
-          feasible: bool = True) -> CodesignSolution:
+          feasible: bool = True,
+          b_emb: Optional[float] = None) -> CodesignSolution:
     from .cost_model import total_delay, total_energy
-    t = float(total_delay(b_hat, f, fs, p))
-    e = float(total_energy(b_hat, f, fs, p))
+    t = float(total_delay(b_hat, f, fs, p, b_emb=b_emb))
+    e = float(total_energy(b_hat, f, fs, p, b_emb=b_emb))
     r = b_hat - 1.0
     return CodesignSolution(
         b_hat=b_hat, f=f, f_server=fs,
@@ -195,15 +225,17 @@ def _pack(b_hat: int, f: float, fs: float, lam: float, p: SystemParams,
 # ---------------------------------------------------------------------------
 
 def solve_oracle(lam: float, p: SystemParams, t0: float, e0: float,
-                 b_max: int = 16) -> Optional[CodesignSolution]:
+                 b_max: int = 16, b_emb: Optional[float] = None
+                 ) -> Optional[CodesignSolution]:
     """Exact solution of (P1) by enumerating b_hat (the objective is
     monotonically decreasing in b_hat for b_hat >= 1, verified in tests), so
     the optimum is the largest feasible bit-width with its min-energy
-    frequency assignment."""
+    frequency assignment.  ``b_emb`` makes the solve link-aware: the
+    uplink's delay/energy share comes off (T0, E0) first."""
     for b_hat in range(b_max, 0, -1):
-        ok, f, fs, _ = feasible_bitwidth(b_hat, p, t0, e0)
+        ok, f, fs, _ = feasible_bitwidth(b_hat, p, t0, e0, b_emb=b_emb)
         if ok:
-            return _pack(b_hat, f, fs, lam, p)
+            return _pack(b_hat, f, fs, lam, p, b_emb=b_emb)
     return None
 
 
@@ -290,8 +322,16 @@ def _solve_p4k(b_k: float, v_k: float, lam: float, p: SystemParams,
 
 def solve_sca(lam: float, p: SystemParams, t0: float, e0: float,
               b_max: int = 16, tol: float = 1e-6, max_iters: int = 64,
-              ) -> Optional[CodesignSolution]:
-    """Algorithm 1 (paper).  Returns None when (P1) is infeasible."""
+              b_emb: Optional[float] = None) -> Optional[CodesignSolution]:
+    """Algorithm 1 (paper).  Returns None when (P1) is infeasible.
+
+    ``b_emb`` makes the solve link-aware (:func:`net_budgets`): the
+    surrogates run against the computation budgets left after the uplink.
+    """
+    t0_net, e0_net = net_budgets(p, t0, e0, b_emb)
+    if t0_net <= 0.0 or e0_net <= 0.0:
+        return None
+    t0, e0 = t0_net, e0_net
     # Step 1-2: relax and initialize a feasible local point.
     ok1, _, _, _ = feasible_bitwidth(1.0, p, t0, e0)
     if not ok1:
@@ -321,5 +361,5 @@ def solve_sca(lam: float, p: SystemParams, t0: float, e0: float,
         ok, f_r, fs_r, _ = feasible_bitwidth(b_hat, p, t0, e0)
         if ok:
             return _pack(b_hat, f_r, fs_r, lam, p, iterations=iters,
-                         b_relaxed=b_k)
+                         b_relaxed=b_k, b_emb=b_emb)
     return None

@@ -12,7 +12,9 @@ plus (our addition, used by the serving engine and the multi-pod mapping) an
 optional transport term for the intermediate embedding: the boundary
 activation of size S_emb bytes at bit-width b_emb over a link of rate
 ``link_bps`` — this is the Wi-Fi uplink in the paper's testbed and the
-ICI/DCN hop in the pod mapping.  It defaults to 0 so the faithful model
+ICI/DCN hop in the pod mapping — and, symmetric with it, an uplink
+*transmit-energy* term ``tx_power_w × transport_delay`` so link-aware
+plans account for radio energy.  Both default to 0 so the faithful model
 (computation-dominated, as the paper assumes) is the baseline.
 
 All functions are jnp-pure so the co-design optimizer can differentiate
@@ -26,7 +28,8 @@ import dataclasses
 import jax.numpy as jnp
 
 __all__ = ["SystemParams", "agent_delay", "server_delay", "agent_energy",
-           "server_energy", "total_delay", "total_energy"]
+           "server_energy", "transport_delay", "transport_energy",
+           "total_delay", "total_energy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +55,7 @@ class SystemParams:
     # optional transport (0 = faithful computation-only model)
     emb_bytes_full: float = 0.0  # boundary embedding bytes at full precision
     link_bps: float = 0.0        # uplink rate in bytes/s; 0 disables
+    tx_power_w: float = 0.0      # radio transmit power; 0 disables tx energy
 
 
 def agent_delay(b_hat, f, p: SystemParams):
@@ -67,8 +71,20 @@ def server_delay(f_server, p: SystemParams):
 def transport_delay(b_emb, p: SystemParams):
     """Embedding uplink time (0 when link modeling is disabled)."""
     if p.link_bps <= 0.0 or p.emb_bytes_full <= 0.0:
-        return jnp.float32(0.0)
+        # python scalar, not jnp.float32: keeps host-side float64 codesign
+        # math at full precision when the term is summed in
+        return 0.0
     return (b_emb / p.b_full) * p.emb_bytes_full / p.link_bps
+
+
+def transport_energy(b_emb, p: SystemParams):
+    """Uplink radio energy: tx power × uplink time (0 when disabled).
+
+    Symmetric with :func:`transport_delay`, so the codesign feasibility
+    check can bill the radio the same way it bills the link time."""
+    if p.tx_power_w <= 0.0:
+        return 0.0
+    return p.tx_power_w * transport_delay(b_emb, p)
 
 
 def agent_energy(b_hat, f, p: SystemParams):
@@ -91,6 +107,10 @@ def total_delay(b_hat, f, f_server, p: SystemParams, b_emb=None):
     return t
 
 
-def total_energy(b_hat, f, f_server, p: SystemParams):
-    """Eq. (9)."""
-    return agent_energy(b_hat, f, p) + server_energy(f_server, p)
+def total_energy(b_hat, f, f_server, p: SystemParams, b_emb=None):
+    """Eq. (9) (+ optional uplink transmit energy, mirroring
+    :func:`total_delay`'s optional transport term)."""
+    e = agent_energy(b_hat, f, p) + server_energy(f_server, p)
+    if b_emb is not None:
+        e = e + transport_energy(b_emb, p)
+    return e

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codesign import _d_upper, min_energy_under_deadline
+from .codesign import _d_upper, min_energy_under_deadline, net_budgets
 from .cost_model import SystemParams, total_delay, total_energy
 from .distortion import chain_bound_coefficients, induced_l1_norm
 from .quantization import QuantConfig, QuantPlan, quantize_dequantize
@@ -177,10 +177,16 @@ def _mean_bits_feasible(mean_b: float, p: SystemParams, t0: float,
 
 
 def max_mean_bits(p: SystemParams, t0: float, e0: float,
-                  b_max: int = 16) -> Optional[float]:
+                  b_max: int = 16,
+                  b_emb: Optional[float] = None) -> Optional[float]:
     """Largest mean agent bit-width meeting (T0, E0), or None if even
     mean 1 is infeasible.  Monotone in the workload fraction (delay is
-    linear in b̄, min-energy increasing), so plain bisection."""
+    linear in b̄, min-energy increasing), so plain bisection.  ``b_emb``
+    deducts the uplink's delay/energy share from the budgets first
+    (``codesign.net_budgets``)."""
+    t0, e0 = net_budgets(p, t0, e0, b_emb)
+    if t0 <= 0.0 or e0 <= 0.0:
+        return None
     if not _mean_bits_feasible(1.0, p, t0, e0):
         return None
     if _mean_bits_feasible(float(b_max), p, t0, e0):
@@ -196,9 +202,10 @@ def max_mean_bits(p: SystemParams, t0: float, e0: float,
 
 
 def best_uniform_bits(p: SystemParams, t0: float, e0: float,
-                      b_max: int = 16) -> Optional[int]:
+                      b_max: int = 16,
+                      b_emb: Optional[float] = None) -> Optional[int]:
     """Largest feasible *uniform* b̂ — what ``solve_oracle`` assigns."""
-    b_star = max_mean_bits(p, t0, e0, b_max)
+    b_star = max_mean_bits(p, t0, e0, b_max, b_emb=b_emb)
     return None if b_star is None else int(math.floor(b_star + 1e-9))
 
 
@@ -239,7 +246,8 @@ class MixedSolution:
 
 
 def allocate_bits(stats: LayerStats, p: SystemParams, t0: float, e0: float,
-                  b_max: int = 16) -> Optional[MixedSolution]:
+                  b_max: int = 16,
+                  b_emb: Optional[float] = None) -> Optional[MixedSolution]:
     """Greedy/water-filling bit allocation under the (P1) constraints.
 
     Start every layer at 1 bit (the cheapest plan; if that is infeasible
@@ -248,8 +256,10 @@ def allocate_bits(stats: LayerStats, p: SystemParams, t0: float, e0: float,
     marginal bound decrease A^(l)·[D^U(b_l-1) - D^U(b_l)].  D^U is
     convex decreasing in b, so marginal gains shrink along each layer's
     curve and the greedy optimum is exact for the separable objective.
+    ``b_emb`` makes the feasibility frontier link-aware, exactly as in
+    ``codesign.solve_sca``.
     """
-    b_star = max_mean_bits(p, t0, e0, b_max)
+    b_star = max_mean_bits(p, t0, e0, b_max, b_emb=b_emb)
     if b_star is None:
         return None
     n = stats.n_layers
@@ -274,15 +284,16 @@ def allocate_bits(stats: LayerStats, p: SystemParams, t0: float, e0: float,
             heapq.heappush(heap, (-gain(l, bits[l]), l))
 
     mean_b = sum(bits) / n
-    e, f, fs = min_energy_under_deadline(mean_b / p.b_full, p, t0)
+    t0_net, _ = net_budgets(p, t0, e0, b_emb)
+    e, f, fs = min_energy_under_deadline(mean_b / p.b_full, p, t0_net)
     u_b = int(math.floor(b_star + 1e-9))
     return MixedSolution(
         bits=tuple(bits), f=f, f_server=fs,
         objective=allocation_objective(stats, bits),
         uniform_b=u_b, uniform_objective=uniform_objective(stats, u_b),
         mean_bits=mean_b,
-        delay=float(total_delay(mean_b, f, fs, p)),
-        energy=float(total_energy(mean_b, f, fs, p)))
+        delay=float(total_delay(mean_b, f, fs, p, b_emb=b_emb)),
+        energy=float(total_energy(mean_b, f, fs, p, b_emb=b_emb)))
 
 
 def plan_from_bits(bits: Sequence[int], *, scheme: str = "uniform",

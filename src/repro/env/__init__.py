@@ -1,0 +1,8 @@
+"""Dynamic-environment simulation (DESIGN.md §9): composable link /
+thermal / battery processes realized into deterministic, time-indexed
+``SystemParams`` views for adaptive co-inference serving."""
+
+from .environment import Environment, EnvState  # noqa: F401
+from .processes import (Battery, MarkovLink, RayleighLink,  # noqa: F401
+                        ThermalThrottle, TraceReplay)
+from . import presets  # noqa: F401

@@ -1,0 +1,92 @@
+"""Canned environment scenarios (DESIGN.md §9) for the launch driver,
+examples, and benchmarks — one function per `--env-trace` choice.
+
+Each preset returns a fully-seeded :class:`~repro.env.Environment`; the
+numbers are edge-plausible defaults (home-Wi-Fi uplink rates, Jetson-ish
+thermal envelope, the Table I low/medium/high frequency profiles), not
+paper constants — override per call site where a benchmark needs a
+specific regime.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .environment import Environment
+from .processes import (Battery, MarkovLink, RayleighLink, ThermalThrottle,
+                        TraceReplay)
+
+__all__ = ["PROFILE_FMAX", "wifi_markov", "rayleigh_fading",
+           "profile_replay", "battery_drain", "edge_day", "constant"]
+
+# Table I coarse frequency profiles (benchmarks/testbed_profiles.py);
+# duplicated here so src/ never imports from benchmarks/
+PROFILE_FMAX = {"low": 0.6e9, "medium": 1.2e9, "high": 2.0e9}
+
+# good / fair / bad home-uplink states in bytes/s (~20 / 4 / 0.8 Mbit/s)
+_WIFI_RATES = (2.5e6, 5.0e5, 1.0e5)
+_WIFI_TRANSITION = ((0.90, 0.08, 0.02),
+                    (0.10, 0.80, 0.10),
+                    (0.05, 0.20, 0.75))
+
+
+def wifi_markov(*, seed: int = 0, horizon_s: float = 60.0,
+                dt_s: float = 0.5,
+                rates_bps: Sequence[float] = _WIFI_RATES,
+                transition=_WIFI_TRANSITION) -> Environment:
+    """Markov-chain Wi-Fi uplink; computation constants untouched."""
+    return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+                       link=MarkovLink(rates_bps=rates_bps,
+                                       transition=transition))
+
+
+def rayleigh_fading(*, seed: int = 0, horizon_s: float = 60.0,
+                    dt_s: float = 0.5, bandwidth_hz: float = 5.0e6,
+                    mean_snr: float = 8.0,
+                    coherence_s: float = 2.0) -> Environment:
+    """Rayleigh block-fading uplink rate trace."""
+    return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+                       link=RayleighLink(bandwidth_hz=bandwidth_hz,
+                                         mean_snr=mean_snr,
+                                         coherence_s=coherence_s))
+
+
+def profile_replay(schedule: Sequence[str] = ("high", "low", "medium"),
+                   *, seed: int = 0, dwell_s: float = 20.0,
+                   dt_s: float = 0.5,
+                   profiles: Optional[dict] = None) -> Environment:
+    """Replay a coarse-frequency-profile schedule as the f_max cap —
+    the Table I testbed profiles as a time-varying governor."""
+    fmap = PROFILE_FMAX if profiles is None else profiles
+    caps = [fmap[name] for name in schedule]
+    return Environment(seed=seed, horizon_s=dwell_s * len(schedule),
+                       dt_s=dt_s,
+                       f_cap=TraceReplay(values=caps, dwell_s=dwell_s))
+
+
+def battery_drain(*, seed: int = 0, horizon_s: float = 60.0,
+                  dt_s: float = 0.5, capacity_j: float = 900.0,
+                  drain_w: float = 12.0, soc0: float = 0.6) -> Environment:
+    """Battery running down over the horizon; E0 derates below reserve."""
+    return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+                       battery=Battery(capacity_j=capacity_j,
+                                       drain_w=drain_w, soc0=soc0))
+
+
+def edge_day(*, seed: int = 0, horizon_s: float = 90.0,
+             dt_s: float = 0.5) -> Environment:
+    """The kitchen-sink scenario: Markov Wi-Fi + thermal throttling under
+    sustained load + battery drain — all three knobs moving at once."""
+    return Environment(
+        seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+        link=MarkovLink(rates_bps=_WIFI_RATES, transition=_WIFI_TRANSITION),
+        f_cap=ThermalThrottle(tau_s=horizon_s / 4.0),
+        battery=Battery(capacity_j=40.0 * horizon_s, drain_w=15.0,
+                        soc0=0.5))
+
+
+def constant(*, horizon_s: float = 60.0, dt_s: float = 0.5,
+             seed: int = 0) -> Environment:
+    """The identity environment: no process attached, every state equal —
+    the adaptive engine on it is bitwise identical to the static one."""
+    return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s)

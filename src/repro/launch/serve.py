@@ -11,6 +11,12 @@ original one-request-at-a-time path for comparison; the two produce
 bitwise-identical logits per request.  ``--mixed-precision`` replaces
 the scalar b̂ per class with the layer-wise bit allocation of
 ``core.mixed_precision`` (DESIGN.md §8).
+
+``--env-trace`` picks a canned dynamic environment (``repro.env``
+presets: Markov Wi-Fi, Rayleigh fading, Table I profile replay, battery
+drain, or the combined ``edge-day``) and serves through the online
+adaptive engine (DESIGN.md §9); ``--adaptive-policy`` chooses the
+static / adaptive / oracle controller.
 """
 
 from __future__ import annotations
@@ -26,9 +32,19 @@ from ..core import baselines as bl
 from ..core import codesign as cd
 from ..core.cost_model import SystemParams
 from ..data import MarkovLMConfig, MarkovLMDataset
+from ..env import presets as env_presets
 from ..models.registry import build_model
-from ..runtime import (BatchedCoInferenceEngine, CodesignCache,
-                       CoInferenceEngine, QosClass)
+from ..runtime import (AdaptiveCoInferenceEngine, BatchedCoInferenceEngine,
+                       CodesignCache, CoInferenceEngine, QosClass)
+
+ENV_TRACES = {
+    "wifi-markov": env_presets.wifi_markov,
+    "rayleigh": env_presets.rayleigh_fading,
+    "profiles": env_presets.profile_replay,
+    "battery": env_presets.battery_drain,
+    "edge-day": env_presets.edge_day,
+    "constant": env_presets.constant,
+}
 
 
 def main(argv=None):
@@ -49,6 +65,14 @@ def main(argv=None):
     ap.add_argument("--mixed-precision", action="store_true",
                     help="per-layer bit allocation (DESIGN.md §8) instead "
                          "of one uniform b̂ per QoS class")
+    ap.add_argument("--env-trace", default=None,
+                    choices=sorted(ENV_TRACES),
+                    help="serve under a canned dynamic environment "
+                         "(DESIGN.md §9) through the adaptive engine")
+    ap.add_argument("--env-seed", type=int, default=0)
+    ap.add_argument("--adaptive-policy", default="adaptive",
+                    choices=["static", "adaptive", "oracle"],
+                    help="controller for --env-trace serving")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -62,6 +86,8 @@ def main(argv=None):
         n_flop_server=2.0 * per_layer
         * (cfg.n_layers - cfg.split_layer) * tokens)
 
+    if args.env_trace is not None:
+        return serve_adaptive(cfg, model, params, args)
     if args.engine == "batched":
         return serve_batched(cfg, model, params, sysp, args)
     return serve_sequential(cfg, model, params, sysp, args)
@@ -113,6 +139,64 @@ def serve_sequential(cfg, model, params, sysp, args):
           f"{stats.server_delay_s * 1e3:.2f}ms = "
           f"{stats.total_delay_s * 1e3:.2f}ms, {stats.energy_j:.3f}J, "
           f"emb {stats.emb_bytes / 1024:.1f}KiB at b_emb={eng.b_emb}")
+    return 0
+
+
+def serve_adaptive(cfg, model, params, args):
+    """Serve a request stream spread across a dynamic-environment trace
+    through ``AdaptiveCoInferenceEngine`` (DESIGN.md §9)."""
+    env = ENV_TRACES[args.env_trace](seed=args.env_seed)
+    # (P1) decisions at the calibrated workload scale (DESIGN.md §7), so
+    # the (T0, E0) region — and hence the environment — is genuinely
+    # active regardless of the smoke model's real FLOPs
+    sysp = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11,
+                        emb_bytes_full=4.0e5, tx_power_w=0.25)
+    classes = [
+        QosClass("realtime", t0=max(args.t0 / 3.0, 0.2),
+                 e0=max(args.e0 / 2.0, 0.2)),
+        QosClass("interactive", t0=args.t0, e0=args.e0),
+    ]
+    eng = AdaptiveCoInferenceEngine(
+        model, params, sysp, classes=classes, max_batch=args.max_batch,
+        path=args.path, environment=env, policy=args.adaptive_policy,
+        mixed_precision=args.mixed_precision)
+    print(f"arch={cfg.name} env={args.env_trace} (seed {args.env_seed}, "
+          f"{env.n_steps} x {env.dt_s}s) policy={args.adaptive_policy} "
+          f"engine=adaptive")
+    for c in classes:
+        s = eng.solution_for(c.name)
+        print(f"  class {c.name:12s} (T0={c.t0:.2f}s, E0={c.e0:.2f}J): "
+              f"b_hat={s.b_hat} f={s.f / 1e9:.2f}GHz "
+              f"f~={s.f_server / 1e9:.2f}GHz")
+
+    # arrivals spread across the trace so the stream *experiences* it
+    rng = np.random.default_rng(1)
+    span = env.horizon_s * 0.9
+    for i in range(args.requests):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(args.seq // 2,
+                                                  args.seq + 1)))
+        eng.submit(toks, classes[i % len(classes)].name,
+                   arrival_s=i * span / max(args.requests, 1))
+    responses = eng.drain()
+
+    print(f"served {len(responses)} requests in "
+          f"{len(eng.batch_history)} batches:")
+    for b in eng.batch_history:
+        print(f"  [{b.qos:12s}] n={b.batch_size} b_hat={b.b_hat:2d} "
+              f"f={b.f / 1e9:.2f}GHz T={b.batch_delay_s * 1e3:8.2f}ms "
+              f"E={b.energy_j:.3f}J")
+    rep = eng.adaptive_report()
+    print(f"adaptive report: replans={rep.replans} "
+          f"(switches={rep.plan_switches}, degraded="
+          f"{rep.degraded_batches}) deadline violations="
+          f"{rep.deadline_violations}/{rep.requests_served} "
+          f"weight variants={rep.weight_variants} "
+          f"env keys={rep.env_keys_seen}")
+    for e in eng.replan_events:
+        print(f"  t={e.t_s:7.2f}s [{e.qos:12s}] {e.reason}: "
+              f"b {e.b_before:.0f} -> {e.b_after:.0f}"
+              + (" (degraded)" if e.degraded else ""))
     return 0
 
 

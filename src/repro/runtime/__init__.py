@@ -1,5 +1,8 @@
-"""Runtime layer: training loop, co-inference serving, fault tolerance."""
+"""Runtime layer: training loop, co-inference serving (static + online
+adaptive), fault tolerance."""
 
+from .adaptive import (AdaptiveCoInferenceEngine, AdaptiveReport,  # noqa: F401
+                       ReplanEvent)
 from .fault_tolerance import (HostFailure, HostSet, StragglerMonitor,  # noqa: F401
                               Supervisor, SupervisorReport)
 from .serve_engine import (BatchedCoInferenceEngine, BatchStats,  # noqa: F401

@@ -1,0 +1,315 @@
+"""Online adaptive co-inference serving (DESIGN.md §9).
+
+:class:`AdaptiveCoInferenceEngine` extends the batched engine with a
+closed loop over a dynamic environment (``repro.env``): before each
+batch it observes the environment at the virtual-clock decision instant,
+detects drift, and — policy permitting — re-solves the class's operating
+point ((P1) or the layer-wise allocation) against the *quantized*
+environment state through the extended ``CodesignCache``; realized
+delay/energy are then billed against the *unquantized* current state
+with the plan's frequencies clipped to the thermal cap, so accounting
+reflects what the hardware would actually do, plan lag included.
+
+Three policies share the one serving path (``benchmarks/adaptive_serve``
+compares them on identical request streams):
+
+* ``static``   — solve once under the initial state, never replan; the
+                 environment still bills it (frequency caps clip f).
+* ``adaptive`` — quantized-state drift detection + realized-QoS-miss
+                 monitoring, debounced by ``hysteresis_steps`` and
+                 ``min_replan_interval_s``, so re-quantization churn is
+                 bounded: one replan needs that many consecutive
+                 discrepant observations, and a boundary-oscillating
+                 state never sustains a streak.
+* ``oracle``   — re-solve on every change of the *exact* per-step state:
+                 the clairvoyant per-step upper bound (no hysteresis, no
+                 quantization).
+
+Infeasible windows degrade instead of raising: when a class's (T0,
+E0·battery-scale) has no solution under the current state, the engine
+falls back to the lowest-distortion plan that still meets the deadline
+alone, and past that to b̂ = 1 flat out — service continues best-effort
+and the violation counters tell the truth about it.
+
+With ``environment=None`` — or any environment whose per-step state is
+constant and leaves the base ``SystemParams`` unchanged — every decision
+reduces to the static engine's, and responses are bitwise identical to
+``BatchedCoInferenceEngine`` (tests/test_adaptive.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Literal, Optional, Sequence
+
+from ..core import codesign as cd
+from ..core import mixed_precision as mp
+from ..core.cost_model import SystemParams, total_delay, total_energy
+from ..env.environment import Environment, EnvState
+from .serve_engine import (BatchedCoInferenceEngine, QosClass,
+                           ServeResponse)
+
+__all__ = ["AdaptiveCoInferenceEngine", "AdaptiveReport", "ReplanEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One controller decision that re-solved a class's operating point."""
+    t_s: float
+    qos: str
+    reason: str                 # "env-drift" | "qos-miss" | "oracle"
+    env_key: tuple              # quantized state solved against
+    b_before: float             # mean agent bits before/after — equal when
+    b_after: float              # the new state maps to the same plan
+    degraded: bool              # fell back to a best-effort plan
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveReport:
+    """Whole-run controller accounting, complementing ``EngineReport``."""
+    policy: str
+    requests_served: int
+    deadline_violations: int    # responses with wait + batch delay > T0
+    deadline_violation_rate: float
+    energy_violations: int      # batches whose per-request energy > E0
+    replans: int                # controller re-solves after construction
+    plan_switches: int          # replans that actually changed the plan
+    degraded_batches: int       # batches served on a best-effort plan
+    weight_variants: int        # distinct materialized agent weight sets
+    env_keys_seen: int          # distinct quantized states observed
+    hysteresis_steps: int
+
+
+class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
+    """Batched co-inference serving under a dynamic environment."""
+
+    def __init__(self, model, params, sysp: SystemParams, *,
+                 classes: Sequence[QosClass],
+                 environment: Optional[Environment] = None,
+                 policy: Literal["static", "adaptive", "oracle"]
+                 = "adaptive",
+                 hysteresis_steps: int = 2,
+                 min_replan_interval_s: float = 0.0,
+                 **kwargs):
+        if policy not in ("static", "adaptive", "oracle"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if hysteresis_steps < 1:
+            raise ValueError("hysteresis_steps must be >= 1")
+        self.environment = environment
+        self.policy = policy
+        self.hysteresis_steps = int(hysteresis_steps)
+        self.min_replan_interval_s = float(min_replan_interval_s)
+        self.base_sysp = sysp
+        self.replan_events: List[ReplanEvent] = []
+        self._plan_keys: Dict[str, tuple] = {}
+        self._drift_streak: Dict[str, int] = {}
+        self._miss_streak: Dict[str, int] = {}
+        self._last_replan_t: Dict[str, float] = {}
+        self._env_keys_seen: set = set()
+        self._violations = 0
+        self._energy_violations = 0
+        self._degraded_batches = 0
+        super().__init__(model, params, sysp, classes=classes, **kwargs)
+        # canonical per-class plans; _solutions additionally carries the
+        # per-step frequency clipping applied just before each batch
+        self._base_solutions: Dict[str, Any] = dict(self._solutions)
+
+    # ------------------------------------------------------------------
+    # operating-point resolution against an environment state
+    # ------------------------------------------------------------------
+    def _resolve_class(self, c: QosClass):
+        if self.environment is None:
+            return super()._resolve_class(c)
+        sol, key = self._solve_under(c, self.environment.state_at(
+            self._clock))
+        self._plan_keys[c.name] = key
+        return sol
+
+    def _observed(self, state: EnvState) -> "tuple[EnvState, tuple]":
+        """What the controller sees: the exact state for the oracle, the
+        quantized state for everyone else."""
+        sq = state if self.policy == "oracle" else state.quantize()
+        return sq, sq.key()
+
+    def _solve_under(self, c: QosClass, state: EnvState,
+                     exact: bool = False):
+        """Solve class ``c`` against an environment state (quantized per
+        policy); never returns None — infeasible windows degrade.
+
+        ``exact=True`` bypasses the quantizer: used by qos-miss replans,
+        where the quantized view is precisely what misled the last plan
+        (e.g. a frequency cap rounded up), so re-solving on the same
+        coarse key would be a cache-hit no-op — the correction must see
+        the true state.
+        """
+        if exact:
+            sq, key = state, state.key()
+        else:
+            sq, key = self._observed(state)
+            self._env_keys_seen.add(key)
+        sysp = sq.apply(self.base_sysp)
+        c_eff = QosClass(c.name, c.t0, c.e0 * sq.energy_scale)
+        sol = self._counted_solution(c_eff, sysp=sysp, env_key=key)
+        if sol is None:
+            sol = self._degraded_solution(c_eff, sysp)
+        return sol, key
+
+    def _degraded_solution(self, c: QosClass, sysp: SystemParams):
+        """Best-effort fallback for an infeasible window: the largest b̂
+        (lowest distortion) whose *deadline* alone is meetable — the
+        energy budget is forfeit, the deadline is not — else b̂ = 1 at
+        max frequencies (the fastest plan that exists).  Marked
+        ``feasible=False`` so batches served on it are reported."""
+        b_emb = self.engine.b_emb
+        b_max = int(sysp.b_full)
+        lam = self.engine.lam
+        for b_hat in range(b_max, 0, -1):
+            ok, f, fs, _ = cd.feasible_bitwidth(b_hat, sysp, c.t0,
+                                                math.inf, b_emb=b_emb)
+            if ok:
+                sol = cd._pack(b_hat, f, fs, lam, sysp, feasible=False,
+                               b_emb=b_emb)
+                break
+        else:
+            sol = cd._pack(1, sysp.f_max, sysp.f_server_max, lam, sysp,
+                           feasible=False, b_emb=b_emb)
+        if not self.mixed_precision:
+            return sol
+        # mixed mode wants a per-layer allocation: spend the degraded
+        # uniform b̂ as a flat budget (deadline-only feasibility already
+        # collapsed the frontier to that mean)
+        stats = self.engine.layer_stats()
+        bits = (sol.b_hat,) * stats.n_layers
+        return mp.MixedSolution(
+            bits=bits, f=sol.f, f_server=sol.f_server,
+            objective=mp.allocation_objective(stats, bits),
+            uniform_b=sol.b_hat,
+            uniform_objective=mp.uniform_objective(stats, sol.b_hat),
+            mean_bits=float(sol.b_hat),
+            delay=float(total_delay(sol.b_hat, sol.f, sol.f_server, sysp,
+                                    b_emb=b_emb)),
+            energy=float(total_energy(sol.b_hat, sol.f, sol.f_server,
+                                      sysp, b_emb=b_emb)),
+            feasible=False)
+
+    # ------------------------------------------------------------------
+    # the control loop
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _mean_bits(sol) -> float:
+        return float(getattr(sol, "mean_bits", None) or sol.b_hat)
+
+    def _replan(self, name: str, t: float, state: EnvState,
+                reason: str) -> None:
+        c = self.classes[name]
+        old = self._base_solutions[name]
+        # qos-miss: the plan's quantized state still matches the world's,
+        # yet deadlines are being missed — solve against the exact state
+        # (a quantized re-solve would hit the cache and change nothing);
+        # bookkeeping keeps the *quantized* key so drift detection stays
+        # in the coarse keyspace
+        sol, _ = self._solve_under(c, state, exact=reason == "qos-miss")
+        _, key = self._observed(state)
+        self._plan_keys[name] = key
+        self._base_solutions[name] = sol
+        if self.mixed_precision:
+            self._plans[name] = self.engine.plan_of(sol)
+        self._drift_streak[name] = 0
+        self._miss_streak[name] = 0
+        self._last_replan_t[name] = t
+        self.replan_events.append(ReplanEvent(
+            t_s=t, qos=name, reason=reason, env_key=key,
+            b_before=self._mean_bits(old), b_after=self._mean_bits(sol),
+            degraded=not getattr(sol, "feasible", True)))
+
+    def _maybe_replan(self, name: str, state: EnvState, t: float) -> None:
+        if self.policy == "static":
+            return
+        _, key = self._observed(state)
+        self._env_keys_seen.add(key)
+        current = self._plan_keys.get(name)
+        if self.policy == "oracle":
+            if key != current:
+                self._replan(name, t, state, reason="oracle")
+            return
+        # hysteresis: a replan needs `hysteresis_steps` *consecutive*
+        # observations disagreeing with the plan's state — an oscillation
+        # across a quantization boundary keeps resetting the streak and
+        # never triggers (tests/test_adaptive.py)
+        if key != current:
+            self._drift_streak[name] = self._drift_streak.get(name, 0) + 1
+        else:
+            self._drift_streak[name] = 0
+        drift = self._drift_streak.get(name, 0) >= self.hysteresis_steps
+        miss = self._miss_streak.get(name, 0) >= self.hysteresis_steps
+        if not (drift or miss):
+            return
+        if t - self._last_replan_t.get(name, -math.inf) \
+                < self.min_replan_interval_s:
+            return
+        self._replan(name, t, state,
+                     reason="env-drift" if drift else "qos-miss")
+
+    def step(self) -> List[ServeResponse]:
+        if self.environment is None or not self._queue:
+            return super().step()
+        # the decision instant: when this batch could start at the earliest
+        t = max(self._clock, self._queue[0].arrival_s)
+        name = self._queue[0].qos
+        state = self.environment.state_at(t)
+        self._maybe_replan(name, state, t)
+
+        # bill the batch under the true (unquantized) current state; the
+        # plan's frequency is clipped to the live thermal cap — a stale
+        # plan runs slower, it does not run at a frequency that no longer
+        # exists
+        true_p = state.apply(self.base_sysp)
+        self.engine.sysp = true_p
+        base = self._base_solutions[name]
+        self._solutions[name] = dataclasses.replace(
+            base, f=min(base.f, true_p.f_max),
+            f_server=min(base.f_server, true_p.f_server_max))
+        responses = super().step()
+
+        # realized-QoS monitoring on the batch that just ran
+        c = self.classes[name]
+        bstats = self.batch_history[-1]
+        viol = sum(1 for r in responses
+                   if r.stats.total_delay_s > c.t0 * (1.0 + 1e-9))
+        self._violations += viol
+        if bstats.amortized_energy_j > c.e0 * (1.0 + 1e-9):
+            self._energy_violations += 1
+        if not getattr(base, "feasible", True):
+            self._degraded_batches += 1
+        if viol:
+            self._miss_streak[name] = self._miss_streak.get(name, 0) + 1
+        else:
+            self._miss_streak[name] = 0
+        return responses
+
+    # ------------------------------------------------------------------
+    def solution_for(self, qos_name: str):
+        """The class's *canonical* operating point (before per-step
+        frequency clipping)."""
+        if self.environment is None:
+            return super().solution_for(qos_name)
+        return self._base_solutions[qos_name]
+
+    def adaptive_report(self) -> AdaptiveReport:
+        switches = sum(1 for e in self.replan_events
+                       if e.b_before != e.b_after)
+        wc = self.engine._weight_cache
+        return AdaptiveReport(
+            policy=self.policy,
+            requests_served=self._served,
+            deadline_violations=self._violations,
+            deadline_violation_rate=self._violations / self._served
+            if self._served else 0.0,
+            energy_violations=self._energy_violations,
+            replans=len(self.replan_events),
+            plan_switches=switches,
+            degraded_batches=self._degraded_batches,
+            weight_variants=len(wc) if wc is not None else 0,
+            env_keys_seen=len(self._env_keys_seen),
+            hysteresis_steps=self.hysteresis_steps)

@@ -56,7 +56,8 @@ import numpy as np
 from ..core import codesign as cd
 from ..core import mixed_precision as mp
 from ..core.cost_model import (SystemParams, agent_delay, agent_energy,
-                               server_delay, server_energy, transport_delay)
+                               server_delay, server_energy, transport_delay,
+                               transport_energy)
 from ..core.quantization import (QuantConfig, QuantPlan, quantize_dequantize,
                                  wire_bytes)
 from ..kernels import ops as kops
@@ -77,8 +78,9 @@ class ServeStats:
     server_delay_s: float
     transport_delay_s: float
     total_delay_s: float
-    energy_j: float
-    emb_bytes: int
+    energy_j: float             # compute + uplink tx energy (eqs. 6-7 + radio)
+    transport_energy_j: float   # the uplink tx share of energy_j (0 unless
+    emb_bytes: int              # SystemParams.tx_power_w and the link are set)
     agent_flops: float
     server_flops: float
     # wire bytes per leading batch row (sums to emb_bytes); the batched
@@ -188,41 +190,52 @@ class CodesignCache:
 
     @staticmethod
     def key(lam: float, sysp: SystemParams, qos: QosClass,
-            b_max: int) -> tuple:
+            b_max: int, b_emb: Optional[int] = None,
+            env_key: Optional[tuple] = None) -> tuple:
         # keyed on the numbers, not qos.name: two classes with equal
-        # (T0, E0) share one solve
+        # (T0, E0) share one solve.  ``env_key`` is the quantized
+        # environment-state key of DESIGN.md §9: the adaptive engine
+        # solves against an environment-adjusted SystemParams and tags
+        # the entry with the coarse state it was solved under, so every
+        # revisit of a quantized environment state is a cache hit.
         return (round(float(lam), 12), sysp, float(qos.t0), float(qos.e0),
-                int(b_max))
+                int(b_max), b_emb, env_key)
 
     def solve(self, lam: float, sysp: SystemParams, qos: QosClass,
-              b_max: int) -> Optional[cd.CodesignSolution]:
-        k = self.key(lam, sysp, qos, b_max)
+              b_max: int, b_emb: Optional[int] = None,
+              env_key: Optional[tuple] = None
+              ) -> Optional[cd.CodesignSolution]:
+        k = self.key(lam, sysp, qos, b_max, b_emb, env_key)
         if k in self._store:
             self.hits += 1
         else:
             self.misses += 1
             self._store[k] = cd.solve_sca(lam, sysp, qos.t0, qos.e0,
-                                          b_max=b_max)
+                                          b_max=b_max, b_emb=b_emb)
         return self._store[k]
 
     def solve_mixed(self, stats: "mp.LayerStats", sysp: SystemParams,
-                    qos: QosClass, b_max: int) -> Optional[mp.MixedSolution]:
+                    qos: QosClass, b_max: int,
+                    b_emb: Optional[int] = None,
+                    env_key: Optional[tuple] = None
+                    ) -> Optional[mp.MixedSolution]:
         """Memoized per-layer bit allocation (DESIGN.md §8).
 
         Keyed on the per-layer statistics (λ^(l), A^(l)) instead of the
         global λ — the allocation's whole decision input — in a keyspace
         disjoint from :meth:`solve`'s, so one cache serves engines in
         both modes; the resulting plan's hash then keys the engine's
-        materialized-weight cache.
+        materialized-weight cache.  ``env_key`` tags entries with the
+        quantized environment state, exactly as in :meth:`solve`.
         """
         k = ("mixed", stats.key(), sysp, float(qos.t0), float(qos.e0),
-             int(b_max))
+             int(b_max), b_emb, env_key)
         if k in self._store:
             self.hits += 1
         else:
             self.misses += 1
             self._store[k] = mp.allocate_bits(stats, sysp, qos.t0, qos.e0,
-                                              b_max=b_max)
+                                              b_max=b_max, b_emb=b_emb)
         return self._store[k]
 
     def __len__(self) -> int:
@@ -397,10 +410,11 @@ class CoInferenceEngine:
         """
         b_max = int(self.sysp.b_full)
         if cache is not None:
-            sol = cache.solve(self.lam, self.sysp, qos, b_max)
+            sol = cache.solve(self.lam, self.sysp, qos, b_max,
+                              b_emb=self.b_emb)
         else:
             sol = cd.solve_sca(self.lam, self.sysp, qos.t0, qos.e0,
-                               b_max=b_max)
+                               b_max=b_max, b_emb=self.b_emb)
         if sol is None:
             return None
         self.configure(sol.b_hat, sol.f, sol.f_server)
@@ -433,10 +447,10 @@ class CoInferenceEngine:
         b_max = int(self.sysp.b_full)
         if cache is not None:
             sol = cache.solve_mixed(self.layer_stats(), self.sysp, qos,
-                                    b_max)
+                                    b_max, b_emb=self.b_emb)
         else:
             sol = mp.allocate_bits(self.layer_stats(), self.sysp, qos.t0,
-                                   qos.e0, b_max=b_max)
+                                   qos.e0, b_max=b_max, b_emb=self.b_emb)
         if sol is None:
             return None
         self.configure(self.plan_of(sol), sol.f, sol.f_server)
@@ -606,12 +620,14 @@ class CoInferenceEngine:
         t_a = float(agent_delay(self.b_eff, self.f, p))
         t_s = float(server_delay(self.f_server, p))
         t_x = float(transport_delay(self.b_emb, p))
+        e_x = float(transport_energy(self.b_emb, p))
         e = float(agent_energy(self.b_eff, self.f, p)
-                  + server_energy(self.f_server, p))
+                  + server_energy(self.f_server, p)) + e_x
         stats = ServeStats(
             b_hat=self.b_hat, f=self.f, f_server=self.f_server,
             agent_delay_s=t_a, server_delay_s=t_s, transport_delay_s=t_x,
-            total_delay_s=t_a + t_s + t_x, energy_j=e, emb_bytes=emb_bytes,
+            total_delay_s=t_a + t_s + t_x, energy_j=e,
+            transport_energy_j=e_x, emb_bytes=emb_bytes,
             agent_flops=n_a, server_flops=n_s, emb_row_bytes=row_bytes,
             plan_bits=(self.plan.layer_bit_list(self.split)
                        if self.plan is not None else ()))
@@ -669,6 +685,12 @@ class BatchedCoInferenceEngine:
             raise ValueError("duplicate QosClass names")
         self.codesign_cache = codesign_cache \
             if codesign_cache is not None else CodesignCache()
+        self._queue: Deque[ServeRequest] = collections.deque()
+        self._next_id = 0
+        self._clock = 0.0
+        self.batch_history: List[BatchStats] = []
+        self._served = 0
+        self._energy = 0.0
         # resolve every class eagerly: one (P1) solve — or per-layer
         # allocation in mixed-precision mode — per distinct decision input
         # for the engine's whole lifetime; hits/misses are counted per call
@@ -679,16 +701,7 @@ class BatchedCoInferenceEngine:
         self._solutions: Dict[str, Any] = {}
         self._plans: Dict[str, QuantPlan] = {}
         for c in classes:
-            h0, m0 = self.codesign_cache.hits, self.codesign_cache.misses
-            if self.mixed_precision:
-                sol = self.codesign_cache.solve_mixed(
-                    self.engine.layer_stats(), sysp, c,
-                    b_max=int(sysp.b_full))
-            else:
-                sol = self.codesign_cache.solve(self.engine.lam, sysp, c,
-                                                b_max=int(sysp.b_full))
-            self._own_hits += self.codesign_cache.hits - h0
-            self._own_misses += self.codesign_cache.misses - m0
+            sol = self._resolve_class(c)
             if sol is None:
                 raise ValueError(
                     f"QoS class {c.name!r} is infeasible under "
@@ -696,12 +709,43 @@ class BatchedCoInferenceEngine:
             self._solutions[c.name] = sol
             if self.mixed_precision:
                 self._plans[c.name] = self.engine.plan_of(sol)
-        self._queue: Deque[ServeRequest] = collections.deque()
-        self._next_id = 0
-        self._clock = 0.0
-        self.batch_history: List[BatchStats] = []
-        self._served = 0
-        self._energy = 0.0
+
+    # ------------------------------------------------------------------
+    # per-class operating-point resolution
+    # ------------------------------------------------------------------
+    def _resolve_class(self, c: QosClass):
+        """The class's operating point; None = infeasible (constructor
+        raises).  ``AdaptiveCoInferenceEngine`` overrides this to solve
+        against the current environment state and to degrade instead of
+        returning None (DESIGN.md §9)."""
+        return self._counted_solution(c)
+
+    def _counted_solution(self, c: QosClass,
+                          sysp: Optional[SystemParams] = None,
+                          env_key: Optional[tuple] = None):
+        """:meth:`_class_solution` with this engine's own hit/miss
+        attribution (the cache may be shared across engines)."""
+        h0, m0 = self.codesign_cache.hits, self.codesign_cache.misses
+        sol = self._class_solution(c, sysp=sysp, env_key=env_key)
+        self._own_hits += self.codesign_cache.hits - h0
+        self._own_misses += self.codesign_cache.misses - m0
+        return sol
+
+    def _class_solution(self, c: QosClass,
+                        sysp: Optional[SystemParams] = None,
+                        env_key: Optional[tuple] = None):
+        """One memoized (P1) solve / layer-wise allocation for class
+        ``c`` under ``sysp`` (default: the engine's static params)."""
+        p = self.sysp if sysp is None else sysp
+        b_max = int(p.b_full)
+        if self.mixed_precision:
+            return self.codesign_cache.solve_mixed(
+                self.engine.layer_stats(), p, c, b_max=b_max,
+                b_emb=self.engine.b_emb, env_key=env_key)
+        return self.codesign_cache.solve(self.engine.lam, p, c,
+                                         b_max=b_max,
+                                         b_emb=self.engine.b_emb,
+                                         env_key=env_key)
 
     # ------------------------------------------------------------------
     # queue API
@@ -743,11 +787,21 @@ class BatchedCoInferenceEngine:
     # serving
     # ------------------------------------------------------------------
     def _take_batch(self) -> List[ServeRequest]:
-        """Oldest request decides the class; pull up to max_batch of it."""
-        cls = self._queue[0].qos
+        """Oldest request decides the class; pull up to max_batch of it.
+
+        Only requests already *arrived* by the batch's start instant
+        (max(clock, head arrival)) join — a batch never idles waiting
+        for a future arrival just because the submit order knew about
+        it, which would bill early requests the late one's wait.  With
+        every arrival at t=0 (the common test setup) this is the old
+        take-everything behavior.
+        """
+        head = self._queue[0]
+        cls = head.qos
+        t_start = max(self._clock, head.arrival_s)
         picked = []
         for r in self._queue:
-            if r.qos == cls:
+            if r.qos == cls and r.arrival_s <= t_start * (1.0 + 1e-12):
                 picked.append(r)
                 if len(picked) == self.max_batch:
                     break

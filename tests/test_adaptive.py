@@ -1,0 +1,301 @@
+"""Online adaptive serving (DESIGN.md §9): bitwise identity on constant
+traces, controller hysteresis, infeasible-window degradation, and the
+environment-keyed codesign cache."""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.env import Battery, Environment, TraceReplay
+from repro.models.registry import build_model
+from repro.runtime import (AdaptiveCoInferenceEngine,
+                           BatchedCoInferenceEngine, CodesignCache,
+                           QosClass)
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+QOS = QosClass("interactive", t0=1.30, e0=1.5)
+
+
+def _model(arch="stablelm-3b", split=None):
+    cfg = get_smoke(arch)
+    if split is not None:
+        cfg = dataclasses.replace(cfg, split_layer=split)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(1))
+
+
+def _submit(eng, cfg, n=6, seed=0, qos=QOS.name, spacing_s=0.0):
+    rng = np.random.default_rng(seed)
+    sent = {}
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 17)))
+        sent[eng.submit(toks, qos, arrival_s=i * spacing_s)] = toks
+    return sent
+
+
+def _throttle_env(f_lo=0.6e9, dwell_s=4.0, horizon_s=40.0):
+    """f_max steps 2.0 -> f_lo GHz and stays there."""
+    return Environment(seed=0, dt_s=0.5, horizon_s=horizon_s,
+                       f_cap=TraceReplay(values=(2.0e9, f_lo),
+                                         dwell_s=dwell_s))
+
+
+# ---------------------------------------------------------------------------
+# identity with the static engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("environment", [None, "constant"])
+def test_bitwise_identical_to_batched_on_constant_trace(environment):
+    cfg, model, params = _model()
+    env = Environment(seed=0, dt_s=0.5, horizon_s=20.0) \
+        if environment == "constant" else None
+    a = AdaptiveCoInferenceEngine(model, params, SYSP, classes=[QOS],
+                                  max_batch=2, environment=env)
+    b = BatchedCoInferenceEngine(model, params, SYSP, classes=[QOS],
+                                 max_batch=2)
+    _submit(a, cfg)
+    _submit(b, cfg)
+    ra, rb = a.drain(), b.drain()
+    assert len(ra) == len(rb) == 6
+    assert a.batch_history == b.batch_history
+    for x, y in zip(ra, rb):
+        assert x.stats == y.stats
+        np.testing.assert_array_equal(np.asarray(x.logits),
+                                      np.asarray(y.logits))
+    rep = a.adaptive_report()
+    assert rep.plan_switches == 0 and rep.degraded_batches == 0
+
+
+# ---------------------------------------------------------------------------
+# drift detection and hysteresis
+# ---------------------------------------------------------------------------
+
+def test_sustained_drift_triggers_replan_and_switch():
+    cfg, model, params = _model()
+    eng = AdaptiveCoInferenceEngine(
+        model, params, SYSP, classes=[QOS], max_batch=1,
+        environment=_throttle_env(), hysteresis_steps=2)
+    # arrivals spaced 1 s apart: several observations per env regime
+    _submit(eng, cfg, n=10, spacing_s=1.0)
+    eng.drain()
+    rep = eng.adaptive_report()
+    assert rep.replans >= 1 and rep.plan_switches >= 1
+    assert rep.env_keys_seen == 2
+    b0 = eng.batch_history[0].b_hat
+    assert eng.batch_history[-1].b_hat < b0       # shed bits when capped
+    ev = eng.replan_events[0]
+    assert ev.reason == "env-drift" and ev.b_after < ev.b_before
+
+
+def test_hysteresis_no_flapping_on_boundary_oscillation():
+    """A state oscillating across the quantization boundary every single
+    observation never sustains a drift streak: zero replans."""
+    cfg, model, params = _model()
+    osc = Environment(seed=0, dt_s=1.0, horizon_s=40.0,
+                      f_cap=TraceReplay(values=(2.0e9, 1.2e9) * 10,
+                                        dwell_s=1.0))
+    eng = AdaptiveCoInferenceEngine(
+        model, params, SYSP, classes=[QOS], max_batch=1,
+        environment=osc, hysteresis_steps=2)
+    # one batch per env step: every observation sees the other state
+    _submit(eng, cfg, n=10, spacing_s=1.0)
+    eng.drain()
+    rep = eng.adaptive_report()
+    assert rep.env_keys_seen == 2
+    assert rep.replans == 0                       # no flapping
+    # the oracle policy *does* chase the oscillation — the hysteresis is
+    # what suppresses it, not the scenario
+    osc2 = Environment(seed=0, dt_s=1.0, horizon_s=40.0,
+                       f_cap=TraceReplay(values=(2.0e9, 1.2e9) * 10,
+                                         dwell_s=1.0))
+    oracle = AdaptiveCoInferenceEngine(
+        model, params, SYSP, classes=[QOS], max_batch=1,
+        environment=osc2, policy="oracle")
+    _submit(oracle, cfg, n=10, spacing_s=1.0)
+    oracle.drain()
+    assert oracle.adaptive_report().replans >= 5
+
+
+def test_replans_bounded_by_hysteresis():
+    cfg, model, params = _model()
+    env = Environment(seed=0, dt_s=0.5, horizon_s=40.0,
+                      f_cap=TraceReplay(values=(2.0e9, 1.2e9, 2.0e9,
+                                                0.6e9, 2.0e9),
+                                        dwell_s=4.0))
+    eng = AdaptiveCoInferenceEngine(
+        model, params, SYSP, classes=[QOS], max_batch=1,
+        environment=env, hysteresis_steps=3)
+    _submit(eng, cfg, n=12, spacing_s=1.0)
+    eng.drain()
+    rep = eng.adaptive_report()
+    assert rep.replans <= len(eng.batch_history) // 3
+
+
+def test_static_policy_never_replans_but_is_billed_by_the_env():
+    cfg, model, params = _model()
+    eng = AdaptiveCoInferenceEngine(
+        model, params, SYSP, classes=[QOS], max_batch=1,
+        environment=_throttle_env(), policy="static")
+    _submit(eng, cfg, n=8, spacing_s=1.0)
+    eng.drain()
+    assert eng.adaptive_report().replans == 0
+    assert eng.batch_history[0].f == pytest.approx(
+        eng.solution_for(QOS.name).f)
+    assert eng.batch_history[-1].f <= 0.6e9 * (1 + 1e-9)  # clipped
+
+
+# ---------------------------------------------------------------------------
+# infeasible windows degrade instead of raising
+# ---------------------------------------------------------------------------
+
+def test_infeasible_window_degrades_to_lowest_distortion_feasible_plan():
+    cfg, model, params = _model()
+    # a cap so low the class is infeasible: t_agent(b=1) alone > T0
+    tight = QosClass("tight", t0=0.12, e0=1.5)
+    env = Environment(seed=0, dt_s=0.5, horizon_s=20.0,
+                      f_cap=TraceReplay(values=(0.05e9,), dwell_s=1.0))
+    # the static engine refuses outright under the same state...
+    with pytest.raises(ValueError):
+        BatchedCoInferenceEngine(
+            model, params,
+            dataclasses.replace(SYSP, f_max=0.05e9),
+            classes=[tight])
+    # ...the adaptive engine constructs, serves, and reports the damage
+    eng = AdaptiveCoInferenceEngine(model, params, SYSP, classes=[tight],
+                                    max_batch=2, environment=env)
+    sol = eng.solution_for("tight")
+    assert not sol.feasible
+    assert sol.b_hat == 1                         # fastest plan there is
+    assert math.isfinite(sol.f) and sol.f > 0
+    _submit(eng, cfg, n=4, qos="tight")
+    responses = eng.drain()
+    assert len(responses) == 4
+    rep = eng.adaptive_report()
+    assert rep.degraded_batches == len(eng.batch_history)
+
+
+def test_degraded_plan_meets_deadline_when_only_energy_is_impossible():
+    cfg, model, params = _model()
+    # deadline loose, energy budget absurd: degrade keeps the deadline
+    # and maximizes bits under it (lowest distortion feasible)
+    weird = QosClass("weird", t0=2.0, e0=1e-12)
+    env = Environment(seed=0, dt_s=0.5, horizon_s=10.0)
+    eng = AdaptiveCoInferenceEngine(model, params, SYSP, classes=[weird],
+                                    max_batch=1, environment=env)
+    sol = eng.solution_for("weird")
+    assert not sol.feasible
+    assert sol.b_hat == 16                        # deadline admits full width
+    assert sol.delay <= 2.0 * (1 + 1e-9)
+
+
+def test_infeasible_window_mixed_precision_mode():
+    cfg, model, params = _model(split=2)
+    tight = QosClass("tight", t0=0.12, e0=1.5)
+    env = Environment(seed=0, dt_s=0.5, horizon_s=20.0,
+                      f_cap=TraceReplay(values=(0.05e9,), dwell_s=1.0))
+    eng = AdaptiveCoInferenceEngine(model, params, SYSP, classes=[tight],
+                                    max_batch=2, environment=env,
+                                    mixed_precision=True)
+    sol = eng.solution_for("tight")
+    assert not sol.feasible and sol.bits == (1, 1)
+    _submit(eng, cfg, n=2, qos="tight")
+    assert len(eng.drain()) == 2
+
+
+# ---------------------------------------------------------------------------
+# adaptive beats static on a throttling trace
+# ---------------------------------------------------------------------------
+
+def _smoke_scale_setup():
+    """Per-request workload scale so realized batch delays are
+    commensurate with the QoS deadline (as in benchmarks/adaptive_serve)."""
+    cfg, model, params = _model("qwen2-0.5b")
+    from repro.runtime import CoInferenceEngine
+    probe = CoInferenceEngine(model, params, SYSP)
+    n_a, n_s = probe.flop_split(16)
+    sysp = SystemParams(n_flop_agent=n_a, n_flop_server=n_s)
+    t_ref = n_a / (sysp.c_agent * sysp.f_max) \
+        + n_s / (sysp.c_server * sysp.f_server_max)
+    qos = QosClass("rt", t0=0.78 * t_ref, e0=2.0e-3)
+    return cfg, model, params, sysp, qos
+
+
+def test_adaptive_strictly_fewer_violations_than_static():
+    cfg, model, params, sysp, qos = _smoke_scale_setup()
+    horizon = 12.0e-3
+    reports = {}
+    for policy in ("static", "adaptive"):
+        env = Environment(seed=0, dt_s=0.5e-3, horizon_s=horizon,
+                          f_cap=TraceReplay(values=(2.0e9, 0.6e9),
+                                            dwell_s=horizon / 2))
+        eng = AdaptiveCoInferenceEngine(
+            model, params, sysp, classes=[qos], max_batch=1,
+            environment=env, policy=policy, hysteresis_steps=2)
+        rng = np.random.default_rng(2)
+        for i in range(12):
+            toks = rng.integers(0, cfg.vocab_size, size=16)
+            eng.submit(toks, "rt", arrival_s=i * horizon / 12)
+        eng.drain()
+        reports[policy] = eng.adaptive_report()
+    assert reports["static"].deadline_violations \
+        > reports["adaptive"].deadline_violations
+    assert reports["adaptive"].replans >= 1
+
+
+# ---------------------------------------------------------------------------
+# environment-keyed codesign cache
+# ---------------------------------------------------------------------------
+
+def test_codesign_cache_env_key_separates_and_memoizes():
+    cache = CodesignCache()
+    a = cache.solve(30.0, SYSP, QOS, b_max=16, env_key=("good",))
+    b = cache.solve(30.0, SYSP, QOS, b_max=16, env_key=("bad",))
+    assert cache.misses == 2 and cache.hits == 0   # distinct entries
+    assert a == b                                  # same inputs, same solve
+    cache.solve(30.0, SYSP, QOS, b_max=16, env_key=("good",))
+    assert cache.hits == 1                         # revisit is a hit
+
+
+def test_revisited_env_state_hits_cache_through_engine():
+    cfg, model, params = _model()
+    cache = CodesignCache()
+    # 2.0 -> 0.6 -> 2.0: the recovery replan must reuse the first solve
+    env = Environment(seed=0, dt_s=0.5, horizon_s=40.0,
+                      f_cap=TraceReplay(values=(2.0e9, 0.6e9, 2.0e9),
+                                        dwell_s=5.0))
+    eng = AdaptiveCoInferenceEngine(
+        model, params, SYSP, classes=[QOS], max_batch=1,
+        environment=env, hysteresis_steps=2, codesign_cache=cache)
+    _submit(eng, cfg, n=14, spacing_s=1.0)
+    eng.drain()
+    rep = eng.adaptive_report()
+    assert rep.plan_switches >= 2                  # down and back up
+    assert cache.hits >= 1                         # the way back was free
+    assert len(cache) == 2                         # one entry per env state
+
+
+def test_battery_derate_tightens_energy_budget():
+    cfg, model, params = _model()
+    # battery below reserve from the start: E0 is derated, so the chosen
+    # b̂ can only be <= the full-battery plan's
+    env_full = Environment(seed=0, dt_s=0.5, horizon_s=10.0)
+    # soc 0.085 of a 0.25 reserve -> energy scale ~0.5: E0 halves but the
+    # class stays feasible (the derate tightens, it does not break)
+    env_low = Environment(seed=0, dt_s=0.5, horizon_s=10.0,
+                          battery=Battery(capacity_j=1e9, drain_w=0.0,
+                                          soc0=0.085),
+                          battery_reserve_soc=0.25)
+    tight = QosClass("tight-e", t0=1.3, e0=1.5)
+    full = AdaptiveCoInferenceEngine(model, params, SYSP, classes=[tight],
+                                     environment=env_full)
+    low = AdaptiveCoInferenceEngine(model, params, SYSP, classes=[tight],
+                                    environment=env_low)
+    assert env_low.state_at(0.0).energy_scale < 1.0
+    s_full, s_low = full.solution_for("tight-e"), low.solution_for("tight-e")
+    assert s_full.feasible and s_low.feasible
+    assert s_low.b_hat < s_full.b_hat

@@ -141,3 +141,69 @@ def test_prop_relaxing_constraints_never_hurts(lam, t0, e0):
     b = solve_oracle(lam, P0, t0 * 1.5, e0 * 1.5)
     if a is not None:
         assert b is not None and b.b_hat >= a.b_hat
+
+
+# ---------------------------------------------------------------------------
+# uplink transport terms (link-aware co-design, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+P_LINK = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11,
+                      emb_bytes_full=4.0e5, link_bps=1.0e6, tx_power_w=0.5)
+
+
+def test_transport_energy_symmetric_with_delay_and_zero_by_default():
+    from repro.core.cost_model import transport_delay, transport_energy
+    assert float(transport_energy(8, P0)) == 0.0      # faithful default
+    t_x = float(transport_delay(8, P_LINK))
+    assert t_x == pytest.approx((8 / 16) * 4.0e5 / 1.0e6)
+    assert float(transport_energy(8, P_LINK)) == pytest.approx(0.5 * t_x)
+    # tx energy rides total_energy only when b_emb is passed, like delay
+    e_plain = float(total_energy(8, 2.0e9, 1.0e10, P_LINK))
+    e_link = float(total_energy(8, 2.0e9, 1.0e10, P_LINK, b_emb=8))
+    assert e_link == pytest.approx(e_plain + 0.5 * t_x)
+
+
+def test_net_budgets_shrink_by_transport_share():
+    from repro.core.codesign import net_budgets
+    assert net_budgets(P0, 1.3, 1.5, 8) == (1.3, 1.5)  # link disabled
+    t0n, e0n = net_budgets(P_LINK, 1.3, 1.5, 8)
+    assert t0n == pytest.approx(1.3 - 0.2)
+    assert e0n == pytest.approx(1.5 - 0.1)
+    assert net_budgets(P_LINK, 1.3, 1.5, None) == (1.3, 1.5)
+
+
+def test_link_aware_solve_spends_fewer_bits_and_stays_feasible():
+    s_free = solve_sca(LAM, P_LINK, 1.3, 1.5)            # ignores the link
+    s_link = solve_sca(LAM, P_LINK, 1.3, 1.5, b_emb=8)
+    assert s_link is not None and s_link.b_hat <= s_free.b_hat
+    # realized totals include the transport share and respect the budgets
+    assert s_link.delay <= 1.3 * (1 + 1e-9)
+    assert s_link.energy <= 1.5 * (1 + 1e-9)
+    assert s_link.delay == pytest.approx(float(
+        total_delay(s_link.b_hat, s_link.f, s_link.f_server, P_LINK,
+                    b_emb=8)))
+    # oracle agrees with SCA on the link-aware optimum
+    o = solve_oracle(LAM, P_LINK, 1.3, 1.5, b_emb=8)
+    assert o.b_hat == s_link.b_hat
+
+
+def test_transport_dominated_budget_is_infeasible():
+    # uplink alone eats the whole deadline -> nothing is feasible
+    slow = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11,
+                        emb_bytes_full=4.0e5, link_bps=1.0e5)
+    assert solve_sca(LAM, slow, 1.3, 1.5, b_emb=8) is None
+    ok, f, fs, e = feasible_bitwidth(1, slow, 1.3, 1.5, b_emb=8)
+    assert not ok
+
+
+def test_feasible_bitwidth_unmeetable_deadline_infeasible_even_at_inf_e0():
+    # regression: e_min = inf must not pass an infinite energy budget
+    ok, f, fs, e = feasible_bitwidth(16, P0, t0=1e-6, e0=math.inf)
+    assert not ok and math.isnan(f)
+
+
+def test_mixed_precision_link_aware_budget():
+    from repro.core.mixed_precision import max_mean_bits
+    free = max_mean_bits(P_LINK, 1.3, 1.5)
+    link = max_mean_bits(P_LINK, 1.3, 1.5, b_emb=8)
+    assert link < free

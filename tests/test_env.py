@@ -1,0 +1,158 @@
+"""Dynamic-environment subsystem (DESIGN.md §9): process traces,
+seeded determinism, state application, and quantized state keys."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import SystemParams
+from repro.env import (Battery, Environment, MarkovLink, RayleighLink,
+                       ThermalThrottle, TraceReplay)
+from repro.env.presets import (PROFILE_FMAX, constant, edge_day,
+                               profile_replay, rayleigh_fading, wifi_markov)
+
+BASE = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [wifi_markov, rayleigh_fading, edge_day])
+def test_same_seed_identical_trace(make):
+    a, b = make(seed=13), make(seed=13)
+    np.testing.assert_array_equal(a.link_trace, b.link_trace)
+    np.testing.assert_array_equal(a.f_cap_trace, b.f_cap_trace)
+    np.testing.assert_array_equal(a.soc_trace, b.soc_trace)
+    np.testing.assert_array_equal(a.temp_trace, b.temp_trace)
+
+
+@pytest.mark.parametrize("make", [wifi_markov, rayleigh_fading])
+def test_different_seed_different_trace(make):
+    a, b = make(seed=13), make(seed=14)
+    assert not np.array_equal(a.link_trace, b.link_trace)
+
+
+def test_processes_use_independent_streams():
+    """The link draw count must not perturb the battery/thermal traces:
+    each process gets its own spawned child stream."""
+    with_link = edge_day(seed=3)
+    without = Environment(seed=3, dt_s=with_link.dt_s,
+                          horizon_s=with_link.horizon_s,
+                          battery=Battery(capacity_j=40.0 * 90.0,
+                                          drain_w=15.0, soc0=0.5))
+    np.testing.assert_array_equal(with_link.soc_trace, without.soc_trace)
+
+
+# ---------------------------------------------------------------------------
+# individual processes
+# ---------------------------------------------------------------------------
+
+def test_markov_link_states_and_validation():
+    link = MarkovLink(rates_bps=(1e6, 1e5),
+                      transition=((0.9, 0.1), (0.2, 0.8)))
+    trace = link.realize(np.random.default_rng(0), 200, 0.5)
+    assert set(trace) <= {1e6, 1e5}
+    assert trace[0] == 1e6              # starts in init_state
+    with pytest.raises(ValueError):
+        MarkovLink(rates_bps=(1e6, 1e5),
+                   transition=((0.9, 0.2), (0.2, 0.8)))  # rows don't sum
+    with pytest.raises(ValueError):
+        MarkovLink(rates_bps=(1e6,), transition=((1.0, 0.0),))  # not square
+
+
+def test_rayleigh_block_structure():
+    link = RayleighLink(bandwidth_hz=5e6, mean_snr=8.0, coherence_s=2.0)
+    trace = link.realize(np.random.default_rng(1), 40, 0.5)
+    assert (trace > 0).all()
+    # 40 steps x 0.5 s / 2 s coherence = 10 blocks of 4 equal samples
+    blocks = trace.reshape(10, 4)
+    assert (blocks == blocks[:, :1]).all()
+    assert len(np.unique(blocks[:, 0])) > 1
+
+
+def test_trace_replay_clamps_last_value():
+    replay = TraceReplay(values=(2.0, 1.0), dwell_s=1.0)
+    trace = replay.realize(None, 8, 0.5)
+    np.testing.assert_array_equal(trace, [2, 2, 1, 1, 1, 1, 1, 1])
+
+
+def test_battery_monotone_and_clipped():
+    soc = Battery(capacity_j=10.0, drain_w=2.0, soc0=0.5).realize(
+        None, 10, 1.0)
+    assert (np.diff(soc) <= 0).all()
+    assert soc[0] == 0.5 and soc[-1] == 0.0   # hits empty, never negative
+
+
+def test_thermal_throttle_heats_up_and_derates():
+    th = ThermalThrottle(tau_s=5.0)
+    temp = th.temperature(100, 1.0)
+    assert temp[0] < temp[-1] <= th.t_peak_c + 1e-9
+    caps = th.cap_for(temp)
+    assert caps[0] == th.f_full_hz          # cold: uncapped
+    assert caps[-1] < th.f_full_hz          # hot: derated
+    assert (caps >= th.f_floor_hz - 1e-9).all()
+    # explicit map: below throttle, midway, above max
+    np.testing.assert_allclose(
+        th.cap_for(np.array([25.0, 80.0, 95.0])),
+        [th.f_full_hz,
+         th.f_full_hz - 0.5 * (th.f_full_hz - th.f_floor_hz),
+         th.f_floor_hz])
+
+
+# ---------------------------------------------------------------------------
+# environment composition
+# ---------------------------------------------------------------------------
+
+def test_identity_environment_is_constant_and_neutral():
+    env = constant()
+    assert env.is_constant()
+    s = env.state_at(12.3)
+    assert s.apply(BASE) == BASE
+    assert s.energy_scale == 1.0 and s.battery_soc == 1.0
+
+
+def test_state_at_clamps_to_horizon():
+    env = profile_replay(("high", "low"), dwell_s=5.0)
+    assert env.state_at(-1.0).f_cap_hz == PROFILE_FMAX["high"]
+    assert env.state_at(1e9).f_cap_hz == PROFILE_FMAX["low"]
+
+
+def test_apply_caps_frequency_and_sets_link():
+    env = Environment(
+        seed=0, dt_s=1.0, horizon_s=4.0,
+        link=TraceReplay(values=(5e5,), dwell_s=1.0),
+        f_cap=TraceReplay(values=(1.2e9,), dwell_s=1.0))
+    p = env.state_at(0.0).apply(BASE)
+    assert p.f_max == 1.2e9 and p.link_bps == 5e5
+    # a cap above the hardware maximum never *raises* f_max
+    env2 = Environment(seed=0, dt_s=1.0, horizon_s=4.0,
+                       f_cap=TraceReplay(values=(9.9e9,), dwell_s=1.0))
+    assert env2.state_at(0.0).apply(BASE).f_max == BASE.f_max
+
+
+def test_battery_energy_scale_derates_below_reserve():
+    env = Environment(seed=0, dt_s=1.0, horizon_s=10.0,
+                      battery=Battery(capacity_j=10.0, drain_w=1.0,
+                                      soc0=0.5),
+                      battery_reserve_soc=0.25, battery_min_scale=0.25)
+    assert env.state_at(0.0).energy_scale == 1.0        # above reserve
+    late = env.state_at(9.0)                            # soc far below
+    assert late.battery_soc < 0.25
+    assert 0.25 <= late.energy_scale < 1.0
+
+
+def test_quantized_key_buckets_jitter_and_separates_regimes():
+    env = constant()
+    s = env.state_at(0.0)
+    import dataclasses
+    a = dataclasses.replace(s, link_bps=1.00e6, f_cap_hz=1.20e9)
+    b = dataclasses.replace(s, link_bps=1.05e6, f_cap_hz=1.23e9)  # jitter
+    c = dataclasses.replace(s, link_bps=1.0e5, f_cap_hz=0.6e9)   # regime
+    assert a.quantize().key() == b.quantize().key()
+    assert a.quantize().key() != c.quantize().key()
+    # quantization keeps the applied view within a bucket of the truth
+    pa = a.quantize().apply(BASE)
+    assert abs(pa.f_max - 1.2e9) <= 0.5e8
+    assert 0.7 <= pa.link_bps / 1.0e6 <= 1.5
