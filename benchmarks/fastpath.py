@@ -1,0 +1,270 @@
+"""Compiled fast-path serving: eager vs AOT-compiled wall clock
+(DESIGN.md §10).
+
+Measures, on the ``qwen2_0_5b`` smoke config at the PR-1 sweep points
+(SEQ=32, batch sizes 1..16):
+
+  1. eager vs compiled requests/s through ``CoInferenceEngine`` on the
+     kernel path at b̂ = 8 — the eager path dispatches the agent scans,
+     transport, and server stage op-by-op from Python; the compiled path
+     runs one bucket-padded AOT executable.  Acceptance: >= 2x at batch 8,
+     with per-request logits bitwise identical to the sequential eager
+     engine.
+  2. the compile-count bound: a shape-varied workload (>= 8 distinct
+     (batch, seq) shapes) through ``BatchedCoInferenceEngine`` after
+     ``warmup()`` must compile at most len(bucket ladder) x active plans
+     forward variants and never miss on warm traffic.
+
+Besides the printed tables, ``run()`` writes machine-readable
+``BENCH_fastpath.json`` at the repo root and RAISES if the acceptance
+criteria fail or the measured speedup regresses by more than
+``REGRESSION_TOLERANCE`` against the committed record (CI runs this
+section on every PR, mirroring ``adaptive_serve.py``).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only fastpath
+  or  PYTHONPATH=src python benchmarks/fastpath.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.kernels.bucketing import seq_ladder
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, CoInferenceEngine,
+                           QosClass)
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SEQ = 32
+B_HAT = 8
+SIZES = (1, 2, 4, 8, 16)
+N_REQUESTS = 16
+# wall clock on shared CI runners is noisy; the speedup may regress by at
+# most this factor against the committed BENCH_fastpath.json before the
+# build fails (the >= 2x acceptance floor always applies)
+REGRESSION_TOLERANCE = 0.5
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+CLASSES = [
+    QosClass("realtime", t0=1.10, e0=0.9),
+    QosClass("interactive", t0=1.30, e0=1.5),
+    QosClass("batch", t0=2.50, e0=4.0),
+]
+
+
+def _tokens(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, SEQ)).astype(np.int32)
+
+
+def _time_engine(eng: CoInferenceEngine, toks: np.ndarray, batch: int,
+                 repeats: int = 3) -> float:
+    """Best-of wall-clock seconds to serve all rows in ``batch``-chunks."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for lo in range(0, toks.shape[0], batch):
+            logits, _ = eng.serve_batch(
+                {"tokens": jnp.asarray(toks[lo:lo + batch])})
+        logits.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_eager_vs_compiled(model, params) -> List[dict]:
+    eager = CoInferenceEngine(model, params, SYSP, path="kernel")
+    eager.configure(B_HAT)
+    comp = CoInferenceEngine(model, params, SYSP, path="kernel",
+                             compiled=True)
+    comp.configure(B_HAT)
+    toks = _tokens(model.cfg, N_REQUESTS)
+    # warm both paths for every shape the sweep dispatches
+    for b in set(SIZES):
+        eager.serve_batch({"tokens": jnp.asarray(toks[:b])})
+        comp.serve_batch({"tokens": jnp.asarray(toks[:b])})
+    rows = []
+    for b in SIZES:
+        t_e = _time_engine(eager, toks, b)
+        t_c = _time_engine(comp, toks, b)
+        rows.append({
+            "batch": b,
+            "eager_rps": N_REQUESTS / t_e,
+            "compiled_rps": N_REQUESTS / t_c,
+            "speedup": t_e / t_c,
+        })
+    return rows
+
+
+def verify_bitwise(model, params) -> bool:
+    """Every compiled per-request logit tensor must equal the sequential
+    eager engine's, across ragged lengths and both kernel containers."""
+    cfg = model.cfg
+    seq = CoInferenceEngine(model, params, SYSP, path="kernel",
+                            cache_weights=True)
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=4, path="kernel",
+                                   compiled=True)
+    rng = np.random.default_rng(7)
+    sent = {}
+    for i in range(12):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(SEQ // 4, 2 * SEQ)))
+        sent[eng.submit(toks, CLASSES[i % 3].name)] = (toks,
+                                                       CLASSES[i % 3].name)
+    for r in eng.drain():
+        toks, qos = sent[r.request_id]
+        sol = eng.solution_for(qos)
+        seq.configure(sol.b_hat, sol.f, sol.f_server)
+        want, _ = seq.serve_batch(
+            {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        if not np.array_equal(np.asarray(r.logits), np.asarray(want[0])):
+            return False
+    return True
+
+
+def compile_count_bound(model, params, max_seq: int = 64) -> dict:
+    """Serve >= 8 distinct (batch, seq) shapes; the compile cache must
+    stay within len(bucket ladder) x active plans and never miss after
+    warmup."""
+    cfg = model.cfg
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=4, path="kernel",
+                                   compiled=True)
+    warm = eng.warmup(max_seq)
+    cc = eng.engine.compile_cache
+    miss0 = cc.misses
+    # per class, one full batch around each length scale plus a ragged
+    # tail batch -> well over 8 distinct raw (batch, seq) shapes
+    rng = np.random.default_rng(11)
+    shapes = set()
+    for ci, c in enumerate(CLASSES):
+        for group, top in ((4, 12 + ci), (4, 30 + ci), (2, 55 + ci)):
+            for j in range(group):
+                eng.submit(rng.integers(0, cfg.vocab_size, size=top - j),
+                           c.name)
+    while eng.pending():
+        rs = eng.step()
+        shapes.add((len(rs), max(len(r.logits) for r in rs)))
+    ladder = seq_ladder(max_seq, base=eng.engine.seq_bucket_base)
+    return {
+        "distinct_shapes": len(shapes),
+        "warmup_compiles": warm,
+        "warm_misses": cc.misses - miss0,
+        "variants": len(cc),
+        "bound": len(ladder) * len(CLASSES),
+        "ladder": list(ladder),
+        "hits": cc.hits,
+    }
+
+
+def run() -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} seq={SEQ} b_hat={B_HAT} kernel path "
+          f"(smoke scale; CPU interpret kernels)")
+
+    rows = sweep_eager_vs_compiled(model, params)
+    print("\neager vs compiled wall clock (one engine, fixed b_hat):")
+    table(["batch", "eager req/s", "compiled req/s", "speedup"],
+          [[r["batch"], f"{r['eager_rps']:.1f}",
+            f"{r['compiled_rps']:.1f}", f"{r['speedup']:.2f}x"]
+           for r in rows])
+    at8 = next(r for r in rows if r["batch"] == 8)
+
+    bitwise = verify_bitwise(model, params)
+    cc = compile_count_bound(model, params)
+    print(f"\ncompile-count bound: {cc['distinct_shapes']} distinct "
+          f"(batch, seq) shapes served -> {cc['variants']} compiled "
+          f"variants (bound {cc['bound']} = {len(cc['ladder'])} buckets "
+          f"x {len(CLASSES)} plans), {cc['warm_misses']} misses after "
+          f"warmup")
+
+    acceptance = {
+        "speedup_at_8_geq_2x": at8["speedup"] >= 2.0,
+        "speedup_at_8": at8["speedup"],
+        "bitwise_identical_to_sequential_eager": bitwise,
+        "served_geq_8_distinct_shapes": cc["distinct_shapes"] >= 8,
+        "variants_within_bound": cc["variants"] <= cc["bound"],
+        "no_misses_after_warmup": cc["warm_misses"] == 0,
+    }
+    ok = all(v for v in acceptance.values() if isinstance(v, bool))
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'}")
+    for k, v in acceptance.items():
+        print(f"  {k}: {v}")
+
+    results = {
+        "acceptance_ok": ok,
+        "arch": cfg.name, "seq": SEQ, "b_hat": B_HAT,
+        "sweep": rows,
+        "compile_count": cc,
+        "acceptance": acceptance,
+    }
+    regression = check_regression(at8["speedup"])
+    if regression:
+        print(f"regression vs committed BENCH_fastpath.json: {regression}")
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    if not ok or regression:
+        # CI runs this section on every PR; a fast-path regression must
+        # fail the build, not just print (benchmarks/run.py converts the
+        # raise into a failed section and a nonzero exit)
+        raise RuntimeError(
+            f"fastpath acceptance failed: {acceptance} "
+            f"regression={regression!r}")
+    return results
+
+
+def _json_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_fastpath.json"
+
+
+def check_regression(speedup_at_8: float):
+    """Compare against the committed record; None = fine, else a message.
+
+    Tolerant (``REGRESSION_TOLERANCE``) because wall clock on shared
+    runners is noisy — this guards against the fast path silently falling
+    back to eager dispatch, not against scheduler jitter."""
+    path = _json_path()
+    if not path.exists():
+        return None
+    try:
+        committed = json.loads(path.read_text(encoding="utf-8"))
+        old = next(r["speedup"] for r in committed["sweep"]
+                   if r["batch"] == 8)
+    except (KeyError, StopIteration, ValueError):
+        return None
+    floor = REGRESSION_TOLERANCE * old
+    if speedup_at_8 < floor:
+        return (f"speedup at batch 8 fell to {speedup_at_8:.2f}x "
+                f"(committed {old:.2f}x, floor {floor:.2f}x)")
+    return None
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the fast-path numbers as ``BENCH_fastpath.json`` at the repo
+    root — the machine-readable perf record diffed across PRs."""
+    if path is None:
+        path = _json_path()
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+if __name__ == "__main__":
+    run()

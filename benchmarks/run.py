@@ -17,6 +17,10 @@ Sections (paper artifact -> module):
     adaptive static/oracle/adaptive serving on a     adaptive_serve.py
             dynamic link/thermal/battery trace
             (also writes BENCH_adaptive.json at the repo root)
+    fastpath eager vs AOT-compiled serving wall      fastpath.py
+            clock + compile-count bound
+            (also writes BENCH_fastpath.json at the repo root; raises
+             on acceptance or throughput regression)
 """
 
 from __future__ import annotations
@@ -25,9 +29,9 @@ import argparse
 import sys
 import time
 
-from . import (adaptive_serve, codesign_sweep, distortion, kernel_bench,
-               mixed_precision_sweep, rd_bounds, serve_throughput,
-               testbed_profiles, weight_stats)
+from . import (adaptive_serve, codesign_sweep, distortion, fastpath,
+               kernel_bench, mixed_precision_sweep, rd_bounds,
+               serve_throughput, testbed_profiles, weight_stats)
 from .common import banner
 
 SECTIONS = {
@@ -43,6 +47,8 @@ SECTIONS = {
               mixed_precision_sweep.run),
     "adaptive": ("Adaptive serving  static vs oracle vs adaptive on a "
                  "dynamic trace", adaptive_serve.run),
+    "fastpath": ("Fast path  eager vs compiled serving wall clock",
+                 fastpath.run),
 }
 
 

@@ -51,6 +51,11 @@ def main():
     ap.add_argument("--mixed-precision", action="store_true",
                     help="per-layer bit allocation per class "
                          "(DESIGN.md §8) instead of one uniform b̂")
+    ap.add_argument("--compiled", action="store_true",
+                    help="serve through the compiled fast path "
+                         "(DESIGN.md §10): bucket-padded AOT executables, "
+                         "precompiled by warmup(), bitwise identical "
+                         "per request to eager serving")
     args = ap.parse_args()
 
     cfg = get_smoke("stablelm-3b")
@@ -73,7 +78,10 @@ def main():
     eng = BatchedCoInferenceEngine(model, params, sysp, classes=CLASSES,
                                    max_batch=8, path="kernel",
                                    codesign_cache=cache,
-                                   mixed_precision=args.mixed_precision)
+                                   mixed_precision=args.mixed_precision,
+                                   compiled=args.compiled)
+    if args.compiled:
+        print(f"warmup: {eng.warmup(SEQ)} compiled forward variants")
     clean = CoInferenceEngine(model, params, sysp)
     clean.configure(16)
     clean.b_emb = 16
@@ -128,6 +136,9 @@ def main():
           f"modeled throughput={rep.throughput_rps:.0f} req/s; "
           f"codesign cache: {rep.codesign_misses} solves, "
           f"{rep.codesign_hits} hits")
+    if args.compiled:
+        print(f"compile cache: {rep.compiled_variants} variants, "
+              f"{rep.compile_hits} hits / {rep.compile_misses} misses")
     print("\ntighter QoS -> smaller b_hat -> more distortion; batching "
           "amortizes delay/energy across a class without ever mixing "
           "classes in one forward — the paper's quality/latency/energy "

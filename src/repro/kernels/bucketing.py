@@ -1,0 +1,67 @@
+"""Geometric shape-bucket ladders shared by the kernel wrappers and the
+compiled serving fast path (DESIGN.md §10).
+
+Every distinct input shape costs one XLA trace + compile.  Serving traffic
+produces an unbounded variety of (batch, seq) shapes, so both the engine
+and the quantized-matmul wrappers round shapes *up* to a small geometric
+ladder before dispatch: the number of compiled variants is then bounded by
+the ladder length, and warm traffic never recompiles.  Right-padding is
+behavior-invisible for every consumer here (row-independent matmuls,
+causal attention, per-row masked transport — see DESIGN.md §10 for the
+bitwise argument).
+
+Two ladders live here so the engine and the kernels stay aligned:
+
+* ``seq_bucket`` — sequence-length ladder ``base * 2^k`` (default base 16)
+  used by the serving engines to pad S.
+* ``row_bucket`` — kernel M-axis ladder ``128 * 2^k`` (MXU-aligned) used
+  by ``ops.quantized_matmul`` to pad the flattened row count.  With the
+  default bases and a power-of-two batch quantum, every engine bucket
+  maps onto exactly one kernel row bucket.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+DEFAULT_SEQ_BASE = 16
+ROW_BASE = 128
+
+
+def next_geometric(n: int, base: int, ratio: int = 2) -> int:
+    """Smallest ``base * ratio^k`` (k >= 0) that is >= ``n``."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    if base < 1 or ratio < 2:
+        raise ValueError(f"need base >= 1, ratio >= 2, got {base}/{ratio}")
+    b = base
+    while b < n:
+        b *= ratio
+    return b
+
+
+def seq_bucket(s: int, base: int = DEFAULT_SEQ_BASE, ratio: int = 2) -> int:
+    """The sequence-length bucket serving pads ``s`` up to."""
+    return next_geometric(s, base, ratio)
+
+
+def seq_ladder(max_s: int, base: int = DEFAULT_SEQ_BASE,
+               ratio: int = 2) -> Tuple[int, ...]:
+    """Every bucket up to (and including) the one covering ``max_s`` —
+    what ``warmup()`` precompiles."""
+    out, b = [], base
+    top = next_geometric(max_s, base, ratio)
+    while b <= top:
+        out.append(b)
+        b *= ratio
+    return tuple(out)
+
+
+def row_bucket(m: int) -> int:
+    """Kernel M-axis bucket: ``128 * 2^k`` (always MXU-block aligned).
+
+    ``ops.quantized_matmul`` pads its flattened row count to this ladder
+    *outside* its jit boundary, so any two row counts in one bucket share
+    a single trace/compile of the kernel core.
+    """
+    return next_geometric(m, ROW_BASE)

@@ -10,6 +10,15 @@ hit the identical kernel with rows computed independently, so batching
 requests never changes a request's output bits (tests/test_kernels.py::
 test_batch_rows_independent).
 
+Trace economics (DESIGN.md §10): on the Pallas path the row count M is
+padded up to the geometric ``bucketing.row_bucket`` ladder *before* the
+jitted core, so the core's trace cache keys on the bucketed shape — any
+two row counts in one bucket share a single trace/compile instead of one
+per distinct M.  Zero-padding rows is invisible: each output row depends
+only on its own input row, and the pad is sliced off on the way out.
+The reference fallback (misaligned K/N — non-production weights) stays
+unpadded: there the padding would only buy wasted matmul rows.
+
 On TPU these dispatch the compiled Pallas kernels; on this CPU container the
 same kernel bodies run under ``interpret=True`` (numerics identical, speed
 irrelevant — tests assert allclose vs ref.py).
@@ -26,20 +35,11 @@ import jax.numpy as jnp
 from . import qmm as _qmm
 from . import quantize as _quantize
 from . import ref as _ref
+from .bucketing import row_bucket
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
-
-
-def _pad_to(x: jax.Array, mult: int, axis: int):
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x, size
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), size
 
 
 def _pick_block(dim: int, target: int, quantum: int) -> int:
@@ -51,8 +51,40 @@ def _pick_block(dim: int, target: int, quantum: int) -> int:
     return max(b, quantum) if dim % quantum == 0 else dim
 
 
+def _bucket_rows(xm: jax.Array):
+    """Zero-pad a [M, K] activation's M up to its row bucket.
+
+    Returns (xm [M_bucket, K], true row count).  Done *outside* the jitted
+    cores so their trace caches key on the bucketed shape.
+    """
+    m0 = xm.shape[0]
+    mp = row_bucket(m0)
+    if mp != m0:
+        xm = jnp.pad(xm, ((0, mp - m0), (0, 0)))
+    return xm, m0
+
+
+# the off-fast-path reference matmuls, jitted per exact shape (no row
+# bucketing: padding would only waste reference-path compute, and
+# misaligned K/N means a non-production weight anyway)
+_qmm_ref_jit = jax.jit(_ref.qmm_ref)
+_qmm_int4_ref_jit = jax.jit(_ref.qmm_int4_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
+def _qmm_core(xm: jax.Array, codes: jax.Array, scales: jax.Array,
+              *, block_m: int, block_n: int, block_k: int,
+              interpret: bool) -> jax.Array:
+    """Pallas int8 core on a row-bucketed, block-aligned [M, K]."""
+    k = xm.shape[-1]
+    group = k // scales.shape[0]
+    bk = _pick_block(k, block_k, max(group, 128))
+    bn = _pick_block(codes.shape[1], block_n, 128)
+    return _qmm.qmm(xm, codes, scales, block_m=min(block_m, xm.shape[0]),
+                    block_n=bn, block_k=bk, interpret=interpret)
+
+
 def quantized_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array,
                      *, block_m: int = 256, block_n: int = 256,
                      block_k: int = 512,
@@ -63,24 +95,34 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array,
     k = x.shape[-1]
     n = codes.shape[1]
     xm = x.reshape(-1, k)
-    # pad M to the block multiple; K/N must already be multiples for the
-    # production weights (all assigned configs are 128-aligned); fall back
-    # to the reference path when they are not.
+    # K/N must be block multiples for the production weights (all assigned
+    # configs are 128-aligned); fall back to the reference path when not.
     if k % 128 != 0 or n % 128 != 0 or k % (k // scales.shape[0]) != 0:
-        out = _ref.qmm_ref(xm, codes, scales)
-        return out.reshape(*lead, n)
-    group = k // scales.shape[0]
-    bm = min(block_m, max(128, 1 << (xm.shape[0] - 1).bit_length()))
-    xm, m0 = _pad_to(xm, bm, 0)
-    bk = _pick_block(k, block_k, max(group, 128))
-    bn = _pick_block(n, block_n, 128)
-    out = _qmm.qmm(xm, codes, scales, block_m=min(bm, xm.shape[0]),
-                   block_n=bn, block_k=bk, interpret=interpret)
+        return _qmm_ref_jit(xm, codes, scales).reshape(*lead, n)
+    xm, m0 = _bucket_rows(xm)
+    # snap block_m to a 128-multiple divisor of the bucketed M so any
+    # caller-chosen block size stays legal after row bucketing
+    out = _qmm_core(xm, codes, scales,
+                    block_m=_pick_block(xm.shape[0], block_m, 128),
+                    block_n=block_n, block_k=block_k, interpret=interpret)
     return out[:m0].reshape(*lead, n)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
+def _qmm_int4_core(xm: jax.Array, packed: jax.Array, scales: jax.Array,
+                   *, block_m: int, block_n: int, block_k: int,
+                   interpret: bool) -> jax.Array:
+    """Pallas packed-int4 core on a row-bucketed, block-aligned [M, K]."""
+    k = xm.shape[-1]
+    group = k // scales.shape[0]
+    bk = _pick_block(k, block_k, max(group, 256))
+    bn = _pick_block(packed.shape[1], block_n, 128)
+    return _qmm.qmm_int4(xm, packed, scales,
+                         block_m=min(block_m, xm.shape[0]),
+                         block_n=bn, block_k=bk, interpret=interpret)
+
+
 def quantized_matmul_int4(x: jax.Array, packed: jax.Array,
                           scales: jax.Array, *, block_m: int = 256,
                           block_n: int = 256, block_k: int = 512,
@@ -92,15 +134,12 @@ def quantized_matmul_int4(x: jax.Array, packed: jax.Array,
     n = packed.shape[1]
     xm = x.reshape(-1, k)
     if k % 256 != 0 or n % 128 != 0:
-        out = _ref.qmm_int4_ref(xm, packed, scales)
-        return out.reshape(*lead, n)
-    group = k // scales.shape[0]
-    bm = min(block_m, max(128, 1 << (xm.shape[0] - 1).bit_length()))
-    xm, m0 = _pad_to(xm, bm, 0)
-    bk = _pick_block(k, block_k, max(group, 256))
-    bn = _pick_block(n, block_n, 128)
-    out = _qmm.qmm_int4(xm, packed, scales, block_m=min(bm, xm.shape[0]),
-                        block_n=bn, block_k=bk, interpret=interpret)
+        return _qmm_int4_ref_jit(xm, packed, scales).reshape(*lead, n)
+    xm, m0 = _bucket_rows(xm)
+    out = _qmm_int4_core(xm, packed, scales,
+                         block_m=_pick_block(xm.shape[0], block_m, 128),
+                         block_n=block_n, block_k=block_k,
+                         interpret=interpret)
     return out[:m0].reshape(*lead, n)
 
 
@@ -108,18 +147,27 @@ def quantized_matmul_int4(x: jax.Array, packed: jax.Array,
                                              "interpret"))
 def group_quantize(w: jax.Array, *, group_size: int = 128, bits: int = 8,
                    interpret: bool | None = None):
-    """Fused quantizer; falls back to the jnp reference off the fast path."""
+    """Fused quantizer; falls back to the jnp reference off the fast path.
+
+    Fast path: K tiles into ``group_size`` groups and N is 128-aligned —
+    the fused Pallas quantizer.  Off it, the reference quantizer runs with
+    the largest group layout the shape admits:
+
+    * ``k < group_size`` (or any k that still tiles into ``min(g, k)``) —
+      one group spanning min(g, k) rows;
+    * ``k`` not tileable at all — per-element groups (group_size 1), the
+      degenerate layout where every code hits a quantization level exactly.
+    """
     interpret = _on_cpu() if interpret is None else interpret
     k, n = w.shape
-    if k % group_size != 0 or n % 128 != 0:
-        return _ref.group_quantize_ref(w, group_size=min(group_size, k)
-                                       if k % min(group_size, k) == 0 else 1,
-                                       bits=bits) \
-            if k % min(group_size, k) == 0 \
-            else _ref.group_quantize_ref(w, 1, bits=bits)
-    return _quantize.group_quantize(w, group_size=group_size, bits=bits,
-                                    block_n=_pick_block(n, 512, 128),
-                                    interpret=interpret)
+    if k % group_size == 0 and n % 128 == 0:
+        return _quantize.group_quantize(w, group_size=group_size, bits=bits,
+                                        block_n=_pick_block(n, 512, 128),
+                                        interpret=interpret)
+    g = min(group_size, k)
+    if k % g == 0:
+        return _ref.group_quantize_ref(w, group_size=g, bits=bits)
+    return _ref.group_quantize_ref(w, 1, bits=bits)
 
 
 # ---------------------------------------------------------------------------

@@ -47,9 +47,13 @@ def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int,
 
     codes = w_ref[...]                                    # [bk, bn] int8
     scales = s_ref[...]                                   # [bk//G, bn] f32
-    bk = codes.shape[0]
-    # dequantize: expand scales along the group axis inside VMEM
-    w = codes.astype(jnp.float32) * jnp.repeat(scales, group_size, axis=0)
+    bk, bn = codes.shape
+    # dequantize: expand scales along the group axis inside VMEM via a
+    # grouped reshape + broadcast multiply — a layout-only expansion the
+    # compiler folds into the multiply, where jnp.repeat lowers to a
+    # VMEM gather
+    w = (codes.astype(jnp.float32).reshape(bk // group_size, group_size, bn)
+         * scales[:, None, :]).reshape(bk, bn)
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
 
@@ -116,9 +120,12 @@ def _qmm_int4_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int,
     lo = jnp.where(lo >= 8, lo - 16, lo)
     hi = jnp.where(hi >= 8, hi - 16, hi)
     bk2, bn = packed.shape
-    codes = jnp.stack([lo, hi], axis=1).reshape(2 * bk2, bn)  # [bk, bn]
+    bk = 2 * bk2
+    codes = jnp.stack([lo, hi], axis=1).reshape(bk, bn)       # [bk, bn]
     scales = s_ref[...]
-    w = codes.astype(jnp.float32) * jnp.repeat(scales, group_size, axis=0)
+    # same gather-free scale expansion as the int8 body above
+    w = (codes.astype(jnp.float32).reshape(bk // group_size, group_size, bn)
+         * scales[:, None, :]).reshape(bk, bn)
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
 

@@ -62,6 +62,11 @@ def main(argv=None):
     ap.add_argument("--t0", type=float, default=3.5)
     ap.add_argument("--e0", type=float, default=2.0)
     ap.add_argument("--path", default="fake", choices=["fake", "kernel"])
+    ap.add_argument("--compiled", action="store_true",
+                    help="serve through the compiled fast path "
+                         "(DESIGN.md §10): one AOT-compiled bucket-padded "
+                         "agent->transport->server executable per "
+                         "(plan, bucket), precompiled via warmup()")
     ap.add_argument("--mixed-precision", action="store_true",
                     help="per-layer bit allocation (DESIGN.md §8) instead "
                          "of one uniform b̂ per QoS class")
@@ -94,9 +99,11 @@ def main(argv=None):
 
 
 def serve_sequential(cfg, model, params, sysp, args):
-    eng = CoInferenceEngine(model, params, sysp, path=args.path)
+    eng = CoInferenceEngine(model, params, sysp, path=args.path,
+                            compiled=args.compiled)
     print(f"arch={cfg.name} split={cfg.split_layer}/{cfg.n_layers} "
-          f"lambda_hat={eng.lam:.2f} path={args.path} engine=sequential")
+          f"lambda_hat={eng.lam:.2f} path={args.path} engine=sequential "
+          f"compiled={args.compiled}")
 
     qos = QosClass("interactive", t0=args.t0, e0=args.e0)
     if args.mixed_precision:
@@ -159,7 +166,7 @@ def serve_adaptive(cfg, model, params, args):
     eng = AdaptiveCoInferenceEngine(
         model, params, sysp, classes=classes, max_batch=args.max_batch,
         path=args.path, environment=env, policy=args.adaptive_policy,
-        mixed_precision=args.mixed_precision)
+        mixed_precision=args.mixed_precision, compiled=args.compiled)
     print(f"arch={cfg.name} env={args.env_trace} (seed {args.env_seed}, "
           f"{env.n_steps} x {env.dt_s}s) policy={args.adaptive_policy} "
           f"engine=adaptive")
@@ -212,14 +219,24 @@ def serve_batched(cfg, model, params, sysp, args):
         eng = BatchedCoInferenceEngine(
             model, params, sysp, classes=classes, max_batch=args.max_batch,
             path=args.path, codesign_cache=cache,
-            mixed_precision=args.mixed_precision)
+            mixed_precision=args.mixed_precision,
+            compiled=args.compiled)
     except ValueError as e:
         print(e)
         return 1
     print(f"arch={cfg.name} split={cfg.split_layer}/{cfg.n_layers} "
           f"lambda_hat={eng.engine.lam:.2f} path={args.path} "
           f"engine=batched max_batch={args.max_batch} "
-          f"mixed_precision={args.mixed_precision}")
+          f"mixed_precision={args.mixed_precision} "
+          f"compiled={args.compiled}")
+    if args.compiled:
+        # precompile every (class plan, seq bucket) variant up front so
+        # serving below never stalls on an XLA compile (DESIGN.md §10)
+        import time
+        t0 = time.perf_counter()
+        n = eng.warmup(args.seq)
+        print(f"warmup: {n} forward variants compiled in "
+              f"{time.perf_counter() - t0:.1f}s")
     for c in classes:
         s = eng.solution_for(c.name)
         if args.mixed_precision:
@@ -259,6 +276,10 @@ def serve_batched(cfg, model, params, sysp, args):
           f"energy={rep.total_energy_j:.3f}J")
     print(f"codesign cache: {cache.misses} (P1) solves for "
           f"{len(responses)} requests ({cache.hits} hits)")
+    if args.compiled:
+        print(f"compile cache: {rep.compiled_variants} variants, "
+              f"{rep.compile_hits} hits / {rep.compile_misses} misses "
+              f"(every batch after warmup is a hit)")
     return 0
 
 

@@ -161,7 +161,17 @@ def blockwise_attention(q, k, v, *, causal: bool, q_block: int = 512,
     implement the streaming softmax.  ``window`` > 0 adds a sliding-window
     mask.  Positions default to arange (prefill); pass explicit positions for
     packed/offset cases.
+
+    Block sizes snap to the geometric sequence ladder
+    (``kernels.bucketing.seq_bucket``), never to the raw S/T: two calls
+    whose lengths share a bucket then partition the (padded) sequence into
+    *identical* block shapes, with padding invisible in the masked online
+    softmax (masked lanes contribute exp -> 0, fully-masked blocks scale
+    by corr = 1).  This makes right-padding a sequence to its bucket
+    bitwise invisible — the property the serving engines' batching and
+    the compiled fast path's shape bucketing rely on (DESIGN.md §7, §10).
     """
+    from ..kernels.bucketing import seq_bucket
     from ..parallel import sharding as _shctx
     if _shctx.flash_mesh() is not None and q_positions is None \
             and kv_positions is None:
@@ -170,8 +180,8 @@ def blockwise_attention(q, k, v, *, causal: bool, q_block: int = 512,
     B, S, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
-    q_block = min(q_block, S)
-    kv_block = min(kv_block, T)
+    q_block = min(q_block, seq_bucket(S))
+    kv_block = min(kv_block, seq_bucket(T))
     nq = -(-S // q_block)
     nk = -(-T // kv_block)
     Sp, Tp = nq * q_block, nk * kv_block

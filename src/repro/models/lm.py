@@ -161,6 +161,39 @@ class DecoderLM:
         sub = _split_tree(params["layers"], lo, hi)
         return self._run_stack(sub, x, positions, remat_block=0)
 
+    def run_layers_window(self, params, x, positions, lo, hi):
+        """Split execution with *runtime* bounds: layers [lo, hi) applied
+        through a ``lax.while_loop`` whose trip count XLA cannot see.
+
+        Pass ``lo``/``hi`` as int32 *arrays* (concrete in eager mode,
+        traced arguments inside a jit): the loop body then compiles to
+        one isolated XLA sub-computation regardless of window size, so
+        its bits are identical whether the window runs eagerly or inlined
+        in a larger jitted graph — a static-length scan would be unrolled
+        and re-fused at short trip counts.  This bit-stability is what
+        the compiled serving fast path's bitwise-identity invariant
+        builds on (DESIGN.md §10).  Forward-only (no aux, no remat); the
+        training path keeps :meth:`_run_stack`'s scan.
+        """
+        lp = params["layers"]
+        lo = jnp.asarray(lo, jnp.int32)
+        hi = jnp.asarray(hi, jnp.int32)
+
+        def cond(carry):
+            return carry[0] < hi
+
+        def body(carry):
+            i, x = carry
+            sl = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False), lp)
+            x = constrain_activations(x)
+            x, _ = self._block(sl, x, positions)
+            return (i + 1, x)
+
+        _, x = jax.lax.while_loop(cond, body, (lo, x))
+        return x, jnp.float32(0.0)
+
     # ------------------------------------------------------------------
     # embedding plumbing (handles the multimodal stub)
     # ------------------------------------------------------------------
@@ -177,6 +210,13 @@ class DecoderLM:
         b, s = x.shape[0], x.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         return x, positions
+
+    def embed(self, params, batch):
+        """Public embedding hook: batch dict -> (x [B, S, D], positions
+        [B, S]).  The compiled serving fast path (runtime/fastpath.py)
+        traces through this; models exposing it (plus ``run_layers``)
+        are fast-path capable."""
+        return self._embed(params, batch)
 
     # ------------------------------------------------------------------
     # training

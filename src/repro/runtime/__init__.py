@@ -3,6 +3,7 @@ adaptive), fault tolerance."""
 
 from .adaptive import (AdaptiveCoInferenceEngine, AdaptiveReport,  # noqa: F401
                        ReplanEvent)
+from .fastpath import CompiledForwardCache  # noqa: F401
 from .fault_tolerance import (HostFailure, HostSet, StragglerMonitor,  # noqa: F401
                               Supervisor, SupervisorReport)
 from .serve_engine import (BatchedCoInferenceEngine, BatchStats,  # noqa: F401

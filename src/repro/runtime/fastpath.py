@@ -1,0 +1,363 @@
+"""Compiled fast-path serving (DESIGN.md §10).
+
+The eager serving path dispatches the agent stage as a Python loop over
+layers — ~6 independently-jitted quantized matmuls per layer plus unjitted
+glue — then an eager uplink quantizer and an eager server stage.  On the
+smoke-scale models that host dispatch, not compute, dominates wall clock.
+This module turns the whole agent -> transport -> server forward into a
+small, bounded set of XLA executables:
+
+* :func:`restack_segments` regroups the engine's per-layer
+  ``QuantizedLinear`` records into *layer-stacked* pytrees — one segment
+  per run of consecutive layers sharing a kernel container (int4-packed /
+  int8 / fp16-fake), so each segment scans over homogeneous leaves;
+* :func:`quantized_block` is the per-layer decoder block and
+  :func:`scan_segment` scans it over a segment — shared verbatim by the
+  eager engine (``CoInferenceEngine._agent_forward_kernel``) and the
+  compiled forward, so both execute identical XLA sub-computations;
+* :func:`transport_quantize` moves the per-row absmax uplink quantizer
+  from a vmap-of-Python-QuantConfig into the traced graph, masked over
+  the bucket padding;
+* :func:`build_forward` closes the agent loops, the transport, and the
+  server stack + head into one function for ``jax.jit``, with every
+  stage's layer/row loop bound shipped as a *runtime* int32 argument —
+  XLA then cannot unroll a loop body and re-fuse it into its neighbors,
+  which is what keeps every stage a fixed, context-independent
+  sub-computation (the bitwise-identity mechanism);
+* :func:`compile_forward` AOT-compiles it (``jit(...).lower().compile()``)
+  with the per-batch token/length buffers donated;
+* :class:`CompiledForwardCache` memoizes executables keyed on
+  ``(plan key, container signature, (B, S) bucket, split, b_emb)`` with
+  hit/miss counters surfaced in ``EngineReport`` — together with the
+  engine's shape bucketing (``kernels.bucketing``) the number of compiled
+  variants is bounded by ``len(bucket ladder) x active plans``, and
+  ``BatchedCoInferenceEngine.warmup()`` precompiles them all up front.
+
+Bitwise identity with the eager path is the invariant throughout: bucket
+right-padding is invisible by the DESIGN.md §7/§10 argument (row-independent
+forward, causal attention, transport masking extended over the bucket tail),
+and the scan body is the same per-layer block the eager loop runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantization import QuantConfig, quantize_dequantize
+from ..kernels import ops as kops
+from ..models import layers as L
+
+__all__ = ["CompiledForwardCache", "SegmentDesc", "restack_segments",
+           "layer_side_tree", "quantized_block", "scan_segment",
+           "transport_quantize", "forward_bounds", "build_forward",
+           "compile_forward"]
+
+
+# ---------------------------------------------------------------------------
+# layer restacking
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SegmentDesc:
+    """One homogeneous run of agent layers: ``length`` consecutive layers
+    from ``start`` whose weights all live in the same kernel container
+    (``int4`` nibble-packed, ``int8``, or ``fake`` full-precision
+    matrices from >8-bit plan entries)."""
+    kind: str
+    start: int
+    length: int
+
+
+def _container_kind(rec: dict) -> str:
+    probe = next(iter(rec["attn"].values()))
+    if isinstance(probe, kops.QuantizedLinear):
+        return "int4" if probe.bits <= 4 else "int8"
+    return "fake"
+
+
+def restack_segments(qlinears: List[dict]):
+    """Per-layer weight records -> (segment descriptors, stacked arrays).
+
+    Consecutive layers sharing a container are stacked leaf-wise along a
+    new leading layer axis so ``jax.lax.scan`` can drive them with one
+    compiled body per segment.  Quantized containers stack to
+    ``{"codes": [L, ...], "scales": [L, ...]}`` (the dequantization is
+    bits-independent, so int8 layers of *different* plan bits still share
+    a segment); ``fake`` layers stack the dense matrices directly.
+    """
+    groups: List[Tuple[str, int, List[dict]]] = []
+    for i, rec in enumerate(qlinears):
+        kind = _container_kind(rec)
+        if groups and groups[-1][0] == kind:
+            groups[-1][2].append(rec)
+        else:
+            groups.append((kind, i, [rec]))
+    descs, arrays = [], []
+    for kind, start, recs in groups:
+        descs.append(SegmentDesc(kind=kind, start=start, length=len(recs)))
+        stacked: Dict[str, Dict[str, Any]] = {}
+        for part in ("attn", "ffn"):
+            stacked[part] = {}
+            for name in recs[0][part]:
+                ws = [r[part][name] for r in recs]
+                if kind == "fake":
+                    stacked[part][name] = jnp.stack(
+                        [jnp.asarray(w) for w in ws])
+                else:
+                    stacked[part][name] = {
+                        "codes": jnp.stack([w.codes for w in ws]),
+                        "scales": jnp.stack([w.scales for w in ws]),
+                    }
+        arrays.append(stacked)
+    return tuple(descs), arrays
+
+
+def _segment_apply(kind: str) -> Callable[[Any, jax.Array], jax.Array]:
+    """The matmul a segment's scan body applies to its stacked slices:
+    the Pallas quantized matmul for kernel containers, a plain matmul for
+    fake-quantized (>8-bit) layers."""
+    if kind == "int4":
+        return lambda w, x: kops.quantized_matmul_int4(
+            x, w["codes"], w["scales"])
+    if kind == "int8":
+        return lambda w, x: kops.quantized_matmul(x, w["codes"], w["scales"])
+    return lambda w, x: x @ w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the shared per-layer block
+# ---------------------------------------------------------------------------
+
+def layer_side_tree(lp: dict, cfg) -> dict:
+    """The non-matmul per-layer parameters the block body needs (norm
+    gains and, where the family has them, QKV biases) — still stacked on
+    the leading layer axis; callers index or scan-slice it."""
+    t = {"ln1": lp["ln1"], "ln2": lp["ln2"]}
+    if cfg.qkv_bias:
+        t["attn"] = {k: lp["attn"][k] for k in ("bq", "bk", "bv")}
+    return t
+
+
+def quantized_block(cfg, apply_w, w, lp_i, x, positions):
+    """One dense decoder block with quantized matmuls.
+
+    ``w`` holds this layer's matmul weights (``{"attn": ..., "ffn": ...}``
+    — ``QuantizedLinear``/dense leaves in the eager loop, stacked-slice
+    dicts in the scanned fast path) applied through ``apply_w(w, x)``;
+    ``lp_i`` is this layer's :func:`layer_side_tree` slice.  Shared by
+    ``CoInferenceEngine._agent_forward_kernel`` and the compiled scan so
+    eager and compiled serving execute identical ops (the bitwise-identity
+    invariant of DESIGN.md §10).
+    """
+    h = L.apply_norm(cfg, x, lp_i["ln1"])
+    q = apply_w(w["attn"]["wq"], h)
+    k = apply_w(w["attn"]["wk"], h)
+    v = apply_w(w["attn"]["wv"], h)
+    if cfg.qkv_bias:
+        q = q + lp_i["attn"]["bq"].astype(x.dtype)
+        k = k + lp_i["attn"]["bk"].astype(x.dtype)
+        v = v + lp_i["attn"]["bv"].astype(x.dtype)
+    q = q.reshape(q.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+    k = k.reshape(k.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
+    v = v.reshape(v.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.blockwise_attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window)
+    x = x + apply_w(w["attn"]["wo"],
+                    attn.reshape(x.shape[:2] + (cfg.q_dim,)))
+    h2 = L.apply_norm(cfg, x, lp_i["ln2"])
+    if cfg.act == "silu":
+        y = jax.nn.silu(apply_w(w["ffn"]["wi_gate"], h2)) \
+            * apply_w(w["ffn"]["wi_up"], h2)
+    else:
+        y = jax.nn.gelu(apply_w(w["ffn"]["wi"], h2))
+    return x + apply_w(w["ffn"]["wo"], y)
+
+
+def scan_segment(cfg, desc: SegmentDesc, seg_arrays, side_tree, x,
+                 positions, n_layers):
+    """Loop :func:`quantized_block` over one homogeneous layer segment.
+
+    Used by *both* the eager engine (``_agent_forward_kernel``) and the
+    compiled forward.  The loop is a ``lax.while_loop`` over a *runtime*
+    bound ``n_layers`` (an int32 array: concrete in eager mode, a traced
+    argument inside the end-to-end jit): XLA cannot see the trip count,
+    so the per-layer block compiles to one isolated sub-computation whose
+    bits are identical in every execution context — a static-length scan
+    would be unrolled and re-fused into its neighbors at short segment
+    lengths, letting FMA contraction change the rounding.  This is the
+    foundation of the fast path's bitwise-identity invariant."""
+    ap = _segment_apply(desc.kind)
+    lp_slice = jax.tree_util.tree_map(
+        lambda a: a[desc.start:desc.start + desc.length], side_tree)
+    n = jnp.asarray(n_layers, jnp.int32)
+
+    def cond(carry):
+        return carry[0] < n
+
+    def body(carry):
+        i, x = carry
+        pick = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                      keepdims=False)
+        w = jax.tree_util.tree_map(pick, seg_arrays)
+        lp_i = jax.tree_util.tree_map(pick, lp_slice)
+        return (i + 1, quantized_block(cfg, ap, w, lp_i, x, positions))
+
+    _, x = jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+    return x
+
+
+def transport_quantize(emb, lengths, b_emb: int, n_rows):
+    """The uplink fake-quantizer as traced ops (DESIGN.md §10).
+
+    Masks every position past a row's true length (so bucket padding can
+    never raise a row's absmax), then applies the per-request per-tensor
+    absmax quantize-dequantize at ``b_emb`` row by row inside a
+    ``lax.while_loop`` over the *runtime* row count ``n_rows`` — the same
+    isolation trick as :func:`scan_segment`, keeping the quantizer's
+    rounding decisions bit-identical between the eager engine and the
+    compiled forward.  Shared verbatim by both
+    (``CoInferenceEngine.transport`` and :func:`build_forward`).
+    """
+    s = emb.shape[1]
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    emb = emb * mask[..., None].astype(emb.dtype)
+    if b_emb >= 16:
+        return emb
+    qcfg = QuantConfig(bits=b_emb, scheme="uniform",
+                       granularity="per-tensor")
+    n = jnp.asarray(n_rows, jnp.int32)
+
+    def cond(carry):
+        return carry[0] < n
+
+    def body(carry):
+        i, out = carry
+        row = jax.lax.dynamic_index_in_dim(emb, i, 0, keepdims=False)
+        q = quantize_dequantize(row, qcfg)
+        return (i + 1, jax.lax.dynamic_update_index_in_dim(out, q, i, 0))
+
+    _, out = jax.lax.while_loop(cond, body,
+                                (jnp.int32(0), jnp.zeros_like(emb)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end forward
+# ---------------------------------------------------------------------------
+
+def forward_bounds(descs, split: int, n_layers: int, n_rows: int):
+    """The runtime loop-bound vector a compiled forward consumes:
+    ``[split, n_layers, n_rows, seg_len_0, seg_len_1, ...]``.
+
+    Shipped as an int32 *argument* (never baked in as a constant) so XLA
+    cannot unroll any of the stage loops — see :func:`scan_segment`.
+    """
+    segs = [d.length for d in descs] if descs is not None else []
+    import numpy as _np
+    return _np.asarray([split, n_layers, n_rows] + segs, _np.int32)
+
+
+def build_forward(model, split: int, b_emb: int, descs, path: str):
+    """Close agent stage + transport + server stage over ``model`` into one
+    jittable ``forward(params, agent, tokens, lengths, bounds) -> logits``.
+
+    ``path`` is ``"kernel"`` (``agent`` = restacked segment arrays, looped
+    per ``descs``) or ``"fake"`` (``agent`` = the fake-quantized parameter
+    tree, run through ``model.run_layers_window``).  ``lengths`` [B] marks
+    each row's true token count: the transport mask zeroes every
+    bucket-padded position so a row's per-request absmax — and hence its
+    quantization — cannot depend on the padding.  ``bounds`` is the
+    :func:`forward_bounds` vector of runtime loop bounds (DESIGN.md §10).
+    """
+    cfg = model.cfg
+
+    def forward(params, agent, tokens, lengths, bounds):
+        batch = {"tokens": tokens}
+        if path == "kernel":
+            x, positions = model.embed(params, batch)
+            side = layer_side_tree(params["layers"], cfg)
+            for i, (desc, seg) in enumerate(zip(descs, agent)):
+                x = scan_segment(cfg, desc, seg, side, x, positions,
+                                 bounds[3 + i])
+        else:
+            x, positions = model.embed(agent, batch)
+            x, _ = model.run_layers_window(agent, x, positions,
+                                           jnp.int32(0), bounds[0])
+        x = transport_quantize(x, lengths, b_emb, bounds[2])
+        x, _ = model.run_layers_window(params, x, positions, bounds[0],
+                                       bounds[1])
+        x = L.apply_norm(cfg, x, params["final_norm"])
+        return L.unembed(cfg, params["embed"], x)
+
+    return forward
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def compile_forward(forward, params, agent, batch: int, seq: int,
+                    n_bounds: int):
+    """AOT-compile ``forward`` for one (batch, seq) bucket.
+
+    The token and length buffers are donated — they are per-batch scratch
+    the engine rebuilds every step, so XLA may reuse them for activations.
+    Returns the compiled executable (callable with concrete arrays).
+    """
+    jitted = jax.jit(forward, donate_argnums=(2, 3))
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    bounds = jax.ShapeDtypeStruct((n_bounds,), jnp.int32)
+    with warnings.catch_warnings():
+        # on backends that cannot alias the small int buffers the
+        # donation is simply dropped; the advisory warning is noise here
+        warnings.filterwarnings(
+            "ignore", message=".*donated.*", category=UserWarning)
+        return jitted.lower(_sds(params), _sds(agent), tok, lens,
+                            bounds).compile()
+
+
+# ---------------------------------------------------------------------------
+# the compile cache
+# ---------------------------------------------------------------------------
+
+class CompiledForwardCache:
+    """Memoizes AOT-compiled end-to-end forwards.
+
+    Keys are ``(plan/weight key, container signature, (B, S) bucket,
+    split, b_emb)`` — everything that changes the compiled graph.  With
+    the engine's shape bucketing the reachable keyspace is
+    ``len(bucket ladder) x active plans`` per engine, so warm traffic
+    never misses; ``hits``/``misses`` are surfaced in ``EngineReport``
+    and asserted by tests/benchmarks (every miss is exactly one XLA
+    compile).
+    """
+
+    def __init__(self):
+        self._exe: Dict[tuple, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._exe)
+
+    @property
+    def compiled_variants(self) -> int:
+        return len(self._exe)
+
+    def get(self, key: tuple, build: Callable[[], Any]):
+        """The executable for ``key``, building (compiling) it on miss."""
+        if key in self._exe:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._exe[key] = build()
+        return self._exe[key]

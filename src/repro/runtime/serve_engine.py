@@ -61,7 +61,10 @@ from ..core.cost_model import (SystemParams, agent_delay, agent_energy,
 from ..core.quantization import (QuantConfig, QuantPlan, quantize_dequantize,
                                  wire_bytes)
 from ..kernels import ops as kops
+from ..kernels.bucketing import (DEFAULT_SEQ_BASE, next_geometric,
+                                 seq_bucket, seq_ladder)
 from ..models import layers as L
+from . import fastpath as fp
 from .qat import fake_quantize_agent
 
 
@@ -164,6 +167,14 @@ class EngineReport:
     throughput_rps: float       # requests / modeled second
     codesign_hits: int          # THIS engine's cache hits (not cache-global)
     codesign_misses: int        # (P1) solves this engine actually triggered
+    # compiled-fast-path counters (DESIGN.md §10); all zero when the
+    # engine serves eagerly.  Hits/misses are THIS engine's own lookups
+    # (the cache may be shared); every miss is exactly one XLA compile,
+    # so misses <= len(bucket ladder) x active plans on warm traffic.
+    # ``compiled_variants`` counts the (possibly shared) cache's entries.
+    compile_hits: int = 0
+    compile_misses: int = 0
+    compiled_variants: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -254,11 +265,21 @@ class CoInferenceEngine:
                  scheme: str = "uniform",
                  path: Literal["fake", "kernel"] = "fake",
                  b_emb: int = 8,
-                 cache_weights: bool = False):
+                 cache_weights: bool = False,
+                 compiled: bool = False,
+                 compile_cache: Optional[fp.CompiledForwardCache] = None,
+                 seq_bucket_base: int = DEFAULT_SEQ_BASE,
+                 batch_quantum: Optional[int] = None):
         if not hasattr(model, "run_layers"):
             raise TypeError(
                 f"{type(model).__name__} lacks run_layers; co-inference "
                 "split execution needs the DecoderLM protocol")
+        if compiled and not (hasattr(model, "embed")
+                             and hasattr(model, "run_layers_window")):
+            raise TypeError(
+                f"{type(model).__name__} lacks the embed/"
+                "run_layers_window hooks; the compiled fast path "
+                "(DESIGN.md §10) needs both")
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -267,6 +288,23 @@ class CoInferenceEngine:
         self.path = path
         self.b_emb = b_emb
         self.split = self.cfg.split_layer
+        # compiled fast path (DESIGN.md §10): token batches are padded to
+        # the (batch quantum, seq bucket) ladder and served through one
+        # AOT-compiled end-to-end executable per (plan, bucket)
+        self.compiled = bool(compiled)
+        self.seq_bucket_base = int(seq_bucket_base)
+        self.batch_quantum = int(batch_quantum) if batch_quantum else None
+        self.compile_cache = compile_cache if compile_cache is not None \
+            else (fp.CompiledForwardCache() if compiled else None)
+        # this engine's own compile-cache lookups (the cache may be shared
+        # across engines — same attribution discipline as CodesignCache)
+        self._own_compile_hits = 0
+        self._own_compile_misses = 0
+        # weight key -> (segment descs, stacked arrays) for the scan path;
+        # the stacked copies coexist with the per-layer records in the
+        # weight cache (both bounded by the number of active plans) so a
+        # plan flip re-quantizes and re-stacks nothing
+        self._stacked: Dict[tuple, tuple] = {}
         self._axes = model.logical_axes()
         self.lam = float(lam) if lam is not None else self._fit_lambda()
         self.b_hat: int = 8
@@ -358,6 +396,10 @@ class CoInferenceEngine:
             self.b_eff = plan.mean_bits(self.split)
             self.b_hat = int(round(self.b_eff))
             key = plan.key()
+        # the stable identity of the materialized weights at this operating
+        # point — the weight cache, the restacked-segment cache, and the
+        # compiled-forward cache all key on it
+        self._weight_key = key
         if self._weight_cache is not None and key in self._weight_cache:
             self._agent_params, self._qlinears = self._weight_cache[key]
             return
@@ -494,62 +536,170 @@ class CoInferenceEngine:
             out.append(rec)
         return out
 
-    @staticmethod
-    def _apply_q(wrec, x):
-        """Apply one per-layer weight record: Pallas quantized matmul for
-        kernel-resident layers, plain matmul for fake-quantized ones."""
-        if isinstance(wrec, kops.QuantizedLinear):
-            return wrec.apply(x)
-        return x @ wrec.astype(x.dtype)
+    def _stacked_segments(self):
+        """Layer-stacked scan segments for the current kernel weights,
+        memoized on the weight key (DESIGN.md §10)."""
+        if self._weight_key not in self._stacked:
+            self._stacked[self._weight_key] = \
+                fp.restack_segments(self._qlinears)
+        return self._stacked[self._weight_key]
 
     def _agent_forward_kernel(self, x, positions):
         """Dense DecoderLM agent stack with Pallas quantized matmuls.
 
         ``x`` is [B, S, D] for any B — the quantized-matmul wrappers flatten
-        every leading dim into the kernel's M axis (kernels/ops.py)."""
-        cfg = self.cfg
-        lp = self.params["layers"]
-        ap = self._apply_q
-        for i in range(self.split):
-            ql = self._qlinears[i]
-            ln1 = jax.tree_util.tree_map(lambda a: a[i], lp["ln1"])
-            ln2 = jax.tree_util.tree_map(lambda a: a[i], lp["ln2"])
-            h = L.apply_norm(cfg, x, ln1)
-            q = ap(ql["attn"]["wq"], h)
-            k = ap(ql["attn"]["wk"], h)
-            v = ap(ql["attn"]["wv"], h)
-            if cfg.qkv_bias:
-                q = q + lp["attn"]["bq"][i].astype(x.dtype)
-                k = k + lp["attn"]["bk"][i].astype(x.dtype)
-                v = v + lp["attn"]["bv"][i].astype(x.dtype)
-            q = q.reshape(q.shape[:-1] + (cfg.n_heads, cfg.head_dim))
-            k = k.reshape(k.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
-            v = v.reshape(v.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
-            q = L.apply_rope(q, positions, cfg.rope_theta)
-            k = L.apply_rope(k, positions, cfg.rope_theta)
-            attn = L.blockwise_attention(q, k, v, causal=True,
-                                         window=cfg.sliding_window)
-            x = x + ap(ql["attn"]["wo"],
-                       attn.reshape(x.shape[:2] + (cfg.q_dim,)))
-            h2 = L.apply_norm(cfg, x, ln2)
-            if cfg.act == "silu":
-                y = jax.nn.silu(ap(ql["ffn"]["wi_gate"], h2)) \
-                    * ap(ql["ffn"]["wi_up"], h2)
-            else:
-                y = jax.nn.gelu(ap(ql["ffn"]["wi"], h2))
-            x = x + ap(ql["ffn"]["wo"], y)
+        every leading dim into the kernel's M axis (kernels/ops.py).
+
+        The stack runs as dynamic-bound loop segments over the
+        layer-stacked weight records (DESIGN.md §10), one segment per
+        homogeneous kernel container — the *same* loops the compiled fast
+        path traces, so eager and compiled serving execute identical XLA
+        sub-computations and stay bitwise equal (a runtime-bound loop body
+        is never unrolled; a Python per-layer loop would instead expose
+        the block's elementwise ops to context-dependent FMA contraction).
+        """
+        descs, arrays = self._stacked_segments()
+        side = fp.layer_side_tree(self.params["layers"], self.cfg)
+        for desc, seg in zip(descs, arrays):
+            x = fp.scan_segment(self.cfg, desc, seg, side, x, positions,
+                                jnp.int32(desc.length))
         return x
+
+    # ------------------------------------------------------------------
+    # compiled fast path (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def bucket_shape(self, b: int, s: int):
+        """The (batch, seq) bucket a [b, s] token batch pads up to: S on
+        the geometric seq ladder, B to the batch quantum (next multiple)
+        or, quantum-less, to the next power of two."""
+        sp = seq_bucket(s, base=self.seq_bucket_base)
+        if self.batch_quantum:
+            q = self.batch_quantum
+            bp = -(-b // q) * q
+        else:
+            bp = next_geometric(b, 1)
+        return bp, sp
+
+    def _agent_repr(self):
+        """(container signature, agent argument tree, segment descs) for
+        the current operating point.  Kernel-resident weights are restacked
+        into scan segments (memoized per weight key); the fake path ships
+        its fake-quantized parameter tree whole."""
+        if self._qlinears is not None:
+            descs, arrays = self._stacked_segments()
+            return ("kernel",) + descs, arrays, descs
+        agent = self._agent_params if self._agent_params is not None \
+            else self.params
+        return ("fake",), agent, None
+
+    def _compiled_executable(self, bp: int, sp: int):
+        """The AOT executable for the current plan at bucket (bp, sp),
+        through the compile cache (one XLA compile per miss).  Returns
+        (executable, agent argument tree, runtime bounds vector).
+
+        The key includes the (hashable) ``ModelConfig``: ``build_forward``
+        bakes config constants (rope theta, window, activation, ...) into
+        the executable, so a cache shared across engines over *different*
+        models must never collide on a same-shaped plan/bucket.  Weights
+        and parameters are call arguments and need no key entry."""
+        sig, agent, descs = self._agent_repr()
+        key = (self.cfg, self._weight_key, sig, (bp, sp), self.split,
+               self.b_emb)
+        bounds = fp.forward_bounds(descs, self.split, self.cfg.n_layers,
+                                   bp)
+
+        def build():
+            fwd = fp.build_forward(self.model, self.split, self.b_emb,
+                                   descs,
+                                   "kernel" if descs is not None
+                                   else "fake")
+            return fp.compile_forward(fwd, self.params, agent, bp, sp,
+                                      len(bounds))
+
+        cc = self.compile_cache
+        h0, m0 = cc.hits, cc.misses
+        exe = cc.get(key, build)
+        self._own_compile_hits += cc.hits - h0
+        self._own_compile_misses += cc.misses - m0
+        return exe, agent, bounds
+
+    def precompile(self, batch: int, seq: int) -> None:
+        """Warm the compile cache for a [batch, seq] workload at the
+        current operating point without executing anything."""
+        if self.compile_cache is None:
+            raise RuntimeError("precompile() needs compiled=True")
+        bp, sp = self.bucket_shape(batch, seq)
+        self._compiled_executable(bp, sp)
+
+    def _serve_batch_compiled(self, tokens, lengths=None):
+        """Bucket-pad, run the compiled forward, bill the padded workload.
+
+        Per-request logits are bitwise identical to the eager path: bucket
+        right-padding is invisible (row independence + causal attention +
+        transport masking over the padded tail, DESIGN.md §10), and the
+        compiled graph runs the same ops the eager path dispatches."""
+        toks = np.asarray(tokens, np.int32)
+        b0, s0 = toks.shape
+        lens = np.asarray(lengths, np.int64) if lengths is not None \
+            else np.full((b0,), s0, np.int64)
+        bp, sp = self.bucket_shape(b0, s0)
+        padded = np.zeros((bp, sp), np.int32)
+        padded[:b0, :s0] = toks
+        lens_p = np.zeros((bp,), np.int32)
+        lens_p[:b0] = lens
+        exe, agent, bounds = self._compiled_executable(bp, sp)
+        out = exe(self.params, agent, jnp.asarray(padded),
+                  jnp.asarray(lens_p), jnp.asarray(bounds))
+        logits = out[:b0, :s0]
+
+        # uplink wire bytes per real row — the identical accounting
+        # transport() returns on the eager path
+        row_bytes = self._row_wire_bytes(lens)
+        emb_bytes = sum(row_bytes)
+
+        # the batch is billed at the *padded* workload — bucket padding is
+        # compute the hardware really runs; occupancy accounting shows it
+        n_tok = bp * sp
+        n_a, n_s = self.flop_split(n_tok)
+        p = dataclasses.replace(self.sysp, n_flop_agent=n_a,
+                                n_flop_server=n_s,
+                                emb_bytes_full=float(emb_bytes)
+                                * 16.0 / self.b_emb)
+        t_a = float(agent_delay(self.b_eff, self.f, p))
+        t_s = float(server_delay(self.f_server, p))
+        t_x = float(transport_delay(self.b_emb, p))
+        e_x = float(transport_energy(self.b_emb, p))
+        e = float(agent_energy(self.b_eff, self.f, p)
+                  + server_energy(self.f_server, p)) + e_x
+        stats = ServeStats(
+            b_hat=self.b_hat, f=self.f, f_server=self.f_server,
+            agent_delay_s=t_a, server_delay_s=t_s, transport_delay_s=t_x,
+            total_delay_s=t_a + t_s + t_x, energy_j=e,
+            transport_energy_j=e_x, emb_bytes=emb_bytes,
+            agent_flops=n_a, server_flops=n_s, emb_row_bytes=row_bytes,
+            plan_bits=(self.plan.layer_bit_list(self.split)
+                       if self.plan is not None else ()))
+        return logits, stats
 
     # ------------------------------------------------------------------
     # the two inference stages + transport
     # ------------------------------------------------------------------
     def agent_stage(self, batch: Dict[str, Any]):
-        """Embedding + layers [0, split) at bit-width b̂."""
+        """Embedding + layers [0, split) at bit-width b̂.
+
+        Families exposing ``run_layers_window`` (dense DecoderLM) run the
+        dynamic-bound window loop — the identical sub-computation the
+        compiled fast path traces (DESIGN.md §10); others keep the
+        scan-based ``run_layers``."""
         src = self._agent_params if self._agent_params is not None \
             else self.params
         x, positions = self.model._embed(src, batch)
         if self._qlinears is not None:
             x = self._agent_forward_kernel(x, positions)
+        elif hasattr(self.model, "run_layers_window"):
+            x, _ = self.model.run_layers_window(src, x, positions,
+                                                jnp.int32(0),
+                                                jnp.int32(self.split))
         else:
             x, _ = self.model.run_layers(src, x, positions, 0, self.split)
         return x, positions
@@ -569,32 +719,46 @@ class CoInferenceEngine:
         never exceed a row's absmax, and the padded tail is sliced off
         after the server stage), and wire bytes count only real positions.
         """
-        d = int(emb.shape[-1])
         if lengths is not None:
-            lengths = np.asarray(lengths, np.int64)
-            pos = jnp.arange(emb.shape[1])
-            mask = (pos[None, :] < jnp.asarray(lengths)[:, None])
-            # real positions multiply by 1.0 — bitwise no-op
-            emb = emb * mask[..., None].astype(emb.dtype)
-            real = lengths
+            real = np.asarray(lengths, np.int64)
         else:
             real = np.full((emb.shape[0],), emb.shape[1], np.int64)
+        # fastpath.transport_quantize masks padded positions (real ones
+        # multiply by 1.0 — bitwise no-op) and quantizes row by row; it is
+        # the exact computation the compiled forward traces (DESIGN.md §10)
+        emb_q = fp.transport_quantize(emb, jnp.asarray(real, jnp.int32),
+                                      self.b_emb,
+                                      jnp.int32(emb.shape[0]))
+        return emb_q, self._row_wire_bytes(real)
+
+    def _row_wire_bytes(self, real_lengths) -> tuple:
+        """Per-request uplink wire bytes for rows of the given true
+        lengths — one helper shared by the eager :meth:`transport` and the
+        compiled path's host-side accounting, so the two can never drift.
+
+        b_emb >= 16 ships the raw activation (billed at the model's
+        activation dtype, == the boundary dtype on every in-tree path);
+        below that, the realizable wire size (quantization.wire_bytes):
+        codes of <= 4 bits ship nibble-packed via pack_int4, wider ones
+        int8/int16 — not the fractional (n*bits+7)//8 idealization — plus
+        one f32 absmax scale per request."""
+        d = int(self.cfg.d_model)
         if self.b_emb >= 16:
-            return emb, tuple(int(s) * d * emb.dtype.itemsize for s in real)
-        qcfg = QuantConfig(bits=self.b_emb, scheme="uniform",
-                           granularity="per-tensor")
-        emb_q = jax.vmap(lambda row: quantize_dequantize(row, qcfg))(emb)
-        # realizable wire size (quantization.wire_bytes): codes of <= 4
-        # bits ship nibble-packed via pack_int4, wider ones int8/int16 —
-        # not the fractional (n*bits+7)//8 idealization — plus one f32
-        # absmax scale per request
-        return emb_q, tuple(wire_bytes(int(s) * d, self.b_emb) + 4
-                            for s in real)
+            itemsize = jnp.dtype(self.cfg.dtype).itemsize
+            return tuple(int(s) * d * itemsize for s in real_lengths)
+        return tuple(wire_bytes(int(s) * d, self.b_emb) + 4
+                     for s in real_lengths)
 
     def server_stage(self, emb: jax.Array, positions):
-        """Layers [split, L) at full precision + head."""
-        x, _ = self.model.run_layers(self.params, emb, positions,
-                                     self.split, self.cfg.n_layers)
+        """Layers [split, L) at full precision + head (dynamic window
+        loop where the family supports it — see :meth:`agent_stage`)."""
+        if hasattr(self.model, "run_layers_window"):
+            x, _ = self.model.run_layers_window(
+                self.params, emb, positions, jnp.int32(self.split),
+                jnp.int32(self.cfg.n_layers))
+        else:
+            x, _ = self.model.run_layers(self.params, emb, positions,
+                                         self.split, self.cfg.n_layers)
         x = L.apply_norm(self.cfg, x, self.params["final_norm"])
         return L.unembed(self.cfg, self.params["embed"], x)
 
@@ -603,7 +767,13 @@ class CoInferenceEngine:
         """Full co-inference pass; returns (logits, ServeStats).
 
         ``lengths`` flags right-padded rows (see :meth:`transport`); the
-        batched engine passes each request's true length."""
+        batched engine passes each request's true length.  With
+        ``compiled=True`` token-only batches run the fast path — one
+        AOT-compiled bucket-padded forward, bitwise identical per request
+        (DESIGN.md §10); batches carrying extra modalities fall back to
+        the eager path below."""
+        if self.compiled and set(batch) == {"tokens"}:
+            return self._serve_batch_compiled(batch["tokens"], lengths)
         emb, positions = self.agent_stage(batch)
         emb_rx, row_bytes = self.transport(emb, lengths)
         emb_bytes = sum(row_bytes)
@@ -668,14 +838,25 @@ class BatchedCoInferenceEngine:
                  scheme: str = "uniform",
                  codesign_cache: Optional[CodesignCache] = None,
                  pad_token: int = 0,
-                 mixed_precision: bool = False):
+                 mixed_precision: bool = False,
+                 compiled: bool = False,
+                 compile_cache: Optional[fp.CompiledForwardCache] = None,
+                 seq_bucket_base: int = DEFAULT_SEQ_BASE):
         if not classes:
             raise ValueError("need at least one QosClass")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        # compiled serving buckets every batch to (max_batch, seq bucket):
+        # the batch quantum is max_batch, so the compiled-variant count is
+        # len(seq ladder) x active plans (DESIGN.md §10)
         self.engine = CoInferenceEngine(model, params, sysp, lam=lam,
                                         scheme=scheme, path=path,
-                                        b_emb=b_emb, cache_weights=True)
+                                        b_emb=b_emb, cache_weights=True,
+                                        compiled=compiled,
+                                        compile_cache=compile_cache,
+                                        seq_bucket_base=seq_bucket_base,
+                                        batch_quantum=max_batch)
+        self.compiled = bool(compiled)
         self.sysp = sysp
         self.max_batch = int(max_batch)
         self.pad_token = int(pad_token)
@@ -759,6 +940,28 @@ class BatchedCoInferenceEngine:
         """The class's :class:`QuantPlan` (None in uniform mode)."""
         return self._plans.get(qos_name)
 
+    def warmup(self, max_seq: int) -> int:
+        """Precompile every (class plan, seq bucket) forward variant for
+        requests up to ``max_seq`` tokens (DESIGN.md §10).
+
+        After this, serving any workload whose sequences fit the ladder
+        never compiles: every step is a compile-cache hit.  Returns the
+        number of variants compiled (cache misses this call added);
+        variants other engines or earlier calls already compiled into a
+        shared cache are not recompiled.
+        """
+        if not self.compiled:
+            raise RuntimeError("warmup() needs compiled=True")
+        cc = self.engine.compile_cache
+        m0 = cc.misses
+        for name, c in self.classes.items():
+            sol = self._solutions[name]
+            target = self._plans.get(name, getattr(sol, "b_hat", None))
+            self.engine.configure(target, sol.f, sol.f_server)
+            for s in seq_ladder(max_seq, base=self.engine.seq_bucket_base):
+                self.engine.precompile(self.max_batch, s)
+        return cc.misses - m0
+
     def submit(self, tokens, qos: str,
                arrival_s: Optional[float] = None) -> int:
         """Enqueue one request; returns its request id."""
@@ -827,8 +1030,11 @@ class BatchedCoInferenceEngine:
         padded = np.full((len(reqs), s_max), self.pad_token, np.int32)
         for i, r in enumerate(reqs):
             padded[i, :r.tokens.size] = r.tokens
+        # hand the host array over as-is: the compiled path re-pads it to
+        # the bucket before its single device upload, and the eager embed
+        # converts on use — uploading here would round-trip device->host
         logits, stats = self.engine.serve_batch(
-            {"tokens": jnp.asarray(padded)}, lengths=lengths)
+            {"tokens": padded}, lengths=lengths)
 
         start = max(self._clock, max(r.arrival_s for r in reqs))
         end = start + stats.total_delay_s
@@ -837,11 +1043,18 @@ class BatchedCoInferenceEngine:
         n = len(reqs)
         waits = [start - r.arrival_s for r in reqs]
         real = sum(r.tokens.size for r in reqs)
+        if self.compiled:
+            # the fast path padded to the (batch quantum, seq bucket)
+            # shape — occupancy reports the bucket waste honestly
+            bp, sp = self.engine.bucket_shape(n, s_max)
+            n_padded = bp * sp
+        else:
+            n_padded = n * s_max
         bstats = BatchStats(
             qos=qos.name, batch_size=n, b_hat=stats.b_hat,
             agent_path=self.engine.agent_path, f=stats.f,
             f_server=stats.f_server, real_tokens=real,
-            padded_tokens=n * s_max, occupancy=real / (n * s_max),
+            padded_tokens=n_padded, occupancy=real / n_padded,
             batch_delay_s=stats.total_delay_s,
             amortized_delay_s=stats.total_delay_s / n,
             energy_j=stats.energy_j,
@@ -881,6 +1094,7 @@ class BatchedCoInferenceEngine:
     # ------------------------------------------------------------------
     def report(self) -> EngineReport:
         nb = len(self.batch_history)
+        cc = self.engine.compile_cache
         return EngineReport(
             requests_served=self._served,
             batches_served=nb,
@@ -892,4 +1106,7 @@ class BatchedCoInferenceEngine:
             throughput_rps=self._served / self._clock
             if self._clock > 0 else 0.0,
             codesign_hits=self._own_hits,
-            codesign_misses=self._own_misses)
+            codesign_misses=self._own_misses,
+            compile_hits=self.engine._own_compile_hits,
+            compile_misses=self.engine._own_compile_misses,
+            compiled_variants=len(cc) if cc is not None else 0)

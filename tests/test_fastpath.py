@@ -1,0 +1,243 @@
+"""Compiled fast-path serving (DESIGN.md §10): bitwise identity with the
+eager engines across paths/plans/buckets, the compile-count bound, and the
+shape-bucket ladders."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.core.quantization import QuantPlan
+from repro.kernels.bucketing import (next_geometric, row_bucket, seq_bucket,
+                                     seq_ladder)
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, CoInferenceEngine,
+                           CompiledForwardCache, QosClass)
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+CLASSES = [
+    QosClass("realtime", t0=1.10, e0=0.9),
+    QosClass("interactive", t0=1.30, e0=1.5),
+    QosClass("batch", t0=2.50, e0=4.0),
+]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qwen_split3():
+    cfg = dataclasses.replace(get_smoke("qwen2-0.5b"), split_layer=3)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _ragged(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = np.zeros((len(lens), max(lens)), np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(0, cfg.vocab_size, l)
+    return toks
+
+
+def _assert_compiled_matches_eager(model, params, target, *, path,
+                                   b_emb=8, lens=(6, 13, 16, 23)):
+    cfg = model.cfg
+    toks = _ragged(cfg, lens)
+    eager = CoInferenceEngine(model, params, SYSP, path=path, b_emb=b_emb)
+    comp = CoInferenceEngine(model, params, SYSP, path=path, b_emb=b_emb,
+                             compiled=True)
+    eager.configure(target)
+    comp.configure(target)
+    le, se = eager.serve_batch({"tokens": jnp.asarray(toks)},
+                               lengths=list(lens))
+    lc, sc = comp.serve_batch({"tokens": jnp.asarray(toks)},
+                              lengths=list(lens))
+    assert lc.shape == le.shape  # sliced back from the bucket
+    for i, l in enumerate(lens):
+        np.testing.assert_array_equal(np.asarray(le[i, :l]),
+                                      np.asarray(lc[i, :l]))
+    # per-request uplink accounting is padding-independent
+    assert se.emb_row_bytes == sc.emb_row_bytes
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b_hat", [4, 8])
+def test_compiled_bitwise_uniform_kernel(qwen, b_hat):
+    _, model, params = qwen
+    _assert_compiled_matches_eager(model, params, b_hat, path="kernel")
+
+
+@pytest.mark.parametrize("b_emb", [4, 6, 16])
+def test_compiled_bitwise_across_b_emb(qwen, b_emb):
+    _, model, params = qwen
+    _assert_compiled_matches_eager(model, params, 8, path="kernel",
+                                   b_emb=b_emb)
+
+
+def test_compiled_bitwise_fake_path(qwen):
+    _, model, params = qwen
+    _assert_compiled_matches_eager(model, params, 6, path="fake")
+
+
+@pytest.mark.parametrize("bits", [(4, 8, 12), (4, 4, 6)])
+def test_compiled_bitwise_mixed_plan(qwen_split3, bits):
+    """Mixed plans restack into per-container segments (int4 / int8 /
+    >8-bit fake) — every segment combination must stay bitwise equal."""
+    _, model, params = qwen_split3
+    plan = QuantPlan.from_layer_bits(list(bits))
+    _assert_compiled_matches_eager(model, params, plan, path="kernel")
+
+
+def test_batched_compiled_bitwise_vs_sequential_eager(qwen):
+    """The acceptance invariant: batched + bucket-padded + compiled
+    serving returns, per request, the exact logits of the sequential
+    eager engine — including lengths crossing bucket boundaries."""
+    cfg, model, params = qwen
+    seq = CoInferenceEngine(model, params, SYSP, path="kernel",
+                            cache_weights=True)
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=4, path="kernel",
+                                   compiled=True)
+    rng = np.random.default_rng(4)
+    sent = {}
+    for i in range(9):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(5, 60)))
+        sent[eng.submit(toks, CLASSES[i % 3].name)] = (toks,
+                                                       CLASSES[i % 3].name)
+    responses = eng.drain()
+    assert len(responses) == 9
+    for r in responses:
+        toks, qos = sent[r.request_id]
+        sol = eng.solution_for(qos)
+        seq.configure(sol.b_hat, sol.f, sol.f_server)
+        want, _ = seq.serve_batch(
+            {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        np.testing.assert_array_equal(np.asarray(r.logits),
+                                      np.asarray(want[0]))
+
+
+def test_eager_bucket_padding_invisible(qwen):
+    """The §10 extension of the §7 argument, eager-on-eager: right-padding
+    a request to its seq bucket cannot change its logits (this used to
+    break for lengths crossing an attention-vectorization boundary before
+    blockwise_attention snapped its blocks to the bucket ladder)."""
+    cfg, model, params = qwen
+    eng = CoInferenceEngine(model, params, SYSP, path="kernel")
+    eng.configure(4)
+    rng = np.random.default_rng(4)
+    for l in (10, 23, 40):
+        toks = rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+        a, _ = eng.serve_batch({"tokens": jnp.asarray(toks)[None]})
+        sp = seq_bucket(l)
+        padded = np.zeros((1, sp), np.int32)
+        padded[0, :l] = toks
+        b, _ = eng.serve_batch({"tokens": jnp.asarray(padded)},
+                               lengths=[l])
+        np.testing.assert_array_equal(np.asarray(a[0]),
+                                      np.asarray(b[0, :l]))
+
+
+# ---------------------------------------------------------------------------
+# compile-count bound + warmup
+# ---------------------------------------------------------------------------
+
+def test_compile_count_bounded_and_warm_traffic_never_recompiles(qwen):
+    cfg, model, params = qwen
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                   max_batch=4, path="kernel",
+                                   compiled=True)
+    max_seq = 64
+    warm = eng.warmup(max_seq)
+    cc = eng.engine.compile_cache
+    bound = len(seq_ladder(max_seq)) * len(CLASSES)
+    assert warm <= bound
+    miss0 = cc.misses
+
+    # >= 8 distinct raw (batch, seq) shapes: per class, one full batch
+    # around each length scale plus a ragged tail batch
+    rng = np.random.default_rng(11)
+    raw_shapes = set()
+    for ci, c in enumerate(CLASSES):
+        for group, top in ((4, 12 + ci), (4, 30 + ci), (2, 55 + ci)):
+            for j in range(group):
+                l = top - j
+                eng.submit(rng.integers(0, cfg.vocab_size, size=l), c.name)
+    while eng.pending():
+        rs = eng.step()
+        raw_shapes.add((len(rs), max(len(r.logits) for r in rs)))
+    assert len(raw_shapes) >= 8
+    assert cc.misses == miss0          # warm traffic never recompiles
+    assert len(cc) <= bound            # <= buckets x active plans
+    rep = eng.report()
+    assert rep.compile_misses == cc.misses
+    assert rep.compiled_variants == len(cc)
+    assert rep.compile_hits == cc.hits > 0
+
+
+def test_warmup_requires_compiled(qwen):
+    _, model, params = qwen
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES)
+    with pytest.raises(RuntimeError):
+        eng.warmup(32)
+    assert eng.report().compiled_variants == 0
+
+
+def test_shared_compile_cache_across_engines(qwen):
+    """Two engines sharing one CompiledForwardCache reuse executables:
+    the second engine's warmup compiles nothing new."""
+    _, model, params = qwen
+    cache = CompiledForwardCache()
+    a = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                 max_batch=4, path="kernel",
+                                 compiled=True, compile_cache=cache)
+    n_a = a.warmup(32)
+    assert n_a == len(cache) > 0
+    b = BatchedCoInferenceEngine(model, params, SYSP, classes=CLASSES,
+                                 max_batch=4, path="kernel",
+                                 compiled=True, compile_cache=cache)
+    assert b.warmup(32) == 0
+
+
+# ---------------------------------------------------------------------------
+# bucket ladders
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladders():
+    assert next_geometric(1, 16) == 16
+    assert next_geometric(16, 16) == 16
+    assert next_geometric(17, 16) == 32
+    assert seq_bucket(40) == 64
+    assert seq_ladder(64) == (16, 32, 64)
+    assert seq_ladder(65) == (16, 32, 64, 128)
+    assert row_bucket(1) == 128
+    assert row_bucket(128) == 128
+    assert row_bucket(129) == 256
+    assert row_bucket(300) == 512
+    with pytest.raises(ValueError):
+        next_geometric(0, 16)
+
+
+def test_engine_bucket_shape(qwen):
+    _, model, params = qwen
+    eng = CoInferenceEngine(model, params, SYSP, compiled=True,
+                            batch_quantum=4)
+    assert eng.bucket_shape(1, 5) == (4, 16)
+    assert eng.bucket_shape(4, 17) == (4, 32)
+    assert eng.bucket_shape(5, 16) == (8, 16)
+    free = CoInferenceEngine(model, params, SYSP, compiled=True)
+    assert free.bucket_shape(3, 5) == (4, 16)   # pow-2 batch, no quantum

@@ -82,6 +82,64 @@ def test_group_quantize_matches_ref(k, n, g, bits):
                                rtol=1e-6)
 
 
+def test_group_quantize_fallback_k_smaller_than_group():
+    """k < group_size (and n 128-misaligned doesn't matter): one group
+    spanning the whole contraction axis."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (96, 128))
+    codes, scales = ops.group_quantize(w, group_size=128)
+    codes_r, scales_r = ref.group_quantize_ref(w, 96)
+    assert scales.shape == (1, 128)
+    assert bool(jnp.all(codes == codes_r))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_r),
+                               rtol=1e-6)
+
+
+def test_group_quantize_fallback_k_not_tileable():
+    """k >= group_size but k % group_size != 0: degenerates to per-element
+    groups (group_size 1) — every code then sits exactly on a level."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (192, 128))
+    codes, scales = ops.group_quantize(w, group_size=128)
+    codes_r, scales_r = ref.group_quantize_ref(w, 1)
+    assert scales.shape == (192, 128)
+    assert bool(jnp.all(codes == codes_r))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_r),
+                               rtol=1e-6)
+    # per-element quantization is exact: dequant reproduces w (where w!=0)
+    np.testing.assert_allclose(
+        np.asarray(codes, np.float32) * np.asarray(scales), np.asarray(w),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_group_quantize_fallback_n_misaligned():
+    """k tiles but n % 128 != 0: the reference quantizer runs with the
+    requested group size (the Pallas fast path needs 128-aligned N)."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 100))
+    codes, scales = ops.group_quantize(w, group_size=128, bits=4)
+    codes_r, scales_r = ref.group_quantize_ref(w, 128, bits=4)
+    assert scales.shape == (2, 100)
+    assert bool(jnp.all(codes == codes_r))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_r),
+                               rtol=1e-6)
+
+
+def test_quantized_matmul_row_bucket_padding_invisible():
+    """ops.py pads M to the geometric row ladder outside the jitted core;
+    any two row counts in one bucket share a trace and every real row's
+    bits are unchanged by the pad."""
+    from repro.kernels.bucketing import row_bucket
+    k, n, g = 256, 128, 128
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n))
+    codes, scales = ref.group_quantize_ref(w, g)
+    x = jax.random.normal(jax.random.PRNGKey(4), (300, k))
+    assert row_bucket(300) == 512
+    out = ops.quantized_matmul(x, codes, scales)
+    assert out.shape == (300, n)
+    for m in (1, 130, 300):
+        sub = ops.quantized_matmul(x[:m], codes, scales)
+        np.testing.assert_array_equal(np.asarray(sub),
+                                      np.asarray(out[:m]))
+
+
 def test_pack_unpack_int4_roundtrip():
     rng = np.random.default_rng(0)
     codes = jnp.asarray(rng.integers(-7, 8, (256, 128)), jnp.int8)
