@@ -21,6 +21,11 @@ Sections (paper artifact -> module):
             clock + compile-count bound
             (also writes BENCH_fastpath.json at the repo root; raises
              on acceptance or throughput regression)
+    fleet   joint vs equal-split shared-server       fleet.py
+            allocation across heterogeneous agents
+            (also writes BENCH_fleet.json at the repo root; raises if
+             joint stops beating equal-split or the single-agent fleet
+             loses bitwise identity)
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ import sys
 import time
 
 from . import (adaptive_serve, codesign_sweep, distortion, fastpath,
-               kernel_bench, mixed_precision_sweep, rd_bounds,
+               fleet, kernel_bench, mixed_precision_sweep, rd_bounds,
                serve_throughput, testbed_profiles, weight_stats)
 from .common import banner
 
@@ -49,6 +54,8 @@ SECTIONS = {
                  "dynamic trace", adaptive_serve.run),
     "fastpath": ("Fast path  eager vs compiled serving wall clock",
                  fastpath.run),
+    "fleet": ("Fleet  joint vs equal-split shared-server allocation",
+              fleet.run),
 }
 
 

@@ -13,6 +13,8 @@ from .quantization import (QuantConfig, QuantPlan, QuantizedTensor,  # noqa: F40
                            quantize_tree, quantize_tree_stacked,
                            fake_quantize_tree, qat_quantize, max_quant_error,
                            pack_int4, unpack_int4, as_plan, wire_bytes)
+from .fleet import (FleetAgent, FleetSolution, min_share_for,  # noqa: F401
+                    shared_params, solve_equal_split, solve_fleet)
 from .mixed_precision import (LayerStats, MixedSolution,  # noqa: F401
                               decoder_layer_stats, allocate_bits,
                               best_uniform_bits, max_mean_bits,

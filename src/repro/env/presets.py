@@ -34,7 +34,11 @@ def wifi_markov(*, seed: int = 0, horizon_s: float = 60.0,
                 dt_s: float = 0.5,
                 rates_bps: Sequence[float] = _WIFI_RATES,
                 transition=_WIFI_TRANSITION) -> Environment:
-    """Markov-chain Wi-Fi uplink; computation constants untouched."""
+    """Markov-chain Wi-Fi uplink; computation constants untouched.
+
+    Defaults model a home link hopping between good/fair/bad states
+    (~20/4/0.8 Mbit/s) with sticky transitions; the adaptive engine
+    sees it as a time-varying ``SystemParams.link_bps``."""
     return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
                        link=MarkovLink(rates_bps=rates_bps,
                                        transition=transition))
@@ -44,7 +48,13 @@ def rayleigh_fading(*, seed: int = 0, horizon_s: float = 60.0,
                     dt_s: float = 0.5, bandwidth_hz: float = 5.0e6,
                     mean_snr: float = 8.0,
                     coherence_s: float = 2.0) -> Environment:
-    """Rayleigh block-fading uplink rate trace."""
+    """Rayleigh block-fading uplink rate trace.
+
+    Continuous-valued rates (Shannon over an Exp(1) power gain per
+    ``coherence_s`` block) — the stress case for the adaptive engine's
+    state *quantizer*: raw rates almost never repeat, so only the
+    log-bucketed keys keep the codesign cache and drift detector
+    effective (DESIGN.md §9)."""
     return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
                        link=RayleighLink(bandwidth_hz=bandwidth_hz,
                                          mean_snr=mean_snr,
@@ -56,7 +66,12 @@ def profile_replay(schedule: Sequence[str] = ("high", "low", "medium"),
                    dt_s: float = 0.5,
                    profiles: Optional[dict] = None) -> Environment:
     """Replay a coarse-frequency-profile schedule as the f_max cap —
-    the Table I testbed profiles as a time-varying governor."""
+    the Table I testbed profiles as a time-varying governor.
+
+    ``schedule`` names entries of ``profiles`` (default
+    :data:`PROFILE_FMAX`), each held for ``dwell_s``; the horizon is
+    exactly one pass over the schedule (the last profile then holds,
+    per ``TraceReplay`` clamping)."""
     fmap = PROFILE_FMAX if profiles is None else profiles
     caps = [fmap[name] for name in schedule]
     return Environment(seed=seed, horizon_s=dwell_s * len(schedule),
@@ -67,7 +82,11 @@ def profile_replay(schedule: Sequence[str] = ("high", "low", "medium"),
 def battery_drain(*, seed: int = 0, horizon_s: float = 60.0,
                   dt_s: float = 0.5, capacity_j: float = 900.0,
                   drain_w: float = 12.0, soc0: float = 0.6) -> Environment:
-    """Battery running down over the horizon; E0 derates below reserve."""
+    """Battery running down over the horizon; E0 derates below reserve.
+
+    Defaults start at 60% charge with a drain that crosses the
+    environment's reserve SoC mid-horizon, so per-request energy
+    budgets visibly tighten (``EnvState.energy_scale``) during a run."""
     return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
                        battery=Battery(capacity_j=capacity_j,
                                        drain_w=drain_w, soc0=soc0))
@@ -76,7 +95,11 @@ def battery_drain(*, seed: int = 0, horizon_s: float = 60.0,
 def edge_day(*, seed: int = 0, horizon_s: float = 90.0,
              dt_s: float = 0.5) -> Environment:
     """The kitchen-sink scenario: Markov Wi-Fi + thermal throttling under
-    sustained load + battery drain — all three knobs moving at once."""
+    sustained load + battery drain — all three knobs moving at once.
+
+    The thermal time constant is horizon/4 so the throttle actually
+    bites within the run, and the battery crosses its reserve — the
+    default demo trace of ``launch/serve.py --env-trace edge-day``."""
     return Environment(
         seed=seed, horizon_s=horizon_s, dt_s=dt_s,
         link=MarkovLink(rates_bps=_WIFI_RATES, transition=_WIFI_TRANSITION),
@@ -88,5 +111,7 @@ def edge_day(*, seed: int = 0, horizon_s: float = 90.0,
 def constant(*, horizon_s: float = 60.0, dt_s: float = 0.5,
              seed: int = 0) -> Environment:
     """The identity environment: no process attached, every state equal —
-    the adaptive engine on it is bitwise identical to the static one."""
+    the adaptive engine on it is bitwise identical to the static one
+    (the §9 identity contract; ``seed`` is accepted for interface
+    symmetry but nothing in the trace is random)."""
     return Environment(seed=seed, horizon_s=horizon_s, dt_s=dt_s)

@@ -72,6 +72,10 @@ class MarkovLink:
 
     def realize(self, rng: np.random.Generator, n_steps: int,
                 dt_s: float) -> np.ndarray:
+        """Per-step uplink rates (bytes/s): start in ``init_state``,
+        draw one Markov transition per step from ``rng``.  ``dt_s`` is
+        unused — the chain is specified per step, so dwell times scale
+        with the environment's resolution by construction."""
         rates = np.asarray(self.rates_bps, np.float64)
         p = np.asarray(self.transition, np.float64)
         out = np.empty(n_steps, np.float64)
@@ -106,6 +110,10 @@ class RayleighLink:
 
     def realize(self, rng: np.random.Generator, n_steps: int,
                 dt_s: float) -> np.ndarray:
+        """Per-step Shannon rates (bytes/s): one i.i.d. Exp(1) power
+        gain per coherence block, each step indexing into the block
+        covering its timestamp (so the trace is piecewise constant on
+        ``coherence_s`` and independent of ``dt_s`` resolution)."""
         n_blocks = max(1, int(math.ceil(n_steps * dt_s / self.coherence_s)))
         gains = rng.exponential(1.0, size=n_blocks)
         rates = self.bandwidth_hz * np.log2(1.0 + self.mean_snr * gains) / 8.0
@@ -136,6 +144,9 @@ class TraceReplay:
 
     def realize(self, rng: Optional[np.random.Generator], n_steps: int,
                 dt_s: float) -> np.ndarray:
+        """Per-step values: step k reads ``values[k·dt/dwell]``, clamped
+        to the last entry; ``rng`` is accepted but unused (the replay is
+        deterministic by construction)."""
         vals = np.asarray(self.values, np.float64)
         idx = np.minimum((np.arange(n_steps) * dt_s
                           / self.dwell_s).astype(np.int64), len(vals) - 1)
@@ -167,6 +178,9 @@ class Battery:
 
     def realize(self, rng: Optional[np.random.Generator], n_steps: int,
                 dt_s: float) -> np.ndarray:
+        """Per-step state of charge in [0, 1]: linear drain from
+        ``soc0`` at ``drain_w`` watts against ``capacity_j``, clipped at
+        empty; ``rng`` is accepted but unused (deterministic)."""
         t = np.arange(n_steps) * dt_s
         return np.clip(self.soc0 - self.drain_w * t / self.capacity_j,
                        0.0, 1.0)
@@ -201,6 +215,9 @@ class ThermalThrottle:
             raise ValueError("tau_s must be positive")
 
     def _duty_trace(self, n_steps: int) -> np.ndarray:
+        """Per-step load fraction in [0, 1]: a scalar ``duty`` is
+        broadcast, a sequence is clamp-extended with its last value
+        (the same convention as :class:`TraceReplay`)."""
         if np.isscalar(self.duty):
             d = np.full(n_steps, float(self.duty))
         else:
@@ -211,6 +228,10 @@ class ThermalThrottle:
         return np.clip(d, 0.0, 1.0)
 
     def temperature(self, n_steps: int, dt_s: float) -> np.ndarray:
+        """Die-temperature trace (°C): first-order relaxation toward
+        the duty-scaled target with step factor 1 − exp(−dt/τ), started
+        from ambient.  Exposed separately so ``Environment`` can record
+        the temperature alongside the frequency cap it induces."""
         duty = self._duty_trace(n_steps)
         temp = np.empty(n_steps, np.float64)
         t = self.t_ambient_c
@@ -223,10 +244,14 @@ class ThermalThrottle:
         return temp
 
     def cap_for(self, temp_c: np.ndarray) -> np.ndarray:
+        """The governor map: f_full below ``t_throttle_c``, f_floor
+        above ``t_max_c``, linear derate in between."""
         frac = np.clip((np.asarray(temp_c, np.float64) - self.t_throttle_c)
                        / (self.t_max_c - self.t_throttle_c), 0.0, 1.0)
         return self.f_full_hz - frac * (self.f_full_hz - self.f_floor_hz)
 
     def realize(self, rng: Optional[np.random.Generator], n_steps: int,
                 dt_s: float) -> np.ndarray:
+        """Per-step f_max caps (Hz): the governor map applied to the RC
+        temperature trace; ``rng`` is accepted but unused."""
         return self.cap_for(self.temperature(n_steps, dt_s))

@@ -1,6 +1,14 @@
 """Co-inference serving driver:
 ``python -m repro.launch.serve --arch qwen2-0.5b --smoke``.
 
+``--fleet <spec.json>`` serves a multi-agent fleet from one shared edge
+server (DESIGN.md §11): the spec lists heterogeneous agents (arch, QoS
+budgets, weights, optional per-agent environment traces), the fleet
+allocator splits the server frequency across them (water-filling joint
+allocation or the equal-split baseline), and every agent serves through
+its own member engine over shared codesign/compile caches — see
+``examples/fleet_spec.json`` for the format.
+
 Demonstrates the paper's full loop on real (reduced) models, through the
 batched serving engine (DESIGN.md §7) by default: per-QoS-class joint
 (b̂, f, f̃) co-design solved once per class via the codesign cache, a
@@ -22,6 +30,10 @@ static / adaptive / oracle controller.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +47,8 @@ from ..data import MarkovLMConfig, MarkovLMDataset
 from ..env import presets as env_presets
 from ..models.registry import build_model
 from ..runtime import (AdaptiveCoInferenceEngine, BatchedCoInferenceEngine,
-                       CodesignCache, CoInferenceEngine, QosClass)
+                       CodesignCache, CoInferenceEngine, FleetAgentSpec,
+                       FleetCoInferenceEngine, QosClass)
 
 ENV_TRACES = {
     "wifi-markov": env_presets.wifi_markov,
@@ -78,11 +91,28 @@ def main(argv=None):
     ap.add_argument("--adaptive-policy", default="adaptive",
                     choices=["static", "adaptive", "oracle"],
                     help="controller for --env-trace serving")
+    ap.add_argument("--fleet", default=None, metavar="SPEC.json",
+                    help="serve a multi-agent fleet from one shared edge "
+                         "server (DESIGN.md §11); the JSON spec lists the "
+                         "agents — see examples/fleet_spec.json")
+    ap.add_argument("--allocator", default=None,
+                    choices=["joint", "equal"],
+                    help="fleet share allocator: water-filling joint "
+                         "codesign or the equal-split baseline "
+                         "(default: the spec's choice, else joint)")
     args = ap.parse_args(argv)
+
+    if args.fleet is not None:
+        return serve_fleet(args)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    err = unsupported_model_reason(model, args.arch, args.compiled)
+    if err is not None:
+        print(f"error: {err}", file=sys.stderr)
+        return 2
 
     tokens = args.batch * args.seq
     per_layer = cfg.active_param_count() / max(cfg.n_layers, 1)
@@ -96,6 +126,31 @@ def main(argv=None):
     if args.engine == "batched":
         return serve_batched(cfg, model, params, sysp, args)
     return serve_sequential(cfg, model, params, sysp, args)
+
+
+def unsupported_model_reason(model, arch: str, compiled: bool):
+    """One-line reason this model cannot serve the invocation, or None.
+
+    Mirrors the engine constructors' protocol checks so the driver can
+    fail with a clear message instead of a constructor traceback:
+    co-inference needs the DecoderLM ``run_layers`` protocol at all, and
+    ``--compiled`` additionally needs the ``embed`` +
+    ``run_layers_window`` hooks the fast path traces (DESIGN.md §10).
+    One function serves both the flag path and the fleet-spec path, so
+    the hook requirements live in exactly one place.
+    """
+    if compiled and not (hasattr(model, "embed")
+                         and hasattr(model, "run_layers_window")):
+        return (f"--compiled does not support arch {arch}: "
+                f"{type(model).__name__} lacks the embed/"
+                "run_layers_window hooks the compiled fast path traces "
+                "(DESIGN.md §10). Drop --compiled or pick a dense "
+                "DecoderLM-family arch (e.g. qwen2-0.5b, stablelm-3b).")
+    if not hasattr(model, "run_layers"):
+        return (f"arch {arch} is not servable: {type(model).__name__} "
+                "lacks run_layers; co-inference split execution needs "
+                "the DecoderLM protocol")
+    return None
 
 
 def serve_sequential(cfg, model, params, sysp, args):
@@ -280,6 +335,139 @@ def serve_batched(cfg, model, params, sysp, args):
         print(f"compile cache: {rep.compiled_variants} variants, "
               f"{rep.compile_hits} hits / {rep.compile_misses} misses "
               f"(every batch after warmup is a hit)")
+    return 0
+
+
+def serve_fleet(args):
+    """Serve a multi-agent fleet from a JSON spec (DESIGN.md §11).
+
+    The spec's ``agents`` list gives one entry per fleet member: ``name``
+    and ``arch`` (required), ``t0``/``e0`` budgets, optional ``weight``,
+    ``b_emb``, ``sysp`` field overrides (any ``SystemParams`` field),
+    ``env_trace``/``env_seed``/``policy`` for a per-agent dynamic
+    environment, and ``requests``/``seq`` per-agent traffic overrides.
+    Top-level keys ``allocator``, ``max_batch``, ``path``, ``compiled``,
+    ``mixed_precision``, ``requests_per_agent``, and ``seq`` set fleet-
+    wide defaults; ``--allocator`` wins over the spec's when passed.
+    """
+    spec_path = pathlib.Path(args.fleet)
+    try:
+        spec = json.loads(spec_path.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read fleet spec {spec_path}: {e}",
+              file=sys.stderr)
+        return 2
+    if not isinstance(spec, dict) or not spec.get("agents"):
+        print(f"error: fleet spec {spec_path} must be a JSON object with "
+              "a non-empty 'agents' list", file=sys.stderr)
+        return 2
+
+    allocator = args.allocator if args.allocator is not None \
+        else spec.get("allocator", "joint")
+    max_batch = int(spec.get("max_batch", args.max_batch))
+    path = spec.get("path", args.path)
+    compiled = bool(spec.get("compiled", args.compiled))
+    mixed = bool(spec.get("mixed_precision", args.mixed_precision))
+    n_default = int(spec.get("requests_per_agent", args.requests))
+    seq_default = int(spec.get("seq", args.seq))
+
+    models = {}
+    specs, traffic = [], {}
+    for a in spec["agents"]:
+        # every per-agent failure mode — missing keys, unknown arch or
+        # env trace, bad sysp field names, non-numeric values — reports
+        # which agent entry is broken, as a one-line error
+        label = a.get("name", f"#{len(specs)}") \
+            if isinstance(a, dict) else f"#{len(specs)}"
+        try:
+            arch = a["arch"]
+            if arch not in models:
+                cfg = get_smoke(arch) if args.smoke else get_config(arch)
+                model = build_model(cfg)
+                models[arch] = (model,
+                                model.init(jax.random.PRNGKey(len(models))))
+            model, params = models[arch]
+            err = unsupported_model_reason(model, arch, compiled)
+            if err is not None:
+                raise ValueError(err)
+            sysp = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+            if a.get("sysp"):
+                sysp = dataclasses.replace(sysp, **a["sysp"])
+            env = None
+            if a.get("env_trace"):
+                if a["env_trace"] not in ENV_TRACES:
+                    raise ValueError(
+                        f"unknown env_trace {a['env_trace']!r}; have "
+                        f"{sorted(ENV_TRACES)}")
+                env = ENV_TRACES[a["env_trace"]](
+                    seed=int(a.get("env_seed", args.env_seed)))
+            specs.append(FleetAgentSpec(
+                name=a["name"], model=model, params=params, sysp=sysp,
+                qos=QosClass(a["name"], t0=float(a.get("t0", args.t0)),
+                             e0=float(a.get("e0", args.e0))),
+                weight=float(a.get("weight", 1.0)),
+                b_emb=int(a.get("b_emb", 8)),
+                environment=env, policy=a.get("policy", "adaptive")))
+            traffic[a["name"]] = (int(a.get("requests", n_default)),
+                                  int(a.get("seq", seq_default)))
+        except (KeyError, TypeError, ValueError, AttributeError) as e:
+            print(f"error: fleet agent {label!r}: {e}", file=sys.stderr)
+            return 2
+
+    try:
+        fleet = FleetCoInferenceEngine(specs, allocator=allocator,
+                                       max_batch=max_batch, path=path,
+                                       compiled=compiled,
+                                       mixed_precision=mixed)
+    except (TypeError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if compiled:
+        n = fleet.warmup(max(s for _, s in traffic.values()))
+        print(f"warmup: {n} compiled forward variants across the fleet")
+
+    print(f"fleet: {len(specs)} agents, allocator={allocator} "
+          f"max_batch={max_batch} path={path}")
+    for s, share in zip(specs, fleet.allocation.shares):
+        sol = fleet.solution_for(s.name)
+        bdesc = "/".join(map(str, sol.bits)) if mixed else str(sol.b_hat)
+        envd = f" env={type(s.environment).__name__}" \
+            if s.environment is not None else ""
+        print(f"  agent {s.name:12s} share={share:.3f} "
+              f"(T0={s.qos.t0:.2f}s, E0={s.qos.e0:.2f}J, "
+              f"w={s.weight:g}): b_hat={bdesc} f={sol.f / 1e9:.2f}GHz "
+              f"f~={sol.f_server / 1e9:.2f}GHz "
+              f"bound={sol.objective:.3e}{envd}")
+
+    rng = np.random.default_rng(0)
+    for s in specs:
+        n_req, seq = traffic[s.name]
+        cfg = s.model.cfg
+        for i in range(n_req):
+            toks = rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(max(seq // 2, 1),
+                                                      seq + 1)))
+            fleet.submit(s.name, toks)
+    fleet.drain()
+
+    rep = fleet.report()
+    print(f"\nserved {rep.requests_served} requests in "
+          f"{rep.batches_served} batches across the fleet:")
+    for pa in rep.per_agent:
+        print(f"  agent {pa.name:12s} n={pa.requests_served} "
+              f"batches={pa.batches_served} "
+              f"occupancy={pa.mean_occupancy:.2f} "
+              f"clock={pa.clock_s * 1e3:8.2f}ms E={pa.energy_j:.3f}J "
+              f"violations={pa.deadline_violations}")
+    print(f"fleet report: aggregate bound={rep.aggregate_bound:.4e} "
+          f"makespan={rep.makespan_s * 1e3:.2f}ms "
+          f"throughput={rep.throughput_rps:.0f} req/s (modeled) "
+          f"energy={rep.total_energy_j:.3f}J")
+    print(f"shared codesign cache: {rep.codesign_misses} solves, "
+          f"{rep.codesign_hits} hits across {rep.n_agents} agents")
+    if compiled:
+        print(f"shared compile cache: {rep.compiled_variants} variants, "
+              f"{rep.compile_hits} hits / {rep.compile_misses} misses")
     return 0
 
 

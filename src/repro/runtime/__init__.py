@@ -1,13 +1,15 @@
 """Runtime layer: training loop, co-inference serving (static + online
-adaptive), fault tolerance."""
+adaptive + multi-agent fleet), fault tolerance."""
 
 from .adaptive import (AdaptiveCoInferenceEngine, AdaptiveReport,  # noqa: F401
                        ReplanEvent)
 from .fastpath import CompiledForwardCache  # noqa: F401
 from .fault_tolerance import (HostFailure, HostSet, StragglerMonitor,  # noqa: F401
                               Supervisor, SupervisorReport)
+from .fleet_engine import (AgentServeStats, FleetAgentSpec,  # noqa: F401
+                           FleetCoInferenceEngine, FleetReport)
 from .serve_engine import (BatchedCoInferenceEngine, BatchStats,  # noqa: F401
                            CodesignCache, CoInferenceEngine, EngineReport,
                            QosClass, RequestStats, ServeRequest,
-                           ServeResponse, ServeStats)
+                           ServeResponse, ServeStats, fit_lambda)
 from .train_loop import TrainConfig, Trainer  # noqa: F401

@@ -119,6 +119,11 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
     # operating-point resolution against an environment state
     # ------------------------------------------------------------------
     def _resolve_class(self, c: QosClass):
+        """Constructor-time resolution of a class's operating point:
+        solved under the environment's state at the (zero) clock instead
+        of the static params, and degrading instead of returning None —
+        so an engine whose *initial* window is infeasible still
+        constructs and serves best-effort."""
         if self.environment is None:
             return super()._resolve_class(c)
         sol, key = self._solve_under(c, self.environment.state_at(
@@ -198,10 +203,17 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
     # ------------------------------------------------------------------
     @staticmethod
     def _mean_bits(sol) -> float:
+        """Mean agent bits of either solution type (plan mean when
+        mixed, b̂ when uniform) — the scalar the replan log compares."""
         return float(getattr(sol, "mean_bits", None) or sol.b_hat)
 
     def _replan(self, name: str, t: float, state: EnvState,
                 reason: str) -> None:
+        """Re-solve class ``name`` against ``state`` and install the new
+        plan: updates the canonical solution (and, in mixed mode, the
+        class's ``QuantPlan``), resets both debounce streaks, stamps the
+        replan time, and records a :class:`ReplanEvent` for the report.
+        """
         c = self.classes[name]
         old = self._base_solutions[name]
         # qos-miss: the plan's quantized state still matches the world's,
@@ -224,6 +236,12 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
             degraded=not getattr(sol, "feasible", True)))
 
     def _maybe_replan(self, name: str, state: EnvState, t: float) -> None:
+        """The per-batch controller decision: never for ``static``, on
+        any quantized-key change for ``oracle``, and for ``adaptive``
+        only after ``hysteresis_steps`` consecutive discrepant
+        observations (env drift or realized QoS misses) and at most once
+        per ``min_replan_interval_s`` — the debouncing that bounds
+        re-quantization churn (DESIGN.md §9)."""
         if self.policy == "static":
             return
         _, key = self._observed(state)
@@ -252,6 +270,13 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
                      reason="env-drift" if drift else "qos-miss")
 
     def step(self) -> List[ServeResponse]:
+        """Serve one batch under the environment: observe the state at
+        the batch's earliest possible start, maybe replan (see
+        :meth:`_maybe_replan`), bill the batch under the *true* current
+        state with the plan's frequencies clipped to the live caps, then
+        feed realized deadline/energy outcomes back into the miss
+        streaks.  Reduces to ``BatchedCoInferenceEngine.step`` with no
+        environment attached."""
         if self.environment is None or not self._queue:
             return super().step()
         # the decision instant: when this batch could start at the earliest
@@ -297,6 +322,11 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
         return self._base_solutions[qos_name]
 
     def adaptive_report(self) -> AdaptiveReport:
+        """Controller-level accounting for the whole run — replans,
+        plan switches, degraded batches, realized QoS violations,
+        weight-cache growth — complementing the serving-level
+        ``report()`` (``benchmarks/adaptive_serve.py`` scores policies
+        on exactly these numbers)."""
         switches = sum(1 for e in self.replan_events
                        if e.b_before != e.b_after)
         wc = self.engine._weight_cache

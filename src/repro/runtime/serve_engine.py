@@ -178,6 +178,29 @@ class EngineReport:
 
 
 # ---------------------------------------------------------------------------
+# weight statistics
+# ---------------------------------------------------------------------------
+
+def fit_lambda(params, split: int) -> float:
+    """MLE λ over the agent-partition weight magnitudes (paper eq. (3)).
+
+    Scans the stacked-layers leaves of ``params["layers"]`` (ndim >= 3,
+    floating) and fits the exponential rate over layers ``[0, split)``.
+    Module-level so callers that have not built an engine yet — the
+    fleet allocator sizes every agent's statistic before any engine
+    exists (DESIGN.md §11) — share the engines' exact definition.
+    """
+    total, count = 0.0, 0
+    for leaf in jax.tree_util.tree_leaves(params["layers"]):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 3 and \
+                jnp.issubdtype(leaf.dtype, jnp.floating):
+            sl = leaf[: min(split, leaf.shape[0])]
+            total += float(jnp.sum(jnp.abs(sl)))
+            count += int(np.prod(sl.shape))
+    return count / max(total, 1e-30) if count else 100.0
+
+
+# ---------------------------------------------------------------------------
 # codesign memoization
 # ---------------------------------------------------------------------------
 
@@ -327,18 +350,9 @@ class CoInferenceEngine:
 
     # ------------------------------------------------------------------
     def _fit_lambda(self) -> float:
-        """MLE lambda over the agent-partition weight magnitudes."""
-        total, count = 0.0, 0
-        for leaf in jax.tree_util.tree_leaves(self.params["layers"]):
-            if hasattr(leaf, "ndim") and leaf.ndim >= 3 and \
-                    jnp.issubdtype(leaf.dtype, jnp.floating):
-                sl = leaf[: self._stack_split(leaf)]
-                total += float(jnp.sum(jnp.abs(sl)))
-                count += int(np.prod(sl.shape))
-        return count / max(total, 1e-30) if count else 100.0
-
-    def _stack_split(self, leaf) -> int:
-        return min(self.split, leaf.shape[0])
+        """MLE lambda over the agent-partition weight magnitudes
+        (:func:`fit_lambda` over this engine's params and split)."""
+        return fit_lambda(self.params, self.split)
 
     def flop_split(self, tokens: int):
         """(agent_flops, server_flops) for one forward over ``tokens``."""
@@ -981,6 +995,16 @@ class BatchedCoInferenceEngine:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def oldest_pending_arrival(self) -> Optional[float]:
+        """Earliest arrival time among queued requests (None when the
+        queue is empty).  Not simply the queue head: ``submit`` accepts
+        arbitrary ``arrival_s``, so out-of-order submissions can put a
+        later arrival in front.  The fleet engine's cross-agent FIFO
+        ranks agents by this (DESIGN.md §11)."""
+        if not self._queue:
+            return None
+        return min(r.arrival_s for r in self._queue)
 
     @property
     def clock_s(self) -> float:

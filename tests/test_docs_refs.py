@@ -1,5 +1,6 @@
-"""Every ``DESIGN.md §N`` citation in src/ must resolve (the same check CI
-runs via tools/check_design_refs.py)."""
+"""Every ``DESIGN.md §N`` citation in src/ and every file citation in
+the documentation set (DESIGN.md, README.md, docs/ARCHITECTURE.md) must
+resolve (the same check CI runs via tools/check_design_refs.py)."""
 
 import pathlib
 import subprocess
@@ -8,24 +9,65 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
-def test_design_refs_resolve():
-    out = subprocess.run(
+def _run(root) -> subprocess.CompletedProcess:
+    return subprocess.run(
         [sys.executable, str(ROOT / "tools" / "check_design_refs.py"),
-         "--root", str(ROOT)],
+         "--root", str(root)],
         capture_output=True, text=True, timeout=60)
+
+
+def test_design_refs_resolve():
+    out = _run(ROOT)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "OK:" in out.stdout
 
 
+def test_architecture_doc_exists_and_is_linked():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert "docs/ARCHITECTURE.md" in (ROOT / "README.md").read_text(
+        encoding="utf-8")
+
+
 def test_design_refs_catch_dangling(tmp_path):
-    """The checker actually fails on a dangling reference."""
+    """The checker actually fails on a dangling section reference."""
     (tmp_path / "DESIGN.md").write_text("## §1 Only section\n")
     src = tmp_path / "src"
     src.mkdir()
     (src / "mod.py").write_text('"""See DESIGN.md §9."""\n')
-    out = subprocess.run(
-        [sys.executable, str(ROOT / "tools" / "check_design_refs.py"),
-         "--root", str(tmp_path)],
-        capture_output=True, text=True, timeout=60)
+    out = _run(tmp_path)
     assert out.returncode == 1
     assert "§9" in out.stdout
+
+
+def test_design_refs_catch_dangling_in_docs(tmp_path):
+    """§N references inside the docs themselves are validated too."""
+    (tmp_path / "DESIGN.md").write_text("## §1 Only section\n")
+    (tmp_path / "src").mkdir()
+    (tmp_path / "README.md").write_text("See DESIGN.md §7 for details.\n")
+    out = _run(tmp_path)
+    assert out.returncode == 1
+    assert "§7" in out.stdout
+
+
+def test_file_citations_catch_dangling(tmp_path):
+    """A backtick path citation to a missing file fails the check."""
+    (tmp_path / "DESIGN.md").write_text(
+        "## §1 Only section\nSee `core/definitely_missing.py`.\n")
+    (tmp_path / "src").mkdir()
+    out = _run(tmp_path)
+    assert out.returncode == 1
+    assert "definitely_missing.py" in out.stdout
+
+
+def test_file_citations_resolve_relative_to_src_repro(tmp_path):
+    """`core/x.py` resolves via src/repro/, repo-root paths directly,
+    and slash-less names (placeholders like `spec.json`) are skipped."""
+    (tmp_path / "DESIGN.md").write_text(
+        "## §1 Only section\n"
+        "Cites `core/x.py`, `tools/y.py`, and a `spec.json` placeholder.\n")
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core" / "x.py").write_text("")
+    (tmp_path / "tools").mkdir()
+    (tmp_path / "tools" / "y.py").write_text("")
+    out = _run(tmp_path)
+    assert out.returncode == 0, out.stdout

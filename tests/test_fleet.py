@@ -1,0 +1,288 @@
+"""Fleet co-design + fleet serving engine (DESIGN.md §11): share
+thresholds, water-filling vs equal split, shared caches, and bitwise
+identity of the single-agent fleet."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import fleet as fl
+from repro.core import codesign as cd
+from repro.core.cost_model import SystemParams
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, CodesignCache,
+                           CompiledForwardCache, FleetAgentSpec,
+                           FleetCoInferenceEngine, QosClass)
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+
+
+def _agent(name, t0, e0, lam=10.0, weight=1.0, sysp=SYSP):
+    return fl.FleetAgent(name=name, lam=lam, sysp=sysp, t0=t0, e0=e0,
+                         weight=weight, b_emb=8)
+
+# one tight + two slack agents: the heterogeneous regime where the
+# joint split beats 1/N (same scenario family as benchmarks/fleet.py)
+TIGHT = _agent("tight", t0=0.8, e0=8.0)
+LOOSE = [_agent("loose-a", t0=3.0, e0=4.0, lam=12.0),
+         _agent("loose-b", t0=3.0, e0=4.0, lam=8.0)]
+
+
+# ---------------------------------------------------------------------------
+# core allocator
+# ---------------------------------------------------------------------------
+
+def test_shared_params_identity_at_full_share():
+    assert fl.shared_params(SYSP, 1.0) == SYSP
+    p = fl.shared_params(SYSP, 0.5)
+    assert p.f_server_max == pytest.approx(SYSP.f_server_max * 0.5)
+    assert p.f_max == SYSP.f_max  # the agent side is untouched
+
+
+def test_shared_params_link_share():
+    base = SystemParams(n_flop_agent=1e9, n_flop_server=1e9,
+                        link_bps=2.0e6, emb_bytes_full=1e5)
+    p = fl.shared_params(base, 0.25, share_link=True)
+    assert p.link_bps == pytest.approx(5.0e5)
+    assert fl.shared_params(base, 0.25).link_bps == base.link_bps
+
+
+def test_min_share_monotone_in_bits():
+    prev = 0.0
+    for b in range(1, 17):
+        s = fl.min_share_for(TIGHT, b)
+        if s is None:
+            break
+        # a finer bit-width never needs less of the server
+        assert s >= prev - 1e-9
+        # the threshold share really is feasible for b
+        p = fl.shared_params(TIGHT.sysp, s)
+        assert cd.feasible_bitwidth(b, p, TIGHT.t0, TIGHT.e0,
+                                    b_emb=TIGHT.b_emb)[0]
+        prev = s
+    assert b > 1  # at least some bit-widths are feasible
+
+
+def test_joint_beats_equal_split_on_heterogeneous_fleet():
+    agents = [TIGHT] + LOOSE
+    joint = fl.solve_fleet(agents)
+    equal = fl.solve_equal_split(agents)
+    assert joint is not None and equal is not None
+    assert abs(sum(joint.shares) - 1.0) < 1e-6
+    assert joint.aggregate_bound < equal.aggregate_bound
+    # the tight agent got share the slack agents never needed
+    assert joint.shares[0] > equal.shares[0]
+    assert joint.solutions[0].b_hat > equal.solutions[0].b_hat
+    # slack agents keep their (maximal) bit-width on a smaller slice
+    for j, e in zip(joint.solutions[1:], equal.solutions[1:]):
+        assert j.b_hat == e.b_hat
+
+
+def test_single_agent_fleet_matches_pair_solve():
+    sol = fl.solve_fleet([TIGHT])
+    assert sol is not None and sol.shares == (1.0,)
+    direct = cd.solve_sca(TIGHT.lam, SYSP, TIGHT.t0, TIGHT.e0,
+                          b_max=16, b_emb=TIGHT.b_emb)
+    assert sol.solutions[0] == direct
+
+
+def test_fleet_infeasible_returns_none():
+    impossible = [_agent(f"a{i}", t0=0.16, e0=8.0) for i in range(8)]
+    # each agent alone needs > 1/8 of the server just for the deadline
+    assert fl.solve_fleet(impossible) is None
+    assert fl.solve_equal_split(impossible) is None
+
+
+def test_weight_steers_the_split():
+    heavy = [_agent("tight-heavy", t0=0.8, e0=8.0, weight=100.0),
+             _agent("tight-light", t0=0.85, e0=8.0, weight=1.0)]
+    sol = fl.solve_fleet(heavy)
+    assert sol is not None
+    # the weighted agent's bound term dominates, so it is filled first
+    # and ends at least as fine as its near-twin
+    assert sol.solutions[0].b_hat >= sol.solutions[1].b_hat
+
+
+def test_agent_validation():
+    with pytest.raises(ValueError):
+        fl.FleetAgent(name="x", lam=-1.0, sysp=SYSP, t0=1.0, e0=1.0)
+    with pytest.raises(ValueError):
+        fl.solve_fleet([TIGHT, TIGHT])  # duplicate names
+    with pytest.raises(ValueError):
+        fl.solve_fleet([])
+    with pytest.raises(ValueError):
+        fl.shared_params(SYSP, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fleet engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(1))
+
+
+def _specs(model, params, n=3):
+    qos = [QosClass("tight", t0=0.8, e0=8.0),
+           QosClass("loose-a", t0=3.0, e0=4.0),
+           QosClass("loose-b", t0=3.0, e0=4.0)]
+    return [FleetAgentSpec(name=q.name, model=model, params=params,
+                           sysp=SYSP, qos=q) for q in qos[:n]]
+
+
+def _submit_stream(fleet, specs, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    for s in specs:
+        for _ in range(n):
+            fleet.submit(s.name, rng.integers(
+                0, s.model.cfg.vocab_size, size=int(rng.integers(6, 17))))
+
+
+def test_fleet_engine_single_agent_bitwise_identical(smoke_model):
+    cfg, model, params = smoke_model
+    qos = QosClass("solo", t0=1.3, e0=1.5)
+    spec = FleetAgentSpec(name="solo", model=model, params=params,
+                          sysp=SYSP, qos=qos)
+    fleet = FleetCoInferenceEngine([spec], allocator="joint", max_batch=4)
+    solo = BatchedCoInferenceEngine(model, params, SYSP, classes=[qos],
+                                    max_batch=4)
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        toks = rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 17)))
+        fleet.submit("solo", toks)
+        solo.submit(toks, "solo")
+    ra, rb = fleet.drain()["solo"], solo.drain()
+    assert len(ra) == len(rb) == 5
+    for x, y in zip(ra, rb):
+        assert x.stats == y.stats
+        np.testing.assert_array_equal(np.asarray(x.logits),
+                                      np.asarray(y.logits))
+
+
+def test_fleet_engine_serves_and_reports(smoke_model):
+    cfg, model, params = smoke_model
+    specs = _specs(model, params)
+    fleet = FleetCoInferenceEngine(specs, allocator="joint", max_batch=2)
+    _submit_stream(fleet, specs, n=3)
+    out = fleet.drain()
+    assert sorted(out) == sorted(s.name for s in specs)
+    assert all(len(v) == 3 for v in out.values())
+    rep = fleet.report()
+    assert rep.requests_served == 9
+    assert rep.n_agents == 3
+    assert abs(sum(rep.shares) - 1.0) < 1e-6
+    assert rep.makespan_s == max(p.clock_s for p in rep.per_agent)
+    assert rep.aggregate_bound == pytest.approx(
+        sum(p.bound for p in rep.per_agent))
+    # joint split: the tight agent holds the largest share
+    assert rep.per_agent[0].share == max(rep.shares)
+
+
+def test_fleet_shared_codesign_cache_dedups_identical_agents(smoke_model):
+    cfg, model, params = smoke_model
+    qos_t = dict(t0=1.3, e0=1.5)
+    specs = [FleetAgentSpec(name=f"twin-{i}", model=model, params=params,
+                            sysp=SYSP, qos=QosClass(f"twin-{i}", **qos_t))
+             for i in range(2)]
+    cache = CodesignCache()
+    FleetCoInferenceEngine(specs, allocator="equal", max_batch=2,
+                           codesign_cache=cache)
+    # identical decision inputs (lam, scaled sysp, budgets, b_emb):
+    # the second member engine's solve must hit the first's entry
+    assert cache.misses == 1
+    assert cache.hits >= 1
+
+
+def test_fleet_shared_compile_cache_across_same_config_agents(smoke_model):
+    cfg, model, params = smoke_model
+    specs = _specs(model, params, n=2)
+    cc = CompiledForwardCache()
+    fleet = FleetCoInferenceEngine(specs, allocator="equal", max_batch=2,
+                                   compiled=True, compile_cache=cc)
+    n_first = fleet.engines[specs[0].name].warmup(16)
+    assert n_first >= 1
+    # the twin agent's plans over the same ModelConfig reuse the
+    # executables the first agent compiled wherever (plan, bucket) match
+    b0 = fleet.engines[specs[0].name].solution_for(specs[0].qos.name).b_hat
+    b1 = fleet.engines[specs[1].name].solution_for(specs[1].qos.name).b_hat
+    n_second = fleet.engines[specs[1].name].warmup(16)
+    if b0 == b1:
+        assert n_second == 0
+    else:
+        assert n_second <= n_first
+    _submit_stream(fleet, specs, n=2)
+    fleet.drain()
+    rep = fleet.report()
+    assert rep.compiled_variants == len(cc)
+    assert rep.compile_misses == n_first + n_second
+
+
+def test_fleet_fifo_ranks_agents_by_oldest_arrival(smoke_model):
+    """Cross-agent FIFO uses the oldest *arrival*, not the queue head:
+    out-of-order submissions must not hide an agent's oldest request."""
+    cfg, model, params = smoke_model
+    specs = _specs(model, params, n=2)
+    fleet = FleetCoInferenceEngine(specs, allocator="equal", max_batch=4)
+    rng = np.random.default_rng(5)
+    toks = lambda: rng.integers(0, cfg.vocab_size, size=8)  # noqa: E731
+    # agent 0's head is late (5.0) but it holds the oldest request (1.0)
+    fleet.submit(specs[0].name, toks(), arrival_s=5.0)
+    fleet.submit(specs[0].name, toks(), arrival_s=1.0)
+    fleet.submit(specs[1].name, toks(), arrival_s=2.0)
+    assert fleet.engines[specs[0].name].oldest_pending_arrival() == 1.0
+    name, responses = fleet.step()
+    assert name == specs[0].name
+    assert responses  # served that agent's batch first
+
+
+def test_fleet_mixed_precision_plans_per_slice():
+    """Mixed mode: the share split is decided on the uniform surrogate,
+    then every member engine realizes a per-layer QuantPlan under its
+    slice (DESIGN.md §11/§8)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke("qwen2-0.5b"), split_layer=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    specs = [FleetAgentSpec(name="tight", model=model, params=params,
+                            sysp=SYSP, qos=QosClass("tight", t0=0.8,
+                                                    e0=8.0)),
+             FleetAgentSpec(name="loose", model=model, params=params,
+                            sysp=SYSP, qos=QosClass("loose", t0=3.0,
+                                                    e0=4.0))]
+    fleet = FleetCoInferenceEngine(specs, allocator="joint", max_batch=2,
+                                   mixed_precision=True)
+    rng = np.random.default_rng(0)
+    for s in specs:
+        for _ in range(2):
+            fleet.submit(s.name, rng.integers(0, cfg.vocab_size, size=10))
+    out = fleet.drain()
+    assert all(len(v) == 2 for v in out.values())
+    rep = fleet.report()
+    tight, loose = rep.per_agent
+    assert tight.share > loose.share
+    assert len(tight.plan_bits) == len(loose.plan_bits) == 2
+    # the bigger slice buys the tight agent at-least-as-fine layers
+    assert min(loose.plan_bits) >= min(tight.plan_bits)
+    assert fleet.solution_for("tight").bits == tight.plan_bits
+
+
+def test_fleet_engine_validation(smoke_model):
+    cfg, model, params = smoke_model
+    specs = _specs(model, params, n=1)
+    with pytest.raises(ValueError):
+        FleetCoInferenceEngine([], allocator="joint")
+    with pytest.raises(ValueError):
+        FleetCoInferenceEngine(specs, allocator="best-effort")
+    with pytest.raises(ValueError):
+        FleetCoInferenceEngine(specs + specs)  # duplicate names
+    tight = FleetAgentSpec(name="no", model=model, params=params,
+                           sysp=SYSP, qos=QosClass("no", t0=1e-9, e0=1e-9))
+    with pytest.raises(ValueError, match="infeasible"):
+        FleetCoInferenceEngine([tight])
+    fleet = FleetCoInferenceEngine(specs)
+    with pytest.raises(KeyError):
+        fleet.submit("ghost", np.arange(4))

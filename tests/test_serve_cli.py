@@ -1,0 +1,109 @@
+"""The serving driver must fail with a one-line error — never a
+traceback — when flags are combined with an arch the requested path
+cannot serve (ISSUE 5 satellite), and the fleet spec path must validate
+its input the same way."""
+
+import json
+
+import pytest
+
+from repro.launch import serve
+
+
+def test_compiled_with_unsupported_arch_errors_cleanly(capsys):
+    # xlstm-350m is outside the dense DecoderLM family: --compiled has
+    # no embed/run_layers_window hooks to trace (DESIGN.md §10)
+    rc = serve.main(["--arch", "xlstm-350m", "--smoke", "--compiled"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "--compiled" in err and "xlstm-350m" in err
+    assert "Traceback" not in err
+
+
+def test_unsupported_arch_errors_cleanly_without_compiled(capsys):
+    # ... and the generic co-inference protocol mismatch is also a
+    # clean error, not a constructor traceback
+    rc = serve.main(["--arch", "xlstm-350m", "--smoke"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "run_layers" in err
+    assert "Traceback" not in err
+
+
+def test_unsupported_model_reason_accepts_decoder_family():
+    class _Decoder:
+        def embed(self):
+            pass
+
+        def run_layers(self):
+            pass
+
+        def run_layers_window(self):
+            pass
+
+    assert serve.unsupported_model_reason(_Decoder(), "x", True) is None
+    assert serve.unsupported_model_reason(_Decoder(), "x", False) is None
+    # no run_layers at all: unservable either way
+    assert "run_layers" in serve.unsupported_model_reason(
+        object(), "x", False)
+    # the compiled complaint is the more specific one and wins
+    assert "--compiled" in serve.unsupported_model_reason(
+        object(), "x", True)
+
+
+@pytest.mark.parametrize("payload", ["not json {", "{}",
+                                     '{"agents": []}'])
+def test_fleet_spec_validation_errors_cleanly(tmp_path, payload, capsys):
+    spec = tmp_path / "fleet.json"
+    spec.write_text(payload)
+    rc = serve.main(["--smoke", "--fleet", str(spec)])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "Traceback" not in err
+
+
+def test_fleet_spec_missing_file_errors_cleanly(tmp_path, capsys):
+    rc = serve.main(["--smoke", "--fleet", str(tmp_path / "nope.json")])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+
+
+@pytest.mark.parametrize("agent", [
+    {"arch": "qwen2-0.5b"},                       # missing name
+    {"name": "a"},                                # missing arch
+    {"name": "a", "arch": "no-such-arch"},        # unknown arch
+    {"name": "a", "arch": "qwen2-0.5b",
+     "env_trace": "no-such-trace"},               # unknown env trace
+    {"name": "a", "arch": "qwen2-0.5b",
+     "sysp": {"no_such_field": 1.0}},             # bad SystemParams field
+    {"name": "a", "arch": "qwen2-0.5b",
+     "t0": "fast"},                               # non-numeric budget
+])
+def test_fleet_spec_bad_agent_entries_error_cleanly(tmp_path, agent,
+                                                    capsys):
+    spec = tmp_path / "fleet.json"
+    spec.write_text(json.dumps({"agents": [agent]}))
+    rc = serve.main(["--smoke", "--fleet", str(spec)])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error: fleet agent")
+    assert "Traceback" not in err
+
+
+def test_fleet_spec_compiled_unsupported_arch_errors_cleanly(tmp_path,
+                                                             capsys):
+    spec = tmp_path / "fleet.json"
+    spec.write_text(json.dumps({
+        "compiled": True,
+        "agents": [{"name": "a", "arch": "xlstm-350m",
+                    "t0": 1.0, "e0": 1.0}],
+    }))
+    rc = serve.main(["--smoke", "--fleet", str(spec)])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "compiled" in err and "xlstm-350m" in err
+    assert "Traceback" not in err

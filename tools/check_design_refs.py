@@ -1,11 +1,21 @@
 #!/usr/bin/env python3
-"""Fail if any ``DESIGN.md §N`` reference in ``src/`` points at a section
-that does not exist in DESIGN.md.
+"""Docs reference linter.
+
+Checks, over the whole repo:
+
+1. every ``DESIGN.md §N`` reference — in ``src/`` source files AND in
+   the documentation set (DESIGN.md itself, README.md,
+   docs/ARCHITECTURE.md) — points at a section that exists in DESIGN.md
+   (headings of the form ``## §N <title>``);
+2. every backtick file citation in the documentation set (a
+   `path/with/slashes.ext` for ext in py/md/json/toml/yml) resolves to a
+   real file, tried relative to the repo root, ``src/``, and
+   ``src/repro/`` (so DESIGN.md can keep citing ``core/codesign.py``).
+   Citations without a ``/`` are skipped — they are module mentions or
+   placeholder names (``spec.json``), not paths.
 
 Usage:  python tools/check_design_refs.py [--root <repo-root>]
 
-Sections are headings of the form ``## §N <title>``.  References matched:
-``DESIGN.md §N`` (also ``DESIGN.md §N.M``, which resolves to section N).
 Exit code 0 when every reference resolves, 1 otherwise (each dangling
 reference is printed as file:line).
 """
@@ -19,6 +29,11 @@ import sys
 
 SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
 REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+# `benchmarks/fleet.py`, `docs/ARCHITECTURE.md`, `.github/workflows/ci.yml`
+FILE_RE = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+                     r"\.(?:py|md|json|toml|yml))`")
+
+DOC_FILES = ("DESIGN.md", "README.md", "docs/ARCHITECTURE.md")
 
 
 def design_sections(design_path: pathlib.Path) -> set:
@@ -29,10 +44,28 @@ def design_sections(design_path: pathlib.Path) -> set:
 def find_refs(src_root: pathlib.Path):
     """Yields (path, line_number, section) for every DESIGN.md §N mention."""
     for path in sorted(src_root.rglob("*.py")):
-        for i, line in enumerate(
-                path.read_text(encoding="utf-8").splitlines(), 1):
-            for m in REF_RE.finditer(line):
-                yield path, i, int(m.group(1))
+        yield from file_refs(path)
+
+
+def file_refs(path: pathlib.Path):
+    for i, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        for m in REF_RE.finditer(line):
+            yield path, i, int(m.group(1))
+
+
+def file_citations(path: pathlib.Path):
+    """Yields (path, line_number, cited_path) for every backtick file
+    citation with at least one '/' in the given document."""
+    for i, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        for m in FILE_RE.finditer(line):
+            yield path, i, m.group(1)
+
+
+def resolves(root: pathlib.Path, cited: str) -> bool:
+    return any((base / cited).is_file()
+               for base in (root, root / "src", root / "src" / "repro"))
 
 
 def main(argv=None) -> int:
@@ -52,20 +85,35 @@ def main(argv=None) -> int:
         print(f"FAIL: no '## §N' sections found in {design}")
         return 1
 
+    docs = [root / d for d in DOC_FILES if (root / d).is_file()]
+
     n_refs, dangling = 0, []
-    for path, line, sec in find_refs(root / "src"):
+    sources = list(find_refs(root / "src"))
+    for doc in docs:
+        sources.extend(file_refs(doc))
+    for path, line, sec in sources:
         n_refs += 1
         if sec not in sections:
-            dangling.append((path, line, sec))
+            dangling.append((path, line, f"DESIGN.md §{sec} does not "
+                             f"exist (have §{sorted(sections)})"))
 
-    for path, line, sec in dangling:
-        print(f"{path.relative_to(root)}:{line}: DESIGN.md §{sec} "
-              f"does not exist (have §{sorted(sections)})")
+    n_cites = 0
+    for doc in docs:
+        for path, line, cited in file_citations(doc):
+            n_cites += 1
+            if not resolves(root, cited):
+                dangling.append((path, line,
+                                 f"cited file {cited} does not exist"))
+
+    for path, line, msg in dangling:
+        print(f"{path.relative_to(root)}:{line}: {msg}")
     if dangling:
-        print(f"FAIL: {len(dangling)}/{n_refs} DESIGN.md references dangle")
+        print(f"FAIL: {len(dangling)} dangling references "
+              f"({n_refs} §-refs, {n_cites} file citations checked)")
         return 1
     print(f"OK: {n_refs} DESIGN.md references resolve into sections "
-          f"{sorted(sections)}")
+          f"{sorted(sections)}; {n_cites} file citations across "
+          f"{len(docs)} docs resolve")
     return 0
 
 
