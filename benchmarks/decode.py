@@ -1,0 +1,266 @@
+"""Continuous-batching decode over a quantized KV cache (DESIGN.md §12).
+
+Measures, on the ``qwen2_0_5b`` smoke config:
+
+  1. continuous vs FIFO-barrier admission through ``DecodeEngine`` on a
+     ragged high-rate request stream (staggered arrivals, per-request
+     generation budgets).  Both runs share the same compiled step
+     functions — admission is purely a scheduling policy — so the
+     modeled-throughput ratio is deterministic.  Acceptance: continuous
+     strictly beats the barrier on generated tokens/s.
+  2. bitwise greedy-decode parity: every continuous-batched response
+     must equal, token for token, the non-batched sequential reference
+     (``greedy_decode_reference``) decoding the same prompt alone under
+     the same (plan, b_kv) operating point.
+  3. the decode compile-count bound: after ``warmup()``, ragged traffic
+     must never compile again, and total compiled variants stay within
+     (prefill buckets + step buckets) x distinct b_kv rungs.
+
+Besides the printed tables, ``run()`` writes machine-readable
+``BENCH_decode.json`` at the repo root and RAISES if the acceptance
+criteria fail or the continuous/barrier throughput ratio regresses by
+more than ``REGRESSION_TOLERANCE`` against the committed record (CI
+runs this section on every PR, mirroring ``fastpath.py``).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only decode
+  or  PYTHONPATH=src python benchmarks/decode.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.kernels.bucketing import seq_ladder
+from repro.models.registry import build_model
+from repro.runtime import (CompiledForwardCache, DecodeEngine, QosClass,
+                           greedy_decode_reference)
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SEQ = 24                 # max prompt length
+MAX_NEW = 12             # max generation budget
+MAX_BATCH = 4
+N_REQUESTS = 20
+# the throughput ratio is modeled (virtual clock), hence deterministic;
+# the slack only absorbs intentional re-tuning of the cost model
+REGRESSION_TOLERANCE = 0.9
+CLASSES = [
+    QosClass("realtime", t0=1.2, e0=1.0),
+    QosClass("interactive", t0=3.5, e0=2.0),
+]
+
+
+def make_sysp(cfg) -> SystemParams:
+    """Smoke-scale FLOPs plus a KV-cost term sized to this model's cache
+    so the codesign's b_kv rung is a real decision (a full-precision
+    cache read costs 0.5 s / 1 J per step against the class budgets)."""
+    per_layer = cfg.active_param_count() / max(cfg.n_layers, 1)
+    tokens = MAX_BATCH * SEQ
+    kv_full = (2.0 * cfg.n_layers * MAX_BATCH * (SEQ + MAX_NEW)
+               * cfg.n_kv_heads * cfg.head_dim
+               * np.dtype(cfg.dtype).itemsize)
+    return SystemParams(
+        n_flop_agent=2.0 * per_layer * cfg.split_layer * tokens,
+        n_flop_server=2.0 * per_layer
+        * (cfg.n_layers - cfg.split_layer) * tokens,
+        kv_bytes_full=kv_full, kv_bw_bps=kv_full, kv_power_w=2.0)
+
+
+def traffic(cfg, seed: int = 7):
+    """One ragged high-rate stream: arrivals every 10 modeled ms (far
+    below the per-round service time), prompt lengths and generation
+    budgets both ragged so retirements interleave."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(N_REQUESTS):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(SEQ // 2, SEQ + 1)))
+        out.append((toks.astype(np.int32),
+                    CLASSES[i % len(CLASSES)].name,
+                    int(rng.integers(2, MAX_NEW + 1)),
+                    0.01 * i))
+    return out
+
+
+def serve(admission: str, model, params, sysp,
+          compile_cache: CompiledForwardCache):
+    eng = DecodeEngine(model, params, sysp, classes=CLASSES,
+                       max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
+                       admission=admission, compile_cache=compile_cache)
+    warm = eng.warmup(SEQ)
+    prompts = {}
+    for toks, qos, n_new, t in traffic(model.cfg):
+        rid = eng.submit(toks, qos, max_new_tokens=n_new, arrival_s=t)
+        prompts[rid] = toks
+    responses = eng.drain()
+    return eng, eng.report(), responses, prompts, warm
+
+
+def verify_parity(model, eng, responses, prompts,
+                  compile_cache) -> bool:
+    """Every batched response must equal the non-batched sequential
+    reference token for token (DESIGN.md §12)."""
+    for r in responses:
+        ref = greedy_decode_reference(
+            model, eng.class_params(r.qos), prompts[r.request_id],
+            len(r.tokens), b_kv=r.b_kv, compile_cache=compile_cache)
+        if not np.array_equal(np.asarray(r.tokens), ref):
+            return False
+    return True
+
+
+def run() -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = make_sysp(cfg)
+    shared = CompiledForwardCache()  # both policies share the step fns
+    # the sequential reference compiles width-1 step graphs; keep them
+    # out of the engine cache so the bound below counts engine variants
+    ref_cache = CompiledForwardCache()
+    print(f"arch={cfg.name} max_batch={MAX_BATCH} prompts<= {SEQ} "
+          f"new<= {MAX_NEW} ({N_REQUESTS} ragged requests, smoke scale)")
+
+    reports, rows, parity, warm_by = {}, [], {}, {}
+    for admission in ("barrier", "continuous"):
+        eng, rep, responses, prompts, warm = serve(
+            admission, model, params, sysp, shared)
+        reports[admission] = rep
+        warm_by[admission] = warm
+        parity[admission] = verify_parity(model, eng, responses, prompts,
+                                          ref_cache)
+        rows.append([admission, rep.decode_rounds,
+                     f"{rep.throughput_tps:.2f}",
+                     f"{rep.throughput_rps:.2f}",
+                     f"{rep.total_delay_s:.2f}s",
+                     "yes" if parity[admission] else "NO"])
+    print("\nadmission policy on the same stream (modeled clock):")
+    table(["policy", "rounds", "tok/s", "req/s", "makespan", "parity"],
+          rows)
+    for cs in reports["continuous"].classes:
+        print(f"  [{cs.qos:12s}] b_hat={cs.b_hat} b_kv={cs.b_kv} "
+              f"ttft={cs.ttft_mean_s * 1e3:7.1f}ms "
+              f"itl={cs.itl_mean_s * 1e3:6.1f}ms")
+
+    # compile-count bound on the continuous engine: the shared cache saw
+    # warmup once; everything after must hit.  Bound = (prefill buckets
+    # + step buckets) x distinct b_kv rungs actually resolved.
+    rep = reports["continuous"]
+    b_kvs = sorted({cs.b_kv for cs in rep.classes})
+    n_pre = len(seq_ladder(SEQ))
+    n_step = len(seq_ladder(SEQ + MAX_NEW))
+    bound = (n_pre + n_step) * len(b_kvs)
+    cc = {
+        "warmup_compiles": warm_by["barrier"],
+        "warm_misses": rep.compile_misses,  # continuous ran second
+        "variants": reports["continuous"].compiled_variants,
+        "bound": bound,
+        "b_kv_rungs": b_kvs,
+    }
+    print(f"\ncompile-count bound: {cc['variants']} compiled variants "
+          f"(bound {bound} = ({n_pre} prefill + {n_step} step buckets) "
+          f"x {len(b_kvs)} b_kv rungs), {cc['warm_misses']} misses on "
+          "the second (warm) engine")
+
+    speedup = reports["continuous"].throughput_tps \
+        / max(reports["barrier"].throughput_tps, 1e-12)
+    kv_ratio = rep.kv_bytes / rep.kv_bytes_full if rep.kv_bytes_full \
+        else 1.0
+    acceptance = {
+        "continuous_beats_barrier_tps": speedup > 1.0,
+        "speedup": speedup,
+        "bitwise_parity_continuous": parity["continuous"],
+        "bitwise_parity_barrier": parity["barrier"],
+        "no_misses_after_warmup": cc["warm_misses"] == 0,
+        "variants_within_bound": cc["variants"] <= cc["bound"],
+        "kv_cache_compressed": kv_ratio < 1.0,
+    }
+    ok = all(v for v in acceptance.values() if isinstance(v, bool))
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'} "
+          f"(continuous {speedup:.2f}x barrier, kv cache "
+          f"{kv_ratio:.2f}x of full precision)")
+    for k, v in acceptance.items():
+        print(f"  {k}: {v}")
+
+    results = {
+        "acceptance_ok": ok,
+        "arch": cfg.name, "max_batch": MAX_BATCH,
+        "seq": SEQ, "max_new": MAX_NEW, "requests": N_REQUESTS,
+        "speedup": speedup,
+        "kv_cache_ratio": kv_ratio,
+        "throughput": {k: {"tps": r.throughput_tps,
+                           "rps": r.throughput_rps,
+                           "rounds": r.decode_rounds}
+                       for k, r in reports.items()},
+        "classes": [{"qos": cs.qos, "b_hat": cs.b_hat, "b_kv": cs.b_kv,
+                     "ttft_mean_s": cs.ttft_mean_s,
+                     "itl_mean_s": cs.itl_mean_s}
+                    for cs in rep.classes],
+        "compile_count": cc,
+        "acceptance": acceptance,
+    }
+    regression = check_regression(speedup)
+    if regression:
+        print(f"regression vs committed BENCH_decode.json: {regression}")
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    if not ok or regression:
+        # CI runs this section on every PR; losing the continuous-
+        # batching win or decode parity must fail the build
+        raise RuntimeError(
+            f"decode acceptance failed: {acceptance} "
+            f"regression={regression!r}")
+    return results
+
+
+def _json_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_decode.json"
+
+
+def check_regression(speedup: float):
+    """Compare against the committed record; None = fine, else a message.
+
+    The ratio is virtual-clock deterministic, so the tolerance only
+    absorbs intentional cost-model re-tuning — a drop past it means the
+    continuous scheduler stopped refilling slots mid-flight."""
+    path = _json_path()
+    if not path.exists():
+        return None
+    try:
+        old = float(json.loads(path.read_text(
+            encoding="utf-8"))["speedup"])
+    except (KeyError, ValueError):
+        return None
+    floor = REGRESSION_TOLERANCE * old
+    if speedup < floor:
+        return (f"continuous/barrier throughput ratio fell to "
+                f"{speedup:.3f}x (committed {old:.3f}x, "
+                f"floor {floor:.3f}x)")
+    return None
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the decode numbers as ``BENCH_decode.json`` at the repo root
+    — the machine-readable perf record diffed across PRs."""
+    if path is None:
+        path = _json_path()
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+if __name__ == "__main__":
+    run()

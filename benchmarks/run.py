@@ -26,6 +26,11 @@ Sections (paper artifact -> module):
             (also writes BENCH_fleet.json at the repo root; raises if
              joint stops beating equal-split or the single-agent fleet
              loses bitwise identity)
+    decode  continuous-batching vs FIFO-barrier      decode.py
+            greedy decode over a quantized KV cache
+            (also writes BENCH_decode.json at the repo root; raises if
+             continuous admission stops beating the barrier, decode
+             parity breaks, or warm traffic compiles)
 """
 
 from __future__ import annotations
@@ -34,9 +39,10 @@ import argparse
 import sys
 import time
 
-from . import (adaptive_serve, codesign_sweep, distortion, fastpath,
-               fleet, kernel_bench, mixed_precision_sweep, rd_bounds,
-               serve_throughput, testbed_profiles, weight_stats)
+from . import (adaptive_serve, codesign_sweep, decode, distortion,
+               fastpath, fleet, kernel_bench, mixed_precision_sweep,
+               rd_bounds, serve_throughput, testbed_profiles,
+               weight_stats)
 from .common import banner
 
 SECTIONS = {
@@ -56,6 +62,8 @@ SECTIONS = {
                  fastpath.run),
     "fleet": ("Fleet  joint vs equal-split shared-server allocation",
               fleet.run),
+    "decode": ("Decode  continuous-batching vs FIFO-barrier over a "
+               "quantized KV cache", decode.run),
 }
 
 

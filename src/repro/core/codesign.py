@@ -37,16 +37,19 @@ from typing import Optional
 
 import numpy as np
 
-from .cost_model import (SystemParams, transport_delay, transport_energy)
+from .cost_model import (SystemParams, kv_delay, kv_energy,
+                         transport_delay, transport_energy)
 
 __all__ = [
     "CodesignSolution",
+    "DecodeSolution",
     "distortion_gap",
     "net_budgets",
     "min_energy_under_deadline",
     "feasible_bitwidth",
     "solve_oracle",
     "solve_sca",
+    "solve_decode",
 ]
 
 _EPS = 1e-12
@@ -88,7 +91,8 @@ def _gap_grad(b: float, lam: float) -> float:
 # ---------------------------------------------------------------------------
 
 def net_budgets(p: SystemParams, t0: float, e0: float,
-                b_emb: Optional[float]) -> "tuple[float, float]":
+                b_emb: Optional[float],
+                b_kv: Optional[float] = None) -> "tuple[float, float]":
     """(T0, E0) left for computation after the uplink takes its share.
 
     The embedding transport at ``b_emb`` is independent of the decision
@@ -96,11 +100,18 @@ def net_budgets(p: SystemParams, t0: float, e0: float,
     solve against the *reduced* budgets T0 − t_x and E0 − e_x (tx power ×
     uplink time).  With ``b_emb=None`` or link modeling disabled the
     budgets pass through untouched — the faithful model of eqs. (4)–(9).
+
+    ``b_kv`` deducts the KV-cache read share the same way (decode
+    serving, DESIGN.md §12): the cache traffic at the stored bit-width
+    is also independent of (b̂, f, f̃), so it simply shrinks the budgets.
     """
-    if b_emb is None:
-        return t0, e0
-    return (t0 - float(transport_delay(b_emb, p)),
-            e0 - float(transport_energy(b_emb, p)))
+    if b_emb is not None:
+        t0 = t0 - float(transport_delay(b_emb, p))
+        e0 = e0 - float(transport_energy(b_emb, p))
+    if b_kv is not None:
+        t0 = t0 - float(kv_delay(b_kv, p))
+        e0 = e0 - float(kv_energy(b_kv, p))
+    return t0, e0
 
 
 # ---------------------------------------------------------------------------
@@ -363,3 +374,78 @@ def solve_sca(lam: float, p: SystemParams, t0: float, e0: float,
             return _pack(b_hat, f_r, fs_r, lam, p, iterations=iters,
                          b_relaxed=b_k, b_emb=b_emb)
     return None
+
+
+# ---------------------------------------------------------------------------
+# Decode extension: the KV-cache bit-width as a third allocated variable
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSolution:
+    """(P1) extended with the stored KV-cache bit-width (DESIGN.md §12).
+
+    ``inner`` is the weight/frequency solution obtained against the
+    budgets left after the cache takes its share at ``b_kv``;
+    ``objective`` is the joint distortion gap
+    ``inner.objective + kv_weight · gap(b_kv; λ_kv)``.
+    """
+
+    b_kv: int                   # stored KV-cache bit-width
+    inner: CodesignSolution     # (b̂, f, f̃) solve under the net budgets
+    objective: float            # joint weight + cache distortion gap
+    kv_gap: float               # cache share of the objective (unweighted)
+    delay: float                # realized T including the cache read
+    energy: float               # realized E including cache access energy
+
+    @property
+    def b_hat(self) -> int:
+        return self.inner.b_hat
+
+    @property
+    def f(self) -> float:
+        return self.inner.f
+
+    @property
+    def f_server(self) -> float:
+        return self.inner.f_server
+
+    @property
+    def feasible(self) -> bool:
+        return self.inner.feasible
+
+
+def solve_decode(lam: float, lam_kv: float, p: SystemParams, t0: float,
+                 e0: float, b_max: int = 16,
+                 b_emb: Optional[float] = None,
+                 kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                 kv_weight: float = 1.0) -> Optional[DecodeSolution]:
+    """Joint (b̂, f, f̃, b_kv) solve for decode serving.
+
+    The cache bit-width ranges over the realizable container ladder
+    (int4-packed / int8 / full) rather than a continuum, so the extension
+    is an exact enumeration: for each rung, deduct the cache's
+    delay/energy share from (T0, E0) (:func:`net_budgets`), run the
+    paper's Algorithm 1 on what is left, and score the joint distortion
+    upper-bound gap — the weight gap at λ plus ``kv_weight`` times the
+    cache gap at λ_kv (the exponential-MLE statistic of the cached K/V
+    activations).  Returns the rung minimizing the joint gap, or None
+    when every rung is infeasible.
+    """
+    best: Optional[DecodeSolution] = None
+    for b_kv in kv_ladder:
+        t0_net, e0_net = net_budgets(p, t0, e0, None, b_kv=b_kv)
+        if t0_net <= 0.0 or e0_net <= 0.0:
+            continue
+        inner = solve_sca(lam, p, t0_net, e0_net, b_max, b_emb=b_emb)
+        if inner is None:
+            continue
+        kv_gap = distortion_gap(b_kv, lam_kv)
+        cand = DecodeSolution(
+            b_kv=int(b_kv), inner=inner,
+            objective=inner.objective + kv_weight * kv_gap,
+            kv_gap=kv_gap,
+            delay=inner.delay + float(kv_delay(b_kv, p)),
+            energy=inner.energy + float(kv_energy(b_kv, p)))
+        if best is None or cand.objective < best.objective:
+            best = cand
+    return best

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 __all__ = ["SystemParams", "agent_delay", "server_delay", "agent_energy",
            "server_energy", "transport_delay", "transport_energy",
-           "total_delay", "total_energy"]
+           "kv_delay", "kv_energy", "total_delay", "total_energy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +56,13 @@ class SystemParams:
     emb_bytes_full: float = 0.0  # boundary embedding bytes at full precision
     link_bps: float = 0.0        # uplink rate in bytes/s; 0 disables
     tx_power_w: float = 0.0      # radio transmit power; 0 disables tx energy
+    # optional KV-cache traffic (decode serving; 0 = prefill-only model).
+    # Each decode step streams the whole cache through the memory system,
+    # so its cost scales with the *stored* bit-width b_kv exactly the way
+    # the uplink scales with b_emb.
+    kv_bytes_full: float = 0.0   # KV cache bytes/step at full precision
+    kv_bw_bps: float = 0.0       # cache memory bandwidth in bytes/s
+    kv_power_w: float = 0.0      # cache access power; 0 disables kv energy
 
 
 def agent_delay(b_hat, f, p: SystemParams):
@@ -87,6 +94,24 @@ def transport_energy(b_emb, p: SystemParams):
     return p.tx_power_w * transport_delay(b_emb, p)
 
 
+def kv_delay(b_kv, p: SystemParams):
+    """Per-step KV-cache read time at stored bit-width ``b_kv``.
+
+    Mirrors :func:`transport_delay`: linear in the bit-width, 0 when
+    cache modeling is disabled, and a python scalar so host-side
+    codesign math stays float64."""
+    if p.kv_bw_bps <= 0.0 or p.kv_bytes_full <= 0.0:
+        return 0.0
+    return (b_kv / p.b_full) * p.kv_bytes_full / p.kv_bw_bps
+
+
+def kv_energy(b_kv, p: SystemParams):
+    """KV-cache access energy: access power × read time (0 when disabled)."""
+    if p.kv_power_w <= 0.0:
+        return 0.0
+    return p.kv_power_w * kv_delay(b_kv, p)
+
+
 def agent_energy(b_hat, f, p: SystemParams):
     """Eq. (6)."""
     return p.eta_agent * (b_hat * p.n_flop_agent / (p.b_full * p.c_agent)) \
@@ -99,18 +124,24 @@ def server_energy(f_server, p: SystemParams):
         * p.psi_server * f_server ** 2
 
 
-def total_delay(b_hat, f, f_server, p: SystemParams, b_emb=None):
-    """Eq. (8) (+ optional transport)."""
+def total_delay(b_hat, f, f_server, p: SystemParams, b_emb=None,
+                b_kv=None):
+    """Eq. (8) (+ optional transport and KV-cache terms)."""
     t = agent_delay(b_hat, f, p) + server_delay(f_server, p)
     if b_emb is not None:
         t = t + transport_delay(b_emb, p)
+    if b_kv is not None:
+        t = t + kv_delay(b_kv, p)
     return t
 
 
-def total_energy(b_hat, f, f_server, p: SystemParams, b_emb=None):
-    """Eq. (9) (+ optional uplink transmit energy, mirroring
-    :func:`total_delay`'s optional transport term)."""
+def total_energy(b_hat, f, f_server, p: SystemParams, b_emb=None,
+                 b_kv=None):
+    """Eq. (9) (+ optional uplink transmit energy and KV-cache access
+    energy, mirroring :func:`total_delay`'s optional terms)."""
     e = agent_energy(b_hat, f, p) + server_energy(f_server, p)
     if b_emb is not None:
         e = e + transport_energy(b_emb, p)
+    if b_kv is not None:
+        e = e + kv_energy(b_kv, p)
     return e

@@ -45,8 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codesign import _d_upper, min_energy_under_deadline, net_budgets
-from .cost_model import SystemParams, total_delay, total_energy
+from .codesign import (_d_upper, distortion_gap, min_energy_under_deadline,
+                       net_budgets)
+from .cost_model import (SystemParams, kv_delay, kv_energy, total_delay,
+                         total_energy)
 from .distortion import chain_bound_coefficients, induced_l1_norm
 from .quantization import QuantConfig, QuantPlan, quantize_dequantize
 from .rate_distortion import exponential_mle
@@ -63,6 +65,8 @@ __all__ = [
     "allocation_objective",
     "uniform_objective",
     "allocate_bits",
+    "MixedDecodeSolution",
+    "allocate_bits_decode",
     "plan_from_bits",
 ]
 
@@ -294,6 +298,74 @@ def allocate_bits(stats: LayerStats, p: SystemParams, t0: float, e0: float,
         mean_bits=mean_b,
         delay=float(total_delay(mean_b, f, fs, p, b_emb=b_emb)),
         energy=float(total_energy(mean_b, f, fs, p, b_emb=b_emb)))
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedDecodeSolution:
+    """Per-layer weight allocation + stored KV-cache bit-width.
+
+    The decode analog of :class:`MixedSolution`, mirroring
+    ``codesign.DecodeSolution``: ``inner`` solves the per-layer problem
+    against the budgets left after the cache read at ``b_kv``, and
+    ``objective`` is the joint bound (DESIGN.md §12)."""
+
+    b_kv: int
+    inner: MixedSolution
+    objective: float            # inner.objective + kv_weight · gap(b_kv)
+    kv_gap: float
+    delay: float                # realized T including the cache read
+    energy: float
+
+    @property
+    def bits(self) -> tuple:
+        return self.inner.bits
+
+    @property
+    def f(self) -> float:
+        return self.inner.f
+
+    @property
+    def f_server(self) -> float:
+        return self.inner.f_server
+
+    @property
+    def mean_bits(self) -> float:
+        return self.inner.mean_bits
+
+
+def allocate_bits_decode(stats: LayerStats, lam_kv: float, p: SystemParams,
+                         t0: float, e0: float, b_max: int = 16,
+                         b_emb: Optional[float] = None,
+                         kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                         kv_weight: float = 1.0
+                         ) -> Optional[MixedDecodeSolution]:
+    """Joint per-layer weight bits + KV-cache bit-width allocation.
+
+    Exact enumeration over the realizable cache container ladder (the
+    same reduction as ``codesign.solve_decode``): each rung's cache
+    delay/energy share shrinks the (T0, E0) frontier the greedy
+    allocator runs against, and the joint objective adds the cache's
+    distortion gap at λ_kv on top of the per-layer bound.  None when
+    every rung is infeasible.
+    """
+    best: Optional[MixedDecodeSolution] = None
+    for b_kv in kv_ladder:
+        t0_net, e0_net = net_budgets(p, t0, e0, None, b_kv=b_kv)
+        if t0_net <= 0.0 or e0_net <= 0.0:
+            continue
+        inner = allocate_bits(stats, p, t0_net, e0_net, b_max, b_emb=b_emb)
+        if inner is None:
+            continue
+        kv_gap = distortion_gap(b_kv, lam_kv)
+        cand = MixedDecodeSolution(
+            b_kv=int(b_kv), inner=inner,
+            objective=inner.objective + kv_weight * kv_gap,
+            kv_gap=kv_gap,
+            delay=inner.delay + float(kv_delay(b_kv, p)),
+            energy=inner.energy + float(kv_energy(b_kv, p)))
+        if best is None or cand.objective < best.objective:
+            best = cand
+    return best
 
 
 def plan_from_bits(bits: Sequence[int], *, scheme: str = "uniform",

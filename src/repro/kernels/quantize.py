@@ -60,3 +60,61 @@ def group_quantize(w: jax.Array, *, group_size: int = 128, bits: int = 8,
         ],
         interpret=interpret,
     )(w)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (decode serving, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# The decode engine stores each cache entry as int8-held codes + one f32
+# scale per head vector: absmax over the trailing head_dim axis, the same
+# scale/round/clip rule as ``_group_quant_kernel`` (so the weight and
+# cache quantizers share arithmetic).  These are plain jnp functions, not
+# pallas_call kernels: they are traced *into* the AOT-compiled decode
+# step, where XLA fuses the dequantize into the attention reads — a
+# separate kernel launch per step would cost more than it saves at
+# decode's [B, 1] arithmetic intensity.
+
+def kv_levels(bits: int) -> int:
+    """Symmetric code magnitude at ``bits`` (7 for int4, 127 for int8)."""
+    return 2 ** (bits - 1) - 1
+
+
+def kv_quantize(x: jax.Array, bits: int):
+    """x [..., head_dim] float -> (codes int8 [...], scales f32 [... minus last]).
+
+    Absmax granularity is one scale per head vector (the trailing axis),
+    i.e. per (layer, row, position, kv_head) for a [L, B, T, KV, dh]
+    cache block.  Zero vectors quantize to scale 1.0 / codes 0, so
+    padded cache positions round-trip harmlessly.
+    """
+    levels = kv_levels(bits)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)                   # [...]
+    scale = jnp.where(amax > 0, amax / levels, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -levels, levels)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize(codes: jax.Array, scales: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse map: codes [..., dh] int8, scales [...] -> float [..., dh]."""
+    return (codes.astype(jnp.float32) * scales[..., None]).astype(dtype)
+
+
+def kv_cache_bytes(shape, bits: int, *, scale_bytes: int = 4) -> int:
+    """Stored size of a quantized [..., head_dim] cache block.
+
+    Codes are billed at the realizable container (int4 nibble-packed for
+    <= 4 bits, int8 for 5..8 — ``core.quantization.wire_bytes``), plus
+    one f32 scale per head vector.  A >= 16-bit cache is stored raw
+    (2-byte entries, no scales).
+    """
+    from repro.core.quantization import wire_bytes
+    n = 1
+    for d in shape:
+        n *= int(d)
+    if bits >= 16:
+        return 2 * n
+    n_vec = n // int(shape[-1])
+    return wire_bytes(n, bits) + scale_bytes * n_vec

@@ -47,8 +47,10 @@ from ..data import MarkovLMConfig, MarkovLMDataset
 from ..env import presets as env_presets
 from ..models.registry import build_model
 from ..runtime import (AdaptiveCoInferenceEngine, BatchedCoInferenceEngine,
-                       CodesignCache, CoInferenceEngine, FleetAgentSpec,
-                       FleetCoInferenceEngine, QosClass)
+                       CodesignCache, CoInferenceEngine, DecodeEngine,
+                       FleetAgentSpec, FleetCoInferenceEngine, QosClass,
+                       greedy_decode_reference)
+from ..runtime.decode_engine import decode_protocol_gap
 
 ENV_TRACES = {
     "wifi-markov": env_presets.wifi_markov,
@@ -75,6 +77,18 @@ def main(argv=None):
     ap.add_argument("--t0", type=float, default=3.5)
     ap.add_argument("--e0", type=float, default=2.0)
     ap.add_argument("--path", default="fake", choices=["fake", "kernel"])
+    ap.add_argument("--decode", action="store_true",
+                    help="serve autoregressive decode through the "
+                         "continuous-batching engine over a quantized KV "
+                         "cache (DESIGN.md §12): requests admit into free "
+                         "batch slots mid-flight and retire independently, "
+                         "with per-class b_kv chosen by the codesign")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="tokens to generate per request (--decode)")
+    ap.add_argument("--parity-check", action="store_true",
+                    help="replay every --decode request through the "
+                         "non-batched sequential reference and assert "
+                         "bitwise-identical greedy tokens")
     ap.add_argument("--compiled", action="store_true",
                     help="serve through the compiled fast path "
                          "(DESIGN.md §10): one AOT-compiled bucket-padded "
@@ -106,10 +120,20 @@ def main(argv=None):
         return serve_fleet(args)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if cfg is None:
+        # fcdnn-16: the paper's toy FC benchmark model ships no
+        # ModelConfig — fail like any other unservable arch, not with a
+        # build_model traceback
+        print(f"error: arch {args.arch} has no servable model config "
+              "(it is the distortion-benchmark toy model, not a "
+              "transformer); pick a DecoderLM-family arch "
+              "(e.g. qwen2-0.5b, stablelm-3b)", file=sys.stderr)
+        return 2
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    err = unsupported_model_reason(model, args.arch, args.compiled)
+    err = unsupported_model_reason(model, args.arch, args.compiled,
+                                   decode=args.decode)
     if err is not None:
         print(f"error: {err}", file=sys.stderr)
         return 2
@@ -121,6 +145,8 @@ def main(argv=None):
         n_flop_server=2.0 * per_layer
         * (cfg.n_layers - cfg.split_layer) * tokens)
 
+    if args.decode:
+        return serve_decode(cfg, model, params, sysp, args)
     if args.env_trace is not None:
         return serve_adaptive(cfg, model, params, args)
     if args.engine == "batched":
@@ -128,17 +154,25 @@ def main(argv=None):
     return serve_sequential(cfg, model, params, sysp, args)
 
 
-def unsupported_model_reason(model, arch: str, compiled: bool):
+def unsupported_model_reason(model, arch: str, compiled: bool,
+                             decode: bool = False):
     """One-line reason this model cannot serve the invocation, or None.
 
     Mirrors the engine constructors' protocol checks so the driver can
     fail with a clear message instead of a constructor traceback:
-    co-inference needs the DecoderLM ``run_layers`` protocol at all, and
+    co-inference needs the DecoderLM ``run_layers`` protocol at all,
     ``--compiled`` additionally needs the ``embed`` +
-    ``run_layers_window`` hooks the fast path traces (DESIGN.md §10).
-    One function serves both the flag path and the fleet-spec path, so
-    the hook requirements live in exactly one place.
+    ``run_layers_window`` hooks the fast path traces (DESIGN.md §10),
+    and ``--decode`` needs the full DecoderLM KV-cache decode protocol
+    (DESIGN.md §12).  One function serves both the flag path and the
+    fleet-spec path, so the hook requirements live in exactly one place.
     """
+    if decode:
+        gap = decode_protocol_gap(model)
+        if gap is not None:
+            return (f"--decode does not support arch {arch}: {gap}. "
+                    "Drop --decode or pick a dense DecoderLM-family arch "
+                    "(e.g. qwen2-0.5b, stablelm-3b).")
     if compiled and not (hasattr(model, "embed")
                          and hasattr(model, "run_layers_window")):
         return (f"--compiled does not support arch {arch}: "
@@ -259,6 +293,94 @@ def serve_adaptive(cfg, model, params, args):
         print(f"  t={e.t_s:7.2f}s [{e.qos:12s}] {e.reason}: "
               f"b {e.b_before:.0f} -> {e.b_after:.0f}"
               + (" (degraded)" if e.degraded else ""))
+    return 0
+
+
+def serve_decode(cfg, model, params, sysp, args):
+    """Continuous-batching greedy decode over a quantized KV cache
+    (DESIGN.md §12) through ``DecodeEngine``."""
+    # give the codesign a KV-cost term sized to this model's cache so the
+    # b_kv rung is a real decision, not a free variable (DESIGN.md §12):
+    # a full-precision cache read costs 0.5s/1.0J per step, so the tight
+    # realtime budget forces a lower rung while loose budgets keep b_full
+    kv_full = (2.0 * cfg.n_layers * args.max_batch
+               * (args.seq + args.max_new) * cfg.n_kv_heads
+               * max(cfg.head_dim, 1) * np.dtype(cfg.dtype).itemsize)
+    sysp = dataclasses.replace(sysp, kv_bytes_full=kv_full,
+                               kv_bw_bps=kv_full, kv_power_w=2.0)
+    classes = [
+        QosClass("realtime", t0=max(args.t0 / 3.0, 0.2),
+                 e0=max(args.e0 / 2.0, 0.2)),
+        QosClass("interactive", t0=args.t0, e0=args.e0),
+    ]
+    cache = CodesignCache()
+    try:
+        eng = DecodeEngine(model, params, sysp, classes=classes,
+                           max_batch=args.max_batch,
+                           max_new_tokens=args.max_new,
+                           mixed_precision=args.mixed_precision,
+                           codesign_cache=cache)
+    except ValueError as e:
+        print(e)
+        return 1
+    print(f"arch={cfg.name} split={cfg.split_layer}/{cfg.n_layers} "
+          f"lambda_hat={eng.lam:.2f} lambda_kv={eng.lam_kv:.2f} "
+          f"engine=decode max_batch={args.max_batch} "
+          f"max_new={args.max_new} admission={eng.admission}")
+    import time
+    t0 = time.perf_counter()
+    n = eng.warmup(args.seq)
+    print(f"warmup: {n} decode variants compiled in "
+          f"{time.perf_counter() - t0:.1f}s")
+    for c in classes:
+        s = eng.solution_for(c.name)
+        bdesc = "/".join(map(str, s.bits)) if args.mixed_precision \
+            else str(s.b_hat)
+        print(f"  class {c.name:12s} (T0={c.t0:.2f}s, E0={c.e0:.2f}J): "
+              f"b_hat={bdesc} b_kv={s.b_kv} f={s.f / 1e9:.2f}GHz "
+              f"f~={s.f_server / 1e9:.2f}GHz bound={s.objective:.3e}")
+
+    rng = np.random.default_rng(0)
+    prompts = {}
+    for i in range(args.requests):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(max(args.seq // 2, 1),
+                                                  args.seq + 1)))
+        rid = eng.submit(toks, classes[i % len(classes)].name,
+                         arrival_s=0.01 * i)
+        prompts[rid] = (np.asarray(toks), classes[i % len(classes)].name)
+    responses = eng.drain()
+
+    rep = eng.report()
+    print(f"served {rep.requests_served} requests, "
+          f"{rep.tokens_generated} tokens in {rep.decode_rounds} rounds "
+          f"({rep.prefills} prefills):")
+    for cs in rep.classes:
+        print(f"  [{cs.qos:12s}] n={cs.requests} b_kv={cs.b_kv} "
+              f"ttft={cs.ttft_mean_s * 1e3:.2f}ms "
+              f"(max {cs.ttft_max_s * 1e3:.2f}ms) "
+              f"itl={cs.itl_mean_s * 1e3:.2f}ms")
+    ratio = rep.kv_bytes / rep.kv_bytes_full if rep.kv_bytes_full else 1.0
+    print(f"decode report: throughput={rep.throughput_tps:.1f} tok/s "
+          f"(modeled), {rep.throughput_rps:.1f} req/s, "
+          f"kv cache {rep.kv_bytes / 1024:.1f}KiB "
+          f"({ratio:.2f}x of full precision) "
+          f"energy={rep.total_energy_j:.3f}J")
+    print(f"compile cache: {rep.compiled_variants} variants, "
+          f"{rep.compile_hits} hits / {rep.compile_misses} misses")
+
+    if args.parity_check:
+        for r in responses:
+            toks, qos = prompts[r.request_id]
+            ref = greedy_decode_reference(
+                model, eng.class_params(qos), toks, len(r.tokens),
+                b_kv=r.b_kv, compile_cache=eng.compile_cache)
+            if not np.array_equal(np.asarray(r.tokens), ref):
+                print(f"error: parity mismatch on request {r.request_id}",
+                      file=sys.stderr)
+                return 1
+        print(f"parity: all {len(responses)} requests bitwise-match the "
+              "sequential reference")
     return 0
 
 

@@ -244,9 +244,18 @@ class DecoderLM:
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
-    def prefill(self, params, batch):
+    def prefill(self, params, batch, last_index=None):
         """Full-sequence pass building the KV cache; returns (last-position
-        logits, cache)."""
+        logits, cache).
+
+        ``last_index`` ([B] int32, optional) names each row's true final
+        prompt position for right-padded batches: logits are gathered
+        there instead of at column s-1, and the cache ``len`` becomes
+        ``last_index + 1`` per row.  Causal attention makes positions
+        <= last_index independent of the padding, so the gathered logits
+        and the live cache prefix are bitwise those of the unpadded
+        prompt (the decode engine's bucket invariant, DESIGN.md §12).
+        """
         cfg = self.cfg
         x, positions = self._embed(params, batch)
         b, s = x.shape[0], x.shape[1]
@@ -269,9 +278,17 @@ class DecoderLM:
 
         x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
         x = L.apply_norm(cfg, x, params["final_norm"])
-        logits = L.unembed(cfg, params["embed"], x[:, -1:])[:, 0]
-        cache = {"k": ks, "v": vs,
-                 "len": jnp.full((b,), s, jnp.int32)}
+        if last_index is None:
+            sel = x[:, -1:]
+            lens = jnp.full((b,), s, jnp.int32)
+        else:
+            idx = jnp.asarray(last_index, jnp.int32)
+            sel = jax.vmap(
+                lambda row, i: jax.lax.dynamic_slice_in_dim(row, i, 1, 0)
+            )(x, idx)
+            lens = idx + 1
+        logits = L.unembed(cfg, params["embed"], sel)[:, 0]
+        cache = {"k": ks, "v": vs, "len": lens}
         return logits, cache
 
     def init_cache(self, batch: int, max_len: int):

@@ -3,6 +3,9 @@ adaptive + multi-agent fleet), fault tolerance."""
 
 from .adaptive import (AdaptiveCoInferenceEngine, AdaptiveReport,  # noqa: F401
                        ReplanEvent)
+from .decode_engine import (ClassDecodeStats, DecodeEngine,  # noqa: F401
+                            DecodeReport, DecodeRequest, DecodeResponse,
+                            fit_kv_lambda, greedy_decode_reference)
 from .fastpath import CompiledForwardCache  # noqa: F401
 from .fault_tolerance import (HostFailure, HostSet, StragglerMonitor,  # noqa: F401
                               Supervisor, SupervisorReport)

@@ -1,0 +1,998 @@
+"""Continuous-batching decode over a quantized KV cache (DESIGN.md §12).
+
+Everything the engines of ``serve_engine.py`` do is one prefill-style
+forward per request.  Embodied-agent traffic is token-by-token decode:
+a request prefills once, then occupies the accelerator for dozens of
+single-token steps whose cost is dominated by streaming the KV cache.
+This module adds that serving mode on top of the PR-4 compiled fast
+path, with three commitments:
+
+1.  **Continuous batching.**  A request is admitted into a free decode
+    slot the moment one exists and retires the moment its budget is
+    spent — there is no batch barrier.  The FIFO-barrier policy (admit a
+    full batch, run it to completion, only then refill) is kept as
+    ``admission="barrier"`` on the same engine, so the benchmark's
+    throughput comparison is policy-for-policy on identical code.
+
+2.  **Quantized KV cache.**  Cache entries are stored as int8-held codes
+    plus one f32 scale per head vector (``kernels.quantize.kv_quantize``
+    — the weight quantizers' exact scale/round/clip rule), at a stored
+    bit-width ``b_kv`` drawn from the realizable container ladder
+    (int4-packed / int8 / raw).  ``b_kv`` is the third codesign variable:
+    ``codesign.solve_decode`` / ``mixed_precision.allocate_bits_decode``
+    enumerate the ladder, deduct each rung's cache-read share from
+    (T0, E0), and add the cache's distortion gap at λ_kv to the bound.
+
+3.  **Bitwise parity.**  Greedy decode through the batched engine equals
+    the non-batched sequential reference token-for-token.  The load-
+    bearing invariants: each request's cache length is bucketed from its
+    *own* parameters (``T = seq_bucket(prompt_len + max_new_tokens)``,
+    never a batch max — reductions over different cache lengths group
+    lanes differently and are NOT bitwise stable); the current step
+    attends over dequantized history plus the *raw* freshly-written
+    entry (``DecoderLM.decode_step`` order), with the quantized copy
+    stored for all future steps — engine and reference do this through
+    the same traced function; and every per-row op in the decode graph
+    is row-independent, so batch width B does not change row values
+    (the §7 house invariant, re-verified by ``tests/test_decode.py``).
+
+Executables are AOT-compiled (``jit().lower().compile()``) and memoized
+in a :class:`~repro.runtime.fastpath.CompiledForwardCache`: prefill is
+keyed on (prompt bucket, b_kv), the decode step on (batch, cache bucket,
+b_kv), so the post-warmup compile count is bounded by the bucket ladder
+times the distinct cache bit-widths — the PR-4 bound, extended.
+
+Costs are virtual-clock, billed at the *padded* workload (bucket padding
+is compute the hardware really runs, as on the compiled fast path): a
+decode round bills all ``max_batch`` slots plus the full cache read at
+``b_kv`` over the group's [L, B, T] block.  That is exactly why
+continuous admission wins: the barrier policy pays full-width rounds
+over mostly-empty slots while the tail of a batch drains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codesign as cd
+from repro.core import mixed_precision as mp
+from repro.core.cost_model import (SystemParams, agent_delay, agent_energy,
+                                   kv_delay, kv_energy, server_delay,
+                                   server_energy)
+from repro.core.quantization import QuantConfig, QuantPlan
+from repro.core.rate_distortion import exponential_mle
+from repro.kernels.bucketing import DEFAULT_SEQ_BASE, seq_bucket, seq_ladder
+from repro.kernels.quantize import kv_cache_bytes, kv_dequantize, kv_quantize
+
+from .fastpath import CompiledForwardCache, _sds
+from .qat import fake_quantize_agent
+from .serve_engine import CodesignCache, QosClass, fit_lambda
+
+__all__ = [
+    "DecodeRequest",
+    "DecodeResponse",
+    "ClassDecodeStats",
+    "DecodeReport",
+    "DecodeEngine",
+    "fit_kv_lambda",
+    "greedy_decode_reference",
+]
+
+# the KV-cache layout this engine manages slots in; models exposing the
+# decode hooks over a different state shape (conv streams, recurrent
+# cells, cross-attention caches) cannot be sloted into it
+_DECODE_CACHE_AXES = {
+    "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    "len": ("batch",),
+}
+
+
+def decode_protocol_gap(model) -> Optional[str]:
+    """Why ``model`` cannot be decode-served (None when it can).
+
+    Requires the full DecoderLM decode protocol — ``prefill`` /
+    ``init_cache`` / ``decode_step`` — *and* the [L, B, T, KV, dh]
+    KV-cache layout this engine's slot arrays assume.  Hybrid/xLSTM/
+    enc-dec families expose same-named hooks over different state
+    shapes; they are rejected here, not by a shape error three calls in.
+    """
+    missing = [h for h in ("prefill", "init_cache", "decode_step",
+                           "cache_axes")
+               if not hasattr(model, h)]
+    if missing:
+        return f"lacks the {'/'.join(missing)} decode hook(s)"
+    axes = model.cache_axes()
+    if axes != _DECODE_CACHE_AXES:
+        return ("decode state is not the [layers, batch, cache_seq, "
+                "kv_heads, head_dim] KV cache")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeRequest:
+    """One queued decode request: a prompt plus a generation budget."""
+    request_id: int
+    tokens: np.ndarray          # int32 [P] prompt
+    qos: str
+    max_new_tokens: int
+    arrival_s: float            # virtual arrival time
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeResponse:
+    """A retired request: greedy continuation + its latency accounting."""
+    request_id: int
+    qos: str
+    tokens: np.ndarray          # int32, generated greedily (<= max_new)
+    prompt_len: int
+    b_kv: int                   # stored cache bit-width it decoded under
+    ttft_s: float               # arrival -> first token (virtual clock)
+    itl_mean_s: float           # mean inter-token latency (0 if 1 token)
+    finished_s: float
+    cancelled: bool = False     # retired mid-decode by cancel()
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassDecodeStats:
+    """Per-QoS-class latency aggregates of a :class:`DecodeReport`."""
+    qos: str
+    b_hat: int
+    b_kv: int
+    requests: int
+    tokens: int
+    ttft_mean_s: float
+    ttft_max_s: float
+    itl_mean_s: float
+    plan_bits: tuple = ()       # per-agent-layer bits under a mixed plan
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeReport:
+    """Whole-run aggregates of a :class:`DecodeEngine` (the decode
+    counterpart of ``serve_engine.EngineReport``, streamed per class)."""
+    requests_served: int
+    cancelled: int
+    tokens_generated: int
+    prefills: int
+    decode_rounds: int
+    total_delay_s: float        # virtual clock at the end of the run
+    total_energy_j: float
+    throughput_tps: float       # generated tokens / modeled second
+    throughput_rps: float
+    admission: str              # "continuous" | "barrier"
+    classes: tuple = ()         # ClassDecodeStats per QoS class
+    kv_bytes: int = 0           # stored cache bytes across admissions
+    kv_bytes_full: int = 0      # same cache at full precision
+    codesign_hits: int = 0      # this engine's cache attribution
+    codesign_misses: int = 0
+    compile_hits: int = 0
+    compile_misses: int = 0
+    compiled_variants: int = 0
+
+
+# ---------------------------------------------------------------------------
+# cache-activation statistic
+# ---------------------------------------------------------------------------
+
+def fit_kv_lambda(model, params, *, seq: int = 16) -> float:
+    """MLE λ_kv over K/V cache magnitudes from one calibration prefill.
+
+    The decode codesign needs a rate parameter for the *cached
+    activations*, symmetric with ``fit_lambda``'s weight statistic.  One
+    deterministic prompt (``arange % vocab``) at full precision is
+    calibration enough at the fidelity of the exponential model — and
+    determinism keeps the codesign cache key stable across runs.
+    """
+    cfg = model.cfg
+    toks = (np.arange(seq, dtype=np.int64)
+            % int(cfg.vocab_size)).astype(np.int32)[None]
+    _, cache = model.prefill(params, {"tokens": jnp.asarray(toks)})
+    mags = jnp.concatenate([jnp.abs(cache["k"]).reshape(-1),
+                            jnp.abs(cache["v"]).reshape(-1)])
+    return float(exponential_mle(mags))
+
+
+# ---------------------------------------------------------------------------
+# traced decode functions (shared by the engine and the reference)
+# ---------------------------------------------------------------------------
+
+def _build_prefill(model, b_kv: int) -> Callable:
+    """(weights, tokens [1, S], last_idx [1]) -> (first greedy token [1],
+    quantized cache block).  Quantization of the prefill cache happens
+    *inside* the traced function so engine and reference share its
+    arithmetic exactly."""
+    raw = b_kv >= 16
+
+    def fn(weights, tokens, last_idx):
+        logits, cache = model.prefill(weights, {"tokens": tokens},
+                                      last_index=last_idx)
+        tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k, v = cache["k"], cache["v"]
+        if raw:
+            return (tok0, k, v,
+                    jnp.ones(k.shape[:-1], jnp.float32),
+                    jnp.ones(v.shape[:-1], jnp.float32))
+        kq, ks = kv_quantize(k, b_kv)
+        vq, vs = kv_quantize(v, b_kv)
+        return tok0, kq, vq, ks, vs
+
+    return fn
+
+
+def _build_decode(model, b_kv: int) -> Callable:
+    """(weights, k_codes, v_codes, k_scales, v_scales, token [B,1],
+    pos [B]) -> (next token [B], updated cache block).
+
+    Quantize-on-write: ``decode_step`` attends over the dequantized
+    history plus the raw freshly-written entry at ``pos`` (its own write
+    order); only the stored copy of that entry is re-quantized here.
+    Every op is per-row (vmapped slices, row-masked attention), so row
+    values are independent of the batch width — the parity invariant.
+    """
+    raw = b_kv >= 16
+    dt = jnp.dtype(model.cfg.dtype)
+
+    def row_slice(c, p):                   # c [L, T, ...]: one row's block
+        return jax.lax.dynamic_slice_in_dim(c, p, 1, 1)
+
+    def row_write(c, u, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, u, p, 1)
+
+    def fn(weights, kc, vc, ks, vs, tok, pos):
+        if raw:
+            k, v = kc, vc
+        else:
+            k = kv_dequantize(kc, ks, dt)
+            v = kv_dequantize(vc, vs, dt)
+        logits, new_cache = model.decode_step(
+            weights, {"k": k, "v": v, "len": pos},
+            {"token": tok, "pos": pos})
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        knew = jax.vmap(row_slice, in_axes=(1, 0),
+                        out_axes=1)(new_cache["k"], pos)   # [L, B, 1, KV, dh]
+        vnew = jax.vmap(row_slice, in_axes=(1, 0),
+                        out_axes=1)(new_cache["v"], pos)
+        if raw:
+            kc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(
+                kc, knew, pos)
+            vc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(
+                vc, vnew, pos)
+            return nxt, kc, vc, ks, vs
+        kq, ksn = kv_quantize(knew, b_kv)
+        vq, vsn = kv_quantize(vnew, b_kv)
+        kc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(kc, kq, pos)
+        vc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(vc, vq, pos)
+        ks = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(ks, ksn, pos)
+        vs = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(vs, vsn, pos)
+        return nxt, kc, vc, ks, vs
+
+    return fn
+
+
+def _container_dtype(cfg, b_kv: int) -> np.dtype:
+    return np.dtype("int8") if b_kv < 16 else np.dtype(cfg.dtype)
+
+
+def _compile_prefill(model, params, b_kv: int, s_bucket: int):
+    w = _sds(params)
+    tok = jax.ShapeDtypeStruct((1, s_bucket), jnp.int32)
+    li = jax.ShapeDtypeStruct((1,), jnp.int32)
+    return jax.jit(_build_prefill(model, b_kv)).lower(w, tok, li).compile()
+
+
+def _compile_decode(model, params, b_kv: int, batch: int, t_bucket: int):
+    cfg = model.cfg
+    cont = _container_dtype(cfg, b_kv)
+    shape = (cfg.n_layers, batch, t_bucket, cfg.n_kv_heads, cfg.head_dim)
+    codes = jax.ShapeDtypeStruct(shape, cont)
+    scales = jax.ShapeDtypeStruct(shape[:-1], jnp.float32)
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(_build_decode(model, b_kv)).lower(
+        _sds(params), codes, codes, scales, scales, tok, pos).compile()
+
+
+# ---------------------------------------------------------------------------
+# engine internals
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _ClassState:
+    """One QoS class's resolved operating point."""
+    qos: QosClass
+    b_hat: int
+    b_eff: float                # mean agent bits (= b_hat when uniform)
+    b_kv: int
+    f: float
+    f_server: float
+    plan_key: tuple             # keys the materialized weight tree
+    plan_bits: tuple
+    solution: Any = None        # DecodeSolution / MixedDecodeSolution
+
+
+@dataclasses.dataclass
+class _Active:
+    """One in-flight request occupying a decode slot."""
+    req: DecodeRequest
+    generated: List[int]
+    admitted_s: float
+    ttft_s: float
+    last_emit_s: float
+    itls: List[float]
+    on_token: Optional[Callable]
+
+
+class _Group:
+    """One (QoS class, cache bucket) slot block: a fixed-width batched
+    cache of ``max_batch`` decode slots at cache length ``t_bucket``."""
+
+    def __init__(self, cfg, qos_name: str, t_bucket: int, max_batch: int,
+                 b_kv: int):
+        self.qos_name = qos_name
+        self.t_bucket = int(t_bucket)
+        cont = _container_dtype(cfg, b_kv)
+        shape = (cfg.n_layers, max_batch, t_bucket, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.k_codes = np.zeros(shape, cont)
+        self.v_codes = np.zeros(shape, cont)
+        self.k_scales = np.ones(shape[:-1], np.float32)
+        self.v_scales = np.ones(shape[:-1], np.float32)
+        # inactive rows hold pos=0/token=0: their (garbage, row-
+        # independent) computation never escapes the row, and position 0
+        # is rewritten at the next admission before it is ever attended
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.tok = np.zeros((max_batch,), np.int32)
+        self.slots: List[Optional[_Active]] = [None] * max_batch
+        self.barrier_open = True
+
+    def active_count(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class DecodeEngine:
+    """Continuous-batching greedy decode over quantized KV-cache slots.
+
+    ``classes`` are resolved at construction: per class one
+    ``solve_decode`` (or ``allocate_bits_decode`` under
+    ``mixed_precision``) picks (b̂ or a per-layer plan, f, f̃, b_kv); the
+    class's agent partition is then materialized once as a
+    fake-quantized weight tree (``runtime.qat.fake_quantize_agent``,
+    memoized across classes on the plan key).  Construction raises
+    ``ValueError`` for an infeasible class, matching
+    ``BatchedCoInferenceEngine``.  ``auto=False`` skips the solve
+    (default operating point b̂=8/b_kv=8 at max frequencies) so tests
+    and calibration runs can pin operating points via
+    :meth:`set_operating_point`.
+
+    ``admission`` picks the scheduling policy on otherwise identical
+    code: ``"continuous"`` admits into any free slot every step and
+    retires mid-flight; ``"barrier"`` refills a slot block only once it
+    has fully drained (the FIFO-barrier baseline the benchmark beats).
+    """
+
+    def __init__(self, model, params, sysp: SystemParams, *,
+                 classes: Sequence[QosClass],
+                 max_batch: int = 4,
+                 max_new_tokens: int = 16,
+                 admission: str = "continuous",
+                 mixed_precision: bool = False,
+                 kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                 kv_weight: float = 1.0,
+                 b_emb: Optional[int] = None,
+                 auto: bool = True,
+                 lam: Optional[float] = None,
+                 lam_kv: Optional[float] = None,
+                 codesign_cache: Optional[CodesignCache] = None,
+                 compile_cache: Optional[CompiledForwardCache] = None,
+                 seq_bucket_base: int = DEFAULT_SEQ_BASE):
+        gap = decode_protocol_gap(model)
+        if gap is not None:
+            raise TypeError(f"{type(model).__name__} {gap}; the decode "
+                            "engine needs the DecoderLM decode protocol "
+                            "(DESIGN.md §12)")
+        if admission not in ("continuous", "barrier"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        if not classes:
+            raise ValueError("need at least one QoS class")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.sysp = sysp
+        self.split = self.cfg.split_layer
+        self.max_batch = int(max_batch)
+        self.max_new_tokens = int(max_new_tokens)
+        self.admission = admission
+        self.mixed_precision = bool(mixed_precision)
+        self.kv_ladder = tuple(int(b) for b in kv_ladder)
+        self.kv_weight = float(kv_weight)
+        self.b_emb = b_emb
+        self.seq_bucket_base = int(seq_bucket_base)
+        self._axes = model.logical_axes()
+        self.lam = float(lam) if lam is not None \
+            else fit_lambda(params, self.split)
+        self.lam_kv = float(lam_kv) if lam_kv is not None \
+            else fit_kv_lambda(model, params)
+        self.codesign_cache = codesign_cache if codesign_cache is not None \
+            else CodesignCache()
+        self.compile_cache = compile_cache if compile_cache is not None \
+            else CompiledForwardCache()
+        self._own_hits = self._own_misses = 0
+        self._own_compile_hits = self._own_compile_misses = 0
+        self._layer_stats: Optional[mp.LayerStats] = None
+        self._weights: Dict[tuple, Any] = {}
+        self._classes: Dict[str, _ClassState] = {}
+        self._groups: Dict[tuple, _Group] = {}
+        self._rr: List[tuple] = []          # round-robin group order
+        self._queue: List[DecodeRequest] = []
+        self._on_token: Dict[int, Optional[Callable]] = {}
+        self._next_rid = 0
+        self._clock = 0.0
+        self._energy = 0.0
+        self._prefills = 0
+        self._rounds = 0
+        self._served = 0
+        self._cancelled = 0
+        self._tokens_out = 0
+        self._kv_bytes = 0
+        self._kv_bytes_full = 0
+        self._class_lat: Dict[str, Dict[str, list]] = {}
+        for c in classes:
+            if auto:
+                self._resolve_class(c)
+            else:
+                self._classes[c.name] = None  # placeholder until set below
+                self.set_operating_point(c.name, 8, 8, qos=c)
+            self._class_lat[c.name] = {"ttft": [], "itl": [], "tokens": []}
+
+    # ------------------------------------------------------------------
+    # operating points
+    # ------------------------------------------------------------------
+    def flop_split(self, tokens: int):
+        """(agent_flops, server_flops) for ``tokens`` positions —
+        ``CoInferenceEngine.flop_split``'s exact accounting."""
+        per_layer = self.cfg.active_param_count() / max(self.cfg.n_layers, 1)
+        n_agent = 2.0 * per_layer * self.split * tokens
+        n_server = 2.0 * per_layer * (self.cfg.n_layers - self.split) \
+            * tokens
+        return n_agent, n_server
+
+    def layer_stats(self) -> mp.LayerStats:
+        if self._layer_stats is None:
+            self._layer_stats = mp.decoder_layer_stats(self.params,
+                                                       self.split)
+        return self._layer_stats
+
+    def _resolve_class(self, c: QosClass) -> None:
+        b_max = int(self.sysp.b_full)
+        h0, m0 = self.codesign_cache.hits, self.codesign_cache.misses
+        if self.mixed_precision:
+            sol = self.codesign_cache.solve_decode_mixed(
+                self.layer_stats(), self.lam_kv, self.sysp, c, b_max,
+                b_emb=self.b_emb, kv_ladder=self.kv_ladder,
+                kv_weight=self.kv_weight)
+        else:
+            sol = self.codesign_cache.solve_decode(
+                self.lam, self.lam_kv, self.sysp, c, b_max,
+                b_emb=self.b_emb, kv_ladder=self.kv_ladder,
+                kv_weight=self.kv_weight)
+        self._own_hits += self.codesign_cache.hits - h0
+        self._own_misses += self.codesign_cache.misses - m0
+        if sol is None:
+            raise ValueError(
+                f"QoS class {c.name!r} (T0={c.t0}, E0={c.e0}) is "
+                "infeasible at every KV-cache bit-width "
+                f"{self.kv_ladder}")
+        target = mp.plan_from_bits(sol.inner.bits) \
+            if self.mixed_precision else sol.b_hat
+        self._classes[c.name] = None
+        self.set_operating_point(c.name, target, sol.b_kv,
+                                 f=sol.f, f_server=sol.f_server,
+                                 qos=c, solution=sol)
+
+    def set_operating_point(self, qos_name: str, target, b_kv: int, *,
+                            f: Optional[float] = None,
+                            f_server: Optional[float] = None,
+                            qos: Optional[QosClass] = None,
+                            solution=None) -> None:
+        """Pin a class's (weights bit target, b_kv, frequencies).
+
+        ``target`` is a uniform b̂ (int) or a :class:`QuantPlan` over the
+        agent partition.  Must be called before the class's first
+        admission — live slots hold caches produced under the previous
+        weights.  Materialized weight trees are memoized on the plan
+        key, so classes sharing a plan share one tree.
+        """
+        if qos is None:
+            prev = self._classes.get(qos_name)
+            if prev is None:
+                raise KeyError(f"unknown QoS class {qos_name!r}")
+            qos = prev.qos
+        b_kv = int(b_kv)
+        if b_kv < 2:
+            raise ValueError(f"b_kv={b_kv} below the 2-bit floor")
+        if isinstance(target, QuantPlan):
+            plan_key = target.key()
+            b_eff = float(target.mean_bits(self.split))
+            b_hat = int(round(b_eff))
+            plan_bits = tuple(target.layer_bit_list(self.split))
+            qcfg: Any = target
+        else:
+            b_hat = int(target)
+            b_eff = float(b_hat)
+            plan_key = ("uniform", b_hat)
+            plan_bits = ()
+            qcfg = QuantConfig(bits=b_hat, scheme="uniform",
+                               granularity="per-channel")
+        if plan_key not in self._weights:
+            self._weights[plan_key] = fake_quantize_agent(
+                self.params, self._axes, self.cfg, qcfg, ste=False)
+        self._classes[qos_name] = _ClassState(
+            qos=qos, b_hat=b_hat, b_eff=b_eff, b_kv=b_kv,
+            f=float(f) if f is not None else self.sysp.f_max,
+            f_server=float(f_server) if f_server is not None
+            else self.sysp.f_server_max,
+            plan_key=plan_key, plan_bits=plan_bits, solution=solution)
+
+    def solution_for(self, qos_name: str):
+        """The class's decode codesign solution (None when pinned)."""
+        return self._classes[qos_name].solution
+
+    def b_kv_for(self, qos_name: str) -> int:
+        return self._classes[qos_name].b_kv
+
+    def class_params(self, qos_name: str):
+        """The class's materialized (fake-quantized) weight tree — what
+        the sequential reference must decode with for parity."""
+        return self._weights[self._classes[qos_name].plan_key]
+
+    # ------------------------------------------------------------------
+    # executables
+    # ------------------------------------------------------------------
+    def _cached(self, key: tuple, build: Callable):
+        cc = self.compile_cache
+        h0, m0 = cc.hits, cc.misses
+        exe = cc.get(key, build)
+        self._own_compile_hits += cc.hits - h0
+        self._own_compile_misses += cc.misses - m0
+        return exe
+
+    def _prefill_exe(self, c: _ClassState, s_bucket: int):
+        return self._cached(
+            ("decode-prefill", self.cfg, s_bucket, c.b_kv),
+            lambda: _compile_prefill(self.model, self.params, c.b_kv,
+                                     s_bucket))
+
+    def _decode_exe(self, c: _ClassState, t_bucket: int):
+        return self._cached(
+            ("decode-step", self.cfg, self.max_batch, t_bucket, c.b_kv),
+            lambda: _compile_decode(self.model, self.params, c.b_kv,
+                                    self.max_batch, t_bucket))
+
+    def warmup(self, max_prompt: int, max_new: Optional[int] = None) -> int:
+        """Precompile every reachable (bucket, b_kv) variant; returns the
+        number of XLA compiles this triggered.  After a warmup covering
+        the traffic's prompt/generation bounds, steady-state serving
+        never compiles (asserted by tests and ``benchmarks/decode.py``)."""
+        m0 = self._own_compile_misses
+        mn = int(max_new) if max_new is not None else self.max_new_tokens
+        for c in self._classes.values():
+            for s in seq_ladder(max_prompt, self.seq_bucket_base):
+                self._prefill_exe(c, s)
+            for t in seq_ladder(max_prompt + mn, self.seq_bucket_base):
+                self._decode_exe(c, t)
+        return self._own_compile_misses - m0
+
+    # ------------------------------------------------------------------
+    # queue API
+    # ------------------------------------------------------------------
+    def submit(self, tokens, qos: str,
+               max_new_tokens: Optional[int] = None,
+               arrival_s: Optional[float] = None,
+               on_token: Optional[Callable] = None) -> int:
+        """Queue a prompt; returns its request id.
+
+        ``on_token(request_id, token, t_s)`` streams each generated
+        token at its virtual emission time."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if toks.size == 0:
+            raise ValueError("empty prompt")
+        if qos not in self._classes:
+            raise KeyError(f"unknown QoS class {qos!r}")
+        m = int(max_new_tokens) if max_new_tokens is not None \
+            else self.max_new_tokens
+        if m < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        rid = self._next_rid
+        self._next_rid += 1
+        arr = float(arrival_s) if arrival_s is not None else self._clock
+        self._queue.append(DecodeRequest(
+            request_id=rid, tokens=toks, qos=qos, max_new_tokens=m,
+            arrival_s=arr))
+        self._on_token[rid] = on_token
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(g.active_count() for g in self._groups.values())
+
+    @property
+    def clock_s(self) -> float:
+        return self._clock
+
+    def request_bucket(self, req: DecodeRequest) -> int:
+        """A request's cache bucket — a pure function of its OWN prompt
+        length and generation budget (never of its batch-mates), which
+        is what makes batched and sequential reductions shape-identical
+        and therefore bitwise comparable."""
+        return int(seq_bucket(req.tokens.size + req.max_new_tokens,
+                              self.seq_bucket_base))
+
+    def cancel(self, request_id: int) -> Optional[DecodeResponse]:
+        """Retire a request mid-decode (or drop it from the queue).
+
+        Frees the slot immediately — the next admission reuses it —
+        and returns the partial response; None if the id is unknown or
+        already retired."""
+        for i, r in enumerate(self._queue):
+            if r.request_id == request_id:
+                del self._queue[i]
+                self._cancelled += 1
+                self._on_token.pop(request_id, None)
+                return DecodeResponse(
+                    request_id=request_id, qos=r.qos,
+                    tokens=np.zeros((0,), np.int32),
+                    prompt_len=r.tokens.size,
+                    b_kv=self._classes[r.qos].b_kv,
+                    ttft_s=float("nan"), itl_mean_s=0.0,
+                    finished_s=self._clock, cancelled=True)
+        for g in self._groups.values():
+            for i, act in enumerate(g.slots):
+                if act is not None and act.req.request_id == request_id:
+                    return self._retire(g, i, cancelled=True)
+        return None
+
+    # ------------------------------------------------------------------
+    # the decode loop
+    # ------------------------------------------------------------------
+    def step(self) -> List[DecodeResponse]:
+        """One engine round: admit what the policy allows, then run one
+        decode step for the next non-empty slot block (round-robin).
+        Returns the requests that retired during the round."""
+        out: List[DecodeResponse] = []
+        if self.in_flight == 0 and self._queue:
+            nxt = min(r.arrival_s for r in self._queue)
+            if nxt > self._clock:
+                self._clock = nxt         # fast-forward an idle engine
+        self._admit(out)
+        g = self._next_group()
+        if g is not None:
+            self._decode_round(g, out)
+        return out
+
+    def drain(self) -> List[DecodeResponse]:
+        out: List[DecodeResponse] = []
+        while self._queue or self.in_flight:
+            out.extend(self.step())
+        return out
+
+    def _group_for(self, req: DecodeRequest) -> _Group:
+        t = self.request_bucket(req)
+        key = (req.qos, t)
+        if key not in self._groups:
+            self._groups[key] = _Group(self.cfg, req.qos, t,
+                                       self.max_batch,
+                                       self._classes[req.qos].b_kv)
+            self._rr.append(key)
+        return self._groups[key]
+
+    def _admit(self, out: List[DecodeResponse]) -> None:
+        admitted = True
+        while admitted:
+            admitted = False
+            for qi, req in enumerate(self._queue):
+                if req.arrival_s > self._clock:
+                    continue
+                g = self._group_for(req)
+                if self.admission == "barrier" and not g.barrier_open:
+                    continue
+                slot = g.free_slot()
+                if slot is None:
+                    continue
+                del self._queue[qi]
+                self._prefill_into(g, slot, req, out)
+                admitted = True
+                break
+        if self.admission == "barrier":
+            for g in self._groups.values():
+                if g.active_count() > 0:
+                    g.barrier_open = False
+
+    def _prefill_into(self, g: _Group, slot: int, req: DecodeRequest,
+                      out: List[DecodeResponse]) -> None:
+        c = self._classes[req.qos]
+        p_len = req.tokens.size
+        s_bucket = int(seq_bucket(p_len, self.seq_bucket_base))
+        padded = np.zeros((1, s_bucket), np.int32)
+        padded[0, :p_len] = req.tokens
+        exe = self._prefill_exe(c, s_bucket)
+        tok0, kq, vq, ks, vs = exe(
+            self._weights[c.plan_key], jnp.asarray(padded),
+            jnp.asarray([p_len - 1], jnp.int32))
+        g.k_codes[:, slot, :s_bucket] = np.asarray(kq)[:, 0]
+        g.v_codes[:, slot, :s_bucket] = np.asarray(vq)[:, 0]
+        g.k_scales[:, slot, :s_bucket] = np.asarray(ks)[:, 0]
+        g.v_scales[:, slot, :s_bucket] = np.asarray(vs)[:, 0]
+        g.pos[slot] = p_len
+        g.tok[slot] = int(np.asarray(tok0)[0])
+        # bill the prefill at its bucketed workload, sequentially on the
+        # virtual clock (prefills occupy the same accelerator)
+        t_pre, e_pre = self._prefill_cost(c, s_bucket)
+        self._clock += t_pre
+        self._energy += e_pre
+        self._prefills += 1
+        shape = (self.cfg.n_layers, 1, g.t_bucket, self.cfg.n_kv_heads,
+                 self.cfg.head_dim)
+        self._kv_bytes += 2 * kv_cache_bytes(shape, c.b_kv)
+        self._kv_bytes_full += int(2 * np.prod(shape)
+                                   * self.sysp.b_full / 8.0)
+        act = _Active(req=req, generated=[int(g.tok[slot])],
+                      admitted_s=self._clock,
+                      ttft_s=self._clock - req.arrival_s,
+                      last_emit_s=self._clock, itls=[],
+                      on_token=self._on_token.pop(req.request_id, None))
+        g.slots[slot] = act
+        if act.on_token is not None:
+            act.on_token(req.request_id, int(g.tok[slot]), self._clock)
+        if len(act.generated) >= req.max_new_tokens:
+            out.append(self._retire(g, slot))
+
+    def _next_group(self) -> Optional[_Group]:
+        for _ in range(len(self._rr)):
+            key = self._rr.pop(0)
+            self._rr.append(key)
+            g = self._groups[key]
+            if g.active_count() > 0:
+                return g
+        return None
+
+    def _decode_round(self, g: _Group, out: List[DecodeResponse]) -> None:
+        c = self._classes[g.qos_name]
+        exe = self._decode_exe(c, g.t_bucket)
+        nxt, kc, vc, ks, vs = exe(
+            self._weights[c.plan_key], jnp.asarray(g.k_codes),
+            jnp.asarray(g.v_codes), jnp.asarray(g.k_scales),
+            jnp.asarray(g.v_scales), jnp.asarray(g.tok[:, None]),
+            jnp.asarray(g.pos))
+        # np.array (not asarray): device outputs come back as read-only
+        # views, and admissions write prefill blocks into these buffers
+        g.k_codes = np.array(kc)
+        g.v_codes = np.array(vc)
+        g.k_scales = np.array(ks)
+        g.v_scales = np.array(vs)
+        nxt = np.asarray(nxt)
+        t_round, e_round = self._round_cost(c, g)
+        self._clock += t_round
+        self._energy += e_round
+        self._rounds += 1
+        for i, act in enumerate(g.slots):
+            if act is None:
+                continue
+            g.pos[i] += 1
+            g.tok[i] = int(nxt[i])
+            act.generated.append(int(nxt[i]))
+            act.itls.append(self._clock - act.last_emit_s)
+            act.last_emit_s = self._clock
+            if act.on_token is not None:
+                act.on_token(act.req.request_id, int(nxt[i]), self._clock)
+            if len(act.generated) >= act.req.max_new_tokens:
+                out.append(self._retire(g, i))
+
+    def _retire(self, g: _Group, slot: int,
+                cancelled: bool = False) -> DecodeResponse:
+        act = g.slots[slot]
+        g.slots[slot] = None
+        if g.active_count() == 0:
+            g.barrier_open = True
+        c = self._classes[act.req.qos]
+        itl = float(np.mean(act.itls)) if act.itls else 0.0
+        if cancelled:
+            self._cancelled += 1
+        else:
+            self._served += 1
+            lat = self._class_lat[act.req.qos]
+            lat["ttft"].append(act.ttft_s)
+            lat["itl"].extend(act.itls)
+            lat["tokens"].append(len(act.generated))
+        self._tokens_out += len(act.generated)
+        return DecodeResponse(
+            request_id=act.req.request_id, qos=act.req.qos,
+            tokens=np.asarray(act.generated, np.int32),
+            prompt_len=act.req.tokens.size, b_kv=c.b_kv,
+            ttft_s=act.ttft_s, itl_mean_s=itl, finished_s=self._clock,
+            cancelled=cancelled)
+
+    # ------------------------------------------------------------------
+    # billing
+    # ------------------------------------------------------------------
+    def _prefill_cost(self, c: _ClassState, s_bucket: int):
+        n_a, n_s = self.flop_split(s_bucket)
+        p = dataclasses.replace(self.sysp, n_flop_agent=n_a,
+                                n_flop_server=n_s)
+        t = float(agent_delay(c.b_eff, c.f, p)) \
+            + float(server_delay(c.f_server, p))
+        e = float(agent_energy(c.b_eff, c.f, p)) \
+            + float(server_energy(c.f_server, p))
+        return t, e
+
+    def _round_cost(self, c: _ClassState, g: _Group):
+        """One decode round over the FULL slot block: all ``max_batch``
+        rows and the whole [L, B, T] cache read at b_kv are billed
+        whether or not every slot is live — padding is compute/traffic
+        the hardware really runs, which is exactly the waste continuous
+        admission exists to avoid."""
+        n_a, n_s = self.flop_split(self.max_batch)
+        kv_full = 2.0 * self.cfg.n_layers * self.max_batch * g.t_bucket \
+            * self.cfg.n_kv_heads * self.cfg.head_dim \
+            * (self.sysp.b_full / 8.0)
+        p = dataclasses.replace(self.sysp, n_flop_agent=n_a,
+                                n_flop_server=n_s, kv_bytes_full=kv_full)
+        t = float(agent_delay(c.b_eff, c.f, p)) \
+            + float(server_delay(c.f_server, p)) \
+            + float(kv_delay(c.b_kv, p))
+        e = float(agent_energy(c.b_eff, c.f, p)) \
+            + float(server_energy(c.f_server, p)) \
+            + float(kv_energy(c.b_kv, p))
+        return t, e
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+    def report(self) -> DecodeReport:
+        classes = []
+        for name, c in self._classes.items():
+            lat = self._class_lat[name]
+            classes.append(ClassDecodeStats(
+                qos=name, b_hat=c.b_hat, b_kv=c.b_kv,
+                requests=len(lat["ttft"]),
+                tokens=int(sum(lat["tokens"])),
+                ttft_mean_s=float(np.mean(lat["ttft"]))
+                if lat["ttft"] else 0.0,
+                ttft_max_s=float(np.max(lat["ttft"]))
+                if lat["ttft"] else 0.0,
+                itl_mean_s=float(np.mean(lat["itl"]))
+                if lat["itl"] else 0.0,
+                plan_bits=c.plan_bits))
+        clock = max(self._clock, 1e-12)
+        return DecodeReport(
+            requests_served=self._served, cancelled=self._cancelled,
+            tokens_generated=self._tokens_out, prefills=self._prefills,
+            decode_rounds=self._rounds, total_delay_s=self._clock,
+            total_energy_j=self._energy,
+            throughput_tps=self._tokens_out / clock,
+            throughput_rps=self._served / clock,
+            admission=self.admission, classes=tuple(classes),
+            kv_bytes=self._kv_bytes, kv_bytes_full=self._kv_bytes_full,
+            codesign_hits=self._own_hits,
+            codesign_misses=self._own_misses,
+            compile_hits=self._own_compile_hits,
+            compile_misses=self._own_compile_misses,
+            compiled_variants=self.compile_cache.compiled_variants)
+
+
+# ---------------------------------------------------------------------------
+# the non-batched sequential reference
+# ---------------------------------------------------------------------------
+
+def greedy_decode_reference(model, weights, tokens, max_new_tokens: int, *,
+                            b_kv: int,
+                            seq_bucket_base: int = DEFAULT_SEQ_BASE,
+                            reserve_tokens: Optional[int] = None,
+                            compile_cache: Optional[
+                                CompiledForwardCache] = None,
+                            state: Optional[dict] = None,
+                            return_state: bool = False):
+    """One request, batch width 1, one token at a time — the parity oracle.
+
+    Decodes ``max_new_tokens`` greedy tokens from ``tokens`` under the
+    same bucketing, quantize-on-write cache, and traced step functions
+    as :class:`DecodeEngine`; the engine must reproduce its output
+    token-for-token at any batch width and admission order.
+
+    ``reserve_tokens`` fixes the cache bucket from a larger planned
+    generation budget (``T = seq_bucket(prompt + reserve)``) so a
+    decode can be split across calls: pass ``return_state=True``,
+    serialize the returned state dict (plain numpy arrays), and resume
+    by passing it back as ``state`` — the continuation is bitwise the
+    uninterrupted run, which is how decode state survives an elastic
+    re-mesh (``tests/test_elastic.py``).
+    """
+    cfg = model.cfg
+    cache = compile_cache if compile_cache is not None \
+        else CompiledForwardCache()
+    out: List[int] = []
+    if state is None:
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        p_len = toks.size
+        if p_len == 0:
+            raise ValueError("empty prompt")
+        t_bucket = int(seq_bucket(
+            p_len + (reserve_tokens if reserve_tokens is not None
+                     else max_new_tokens), seq_bucket_base))
+        s_bucket = int(seq_bucket(p_len, seq_bucket_base))
+        padded = np.zeros((1, s_bucket), np.int32)
+        padded[0, :p_len] = toks
+        exe = cache.get(
+            ("decode-prefill", cfg, s_bucket, b_kv),
+            lambda: _compile_prefill(model, weights, b_kv, s_bucket))
+        tok0, kq, vq, ks, vs = exe(weights, jnp.asarray(padded),
+                                   jnp.asarray([p_len - 1], jnp.int32))
+        cont = _container_dtype(cfg, b_kv)
+        shape = (cfg.n_layers, 1, t_bucket, cfg.n_kv_heads, cfg.head_dim)
+        k_codes = np.zeros(shape, cont)
+        v_codes = np.zeros(shape, cont)
+        k_scales = np.ones(shape[:-1], np.float32)
+        v_scales = np.ones(shape[:-1], np.float32)
+        k_codes[:, :, :s_bucket] = np.asarray(kq)
+        v_codes[:, :, :s_bucket] = np.asarray(vq)
+        k_scales[:, :, :s_bucket] = np.asarray(ks)
+        v_scales[:, :, :s_bucket] = np.asarray(vs)
+        pos = p_len
+        last = int(np.asarray(tok0)[0])
+        out.append(last)
+        remaining = max_new_tokens - 1
+    else:
+        k_codes = np.asarray(state["k_codes"])
+        v_codes = np.asarray(state["v_codes"])
+        k_scales = np.asarray(state["k_scales"])
+        v_scales = np.asarray(state["v_scales"])
+        pos = int(state["pos"])
+        last = int(state["last_token"])
+        t_bucket = int(state["t_bucket"])
+        remaining = max_new_tokens
+    for _ in range(remaining):
+        exe = cache.get(
+            ("decode-step", cfg, 1, t_bucket, b_kv),
+            lambda: _compile_decode(model, weights, b_kv, 1, t_bucket))
+        nxt, kc, vc, ks_, vs_ = exe(
+            weights, jnp.asarray(k_codes), jnp.asarray(v_codes),
+            jnp.asarray(k_scales), jnp.asarray(v_scales),
+            jnp.asarray([[last]], jnp.int32),
+            jnp.asarray([pos], jnp.int32))
+        k_codes = np.asarray(kc)
+        v_codes = np.asarray(vc)
+        k_scales = np.asarray(ks_)
+        v_scales = np.asarray(vs_)
+        pos += 1
+        last = int(np.asarray(nxt)[0])
+        out.append(last)
+    result = np.asarray(out, np.int32)
+    if return_state:
+        return result, {"k_codes": k_codes, "v_codes": v_codes,
+                        "k_scales": k_scales, "v_scales": v_scales,
+                        "pos": np.int32(pos), "last_token": np.int32(last),
+                        "t_bucket": np.int32(t_bucket)}
+    return result

@@ -272,6 +272,53 @@ class CodesignCache:
                                               b_max=b_max, b_emb=b_emb)
         return self._store[k]
 
+    def solve_decode(self, lam: float, lam_kv: float, sysp: SystemParams,
+                     qos: QosClass, b_max: int,
+                     b_emb: Optional[int] = None,
+                     kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                     kv_weight: float = 1.0,
+                     env_key: Optional[tuple] = None
+                     ) -> Optional[cd.DecodeSolution]:
+        """Memoized joint (b̂, f, f̃, b_kv) decode solve (DESIGN.md §12).
+
+        Keyed alongside :meth:`solve`'s entries — same cache, disjoint
+        "kv"-tagged keyspace carrying the cache statistic λ_kv and the
+        container ladder next to ``b_emb`` — so decode and prefill
+        engines share one memoizer."""
+        k = ("kv", round(float(lam), 12), round(float(lam_kv), 12), sysp,
+             float(qos.t0), float(qos.e0), int(b_max), b_emb,
+             tuple(int(b) for b in kv_ladder), float(kv_weight), env_key)
+        if k in self._store:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._store[k] = cd.solve_decode(
+                lam, lam_kv, sysp, qos.t0, qos.e0, b_max=b_max,
+                b_emb=b_emb, kv_ladder=kv_ladder, kv_weight=kv_weight)
+        return self._store[k]
+
+    def solve_decode_mixed(self, stats: "mp.LayerStats", lam_kv: float,
+                           sysp: SystemParams, qos: QosClass, b_max: int,
+                           b_emb: Optional[int] = None,
+                           kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                           kv_weight: float = 1.0,
+                           env_key: Optional[tuple] = None
+                           ) -> Optional[mp.MixedDecodeSolution]:
+        """Memoized per-layer allocation + b_kv (the decode counterpart
+        of :meth:`solve_mixed`, keyed on the layer statistics plus the
+        cache inputs)."""
+        k = ("kv-mixed", stats.key(), round(float(lam_kv), 12), sysp,
+             float(qos.t0), float(qos.e0), int(b_max), b_emb,
+             tuple(int(b) for b in kv_ladder), float(kv_weight), env_key)
+        if k in self._store:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._store[k] = mp.allocate_bits_decode(
+                stats, lam_kv, sysp, qos.t0, qos.e0, b_max=b_max,
+                b_emb=b_emb, kv_ladder=kv_ladder, kv_weight=kv_weight)
+        return self._store[k]
+
     def __len__(self) -> int:
         return len(self._store)
 

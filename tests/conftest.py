@@ -1,0 +1,21 @@
+"""Per-module JAX cache hygiene for the tier-1 suite.
+
+The suite compiles hundreds of XLA executables in one process (every
+engine test re-jits its ladder of shape buckets).  Left to accumulate,
+that state has segfaulted XLA's compiler late in long single-process
+runs — deterministically in whichever test happens to compile next once
+the process is saturated, while the same test passes in a fresh
+process.  Dropping JAX's traced/compiled caches at module boundaries
+keeps the process young; AOT executables already held by live objects
+(CompiledForwardCache entries, module-scoped fixtures) stay valid, so
+this costs only re-jits across module boundaries, never correctness.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

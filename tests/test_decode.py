@@ -1,0 +1,246 @@
+"""Continuous-batching decode over a quantized KV cache (DESIGN.md §12):
+bitwise greedy-decode parity with the non-batched sequential reference
+across plans and b_kv rungs, the decode compile-count bound, and the
+engine's admission/retirement bookkeeping."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.core.quantization import QuantPlan
+from repro.kernels.bucketing import seq_ladder
+from repro.models.registry import build_model
+from repro.runtime import (CompiledForwardCache, DecodeEngine, QosClass,
+                           greedy_decode_reference)
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+QOS = QosClass("interactive", t0=3.5, e0=2.0)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qwen_split3():
+    cfg = dataclasses.replace(get_smoke("qwen2-0.5b"), split_layer=3)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    """One compile cache for the whole module: decode executables are
+    keyed on (cfg, bucket, b_kv, batch) — the quantized weight tree is a
+    call argument — so every test reuses the same step functions."""
+    return CompiledForwardCache()
+
+
+def _ragged_traffic(cfg, n, seed, max_prompt=20, max_new=6):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, max_prompt + 1)))
+        out.append((toks.astype(np.int32),
+                    int(rng.integers(1, max_new + 1)), 0.05 * i))
+    return out
+
+
+def _assert_parity(model, params, target, b_kv, cache, *, n=6,
+                   admission="continuous", max_batch=3):
+    """Continuous-batched greedy decode == the non-batched sequential
+    reference, token for token, for every request in a ragged stream."""
+    eng = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                       max_batch=max_batch, max_new_tokens=6,
+                       admission=admission, compile_cache=cache)
+    eng.set_operating_point(QOS.name, target, b_kv)
+    prompts = {}
+    for toks, n_new, t in _ragged_traffic(model.cfg, n, seed=3):
+        prompts[eng.submit(toks, QOS.name, max_new_tokens=n_new,
+                           arrival_s=t)] = (toks, n_new)
+    responses = eng.drain()
+    assert len(responses) == n
+    for r in responses:
+        toks, n_new = prompts[r.request_id]
+        assert len(r.tokens) == n_new
+        assert r.b_kv == b_kv
+        ref = greedy_decode_reference(model, eng.class_params(QOS.name),
+                                      toks, n_new, b_kv=b_kv,
+                                      compile_cache=cache)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: uniform-4 / uniform-8 x b_kv rungs, a mixed plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b_hat,b_kv", [(4, 4), (4, 8), (8, 4), (8, 8),
+                                        (8, 16)])
+def test_decode_parity_uniform(qwen, shared_cache, b_hat, b_kv):
+    _, model, params = qwen
+    _assert_parity(model, params, b_hat, b_kv, shared_cache)
+
+
+@pytest.mark.parametrize("bits,b_kv", [((4, 8, 12), 8), ((4, 4, 6), 4)])
+def test_decode_parity_mixed_plan(qwen_split3, bits, b_kv):
+    """Per-layer mixed plans change only the weight tree handed to the
+    shared step function — parity must survive them too."""
+    _, model, params = qwen_split3
+    plan = QuantPlan.from_layer_bits(list(bits))
+    _assert_parity(model, params, plan, b_kv, CompiledForwardCache())
+
+
+def test_decode_parity_barrier_policy(qwen, shared_cache):
+    """The FIFO-barrier baseline runs the same step functions — it must
+    be just as bitwise-exact (admission is scheduling, not numerics)."""
+    _, model, params = qwen
+    _assert_parity(model, params, 8, 8, shared_cache,
+                   admission="barrier")
+
+
+def test_decode_continuous_equals_barrier_tokens(qwen, shared_cache):
+    """Same stream under both admission policies: identical tokens per
+    request (the schedules differ; the numerics must not)."""
+    _, model, params = qwen
+    outs = {}
+    for admission in ("continuous", "barrier"):
+        eng = DecodeEngine(model, params, SYSP, classes=[QOS],
+                           auto=False, max_batch=3, max_new_tokens=6,
+                           admission=admission,
+                           compile_cache=shared_cache)
+        eng.set_operating_point(QOS.name, 8, 8)
+        rids = {}
+        for i, (toks, n_new, t) in enumerate(
+                _ragged_traffic(model.cfg, 7, seed=11)):
+            rids[eng.submit(toks, QOS.name, max_new_tokens=n_new,
+                            arrival_s=t)] = i
+        outs[admission] = {
+            rids[r.request_id]: np.asarray(r.tokens)
+            for r in eng.drain()}
+    assert outs["continuous"].keys() == outs["barrier"].keys()
+    for i in outs["continuous"]:
+        np.testing.assert_array_equal(outs["continuous"][i],
+                                      outs["barrier"][i])
+
+
+def test_decode_streaming_matches_response(qwen, shared_cache):
+    """on_token streams exactly the response's tokens, in order, at
+    non-decreasing virtual emission times."""
+    _, model, params = qwen
+    eng = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                       max_batch=2, max_new_tokens=5,
+                       compile_cache=shared_cache)
+    eng.set_operating_point(QOS.name, 8, 8)
+    seen = {}
+
+    def on_token(rid, tok, t_s):
+        seen.setdefault(rid, []).append((tok, t_s))
+
+    for toks, n_new, t in _ragged_traffic(model.cfg, 4, seed=5,
+                                          max_new=5):
+        eng.submit(toks, QOS.name, max_new_tokens=n_new, arrival_s=t,
+                   on_token=on_token)
+    for r in eng.drain():
+        toks = [t for t, _ in seen[r.request_id]]
+        times = [s for _, s in seen[r.request_id]]
+        np.testing.assert_array_equal(np.asarray(toks, np.int32),
+                                      np.asarray(r.tokens))
+        assert times == sorted(times)
+        assert times[-1] <= r.finished_s + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# compile-count bound + warmup (mirrors test_fastpath)
+# ---------------------------------------------------------------------------
+
+def test_decode_compile_count_bounded_and_warm_traffic_never_recompiles(
+        qwen):
+    cfg, model, params = qwen
+    cache = CompiledForwardCache()
+    classes = [QosClass("rt", t0=1.0, e0=1.0),
+               QosClass("ia", t0=3.0, e0=2.0)]
+    eng = DecodeEngine(model, params, SYSP, classes=classes, auto=False,
+                       max_batch=4, max_new_tokens=8,
+                       compile_cache=cache)
+    eng.set_operating_point("rt", 4, 4)
+    eng.set_operating_point("ia", 8, 8)
+    max_prompt = 40
+    warm = eng.warmup(max_prompt)
+    n_kv = len({eng.b_kv_for(c.name) for c in classes})
+    bound = (len(seq_ladder(max_prompt))
+             + len(seq_ladder(max_prompt + 8))) * n_kv
+    assert 0 < warm <= bound
+    miss0 = cache.misses
+
+    rng = np.random.default_rng(11)
+    for i in range(14):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, max_prompt + 1)))
+        eng.submit(toks, classes[i % 2].name,
+                   max_new_tokens=int(rng.integers(1, 9)),
+                   arrival_s=0.02 * i)
+    responses = eng.drain()
+    assert len(responses) == 14
+    assert cache.misses == miss0       # warm traffic never recompiles
+    assert len(cache) <= bound
+    rep = eng.report()
+    assert rep.compile_misses == cache.misses
+    assert rep.compiled_variants == len(cache)
+    assert rep.compile_hits > 0
+    assert rep.requests_served == 14
+    assert rep.tokens_generated == sum(len(r.tokens) for r in responses)
+
+
+def test_decode_shared_compile_cache_across_engines(qwen):
+    """Two decode engines sharing one cache: the second warmup compiles
+    nothing new (the executables are plan-independent)."""
+    _, model, params = qwen
+    cache = CompiledForwardCache()
+    a = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                     max_batch=4, max_new_tokens=8, compile_cache=cache)
+    a.set_operating_point(QOS.name, 8, 8)
+    n_a = a.warmup(32)
+    assert n_a == len(cache) > 0
+    b = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                     max_batch=4, max_new_tokens=8, compile_cache=cache)
+    b.set_operating_point(QOS.name, 4, 8)   # same b_kv -> same graphs
+    assert b.warmup(32) == 0
+
+
+# ---------------------------------------------------------------------------
+# construction + queue validation
+# ---------------------------------------------------------------------------
+
+def test_decode_engine_rejects_non_decoder_model():
+    class _NoCache:
+        pass
+
+    with pytest.raises(TypeError):
+        DecodeEngine(_NoCache(), {}, SYSP, classes=[QOS])
+
+
+def test_decode_engine_rejects_bad_args(qwen):
+    _, model, params = qwen
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                     admission="fifo")
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params, SYSP, classes=[], auto=False)
+    eng = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False)
+    with pytest.raises(KeyError):
+        eng.submit(np.ones(4, np.int32), "no-such-class")
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(0, np.int32), QOS.name)
+    with pytest.raises(ValueError):
+        eng.submit(np.ones(4, np.int32), QOS.name, max_new_tokens=0)

@@ -1,4 +1,5 @@
-"""Fault-tolerance: checkpoint/restart supervisor, stragglers, corruption."""
+"""Fault-tolerance: checkpoint/restart supervisor, stragglers, corruption,
+and the decode engine's mid-flight retirement paths."""
 
 import os
 import tempfile
@@ -9,12 +10,14 @@ import pytest
 
 from repro.checkpoint import CheckpointManager, available_steps, save_tree
 from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
 from repro.data import MarkovLMConfig, MarkovLMDataset, ShardedLoader
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model
 from repro.optim import AdamW
-from repro.runtime import (HostFailure, HostSet, StragglerMonitor,
-                           Supervisor, TrainConfig, Trainer)
+from repro.runtime import (DecodeEngine, HostFailure, HostSet, QosClass,
+                           StragglerMonitor, Supervisor, TrainConfig,
+                           Trainer, greedy_decode_reference)
 
 
 class _Session:
@@ -106,6 +109,84 @@ def test_straggler_monitor_quiet_when_uniform():
         for host in range(4):
             mon.report(host, 1.0 + 0.01 * host)
     assert mon.stragglers() == []
+
+
+def _decode_engine(max_batch=2, max_new=6):
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+    eng = DecodeEngine(model, params, sysp,
+                       classes=[QosClass("c", t0=3.0, e0=2.0)],
+                       auto=False, max_batch=max_batch,
+                       max_new_tokens=max_new)
+    eng.set_operating_point("c", 8, 8)
+    return model, eng
+
+
+def test_decode_request_retired_mid_decode():
+    """cancel() mid-flight frees the slot for the queue, and the
+    survivors still decode bitwise what they would have alone — a dead
+    request must not perturb its former batch-mates (DESIGN.md §12)."""
+    model, eng = _decode_engine(max_batch=2)
+    rng = np.random.default_rng(5)
+    prompts = {}
+    for i in range(3):
+        # prompt+budget all snap to one cache bucket -> one slot group
+        toks = rng.integers(0, model.cfg.vocab_size, size=20 + i)
+        prompts[eng.submit(toks, "c", arrival_s=0.0)] = toks
+    rids = list(prompts)
+    # two in flight, one queued; kill an in-flight request mid-decode
+    for _ in range(3):
+        eng.step()
+    assert eng.in_flight == 2
+    dead = eng.cancel(rids[0])
+    assert dead is not None and dead.cancelled
+    assert dead.request_id == rids[0]
+    assert len(dead.tokens) < eng.max_new_tokens
+    assert eng.cancel(rids[0]) is None      # already retired
+    survivors = {r.request_id: r for r in eng.drain()}
+    assert set(survivors) == set(rids[1:])
+    for rid, r in survivors.items():
+        assert not r.cancelled
+        ref = greedy_decode_reference(model, eng.class_params("c"),
+                                      prompts[rid], len(r.tokens),
+                                      b_kv=8,
+                                      compile_cache=eng.compile_cache)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+    # the cancelled prefix it did emit is also the reference's prefix
+    if len(dead.tokens):
+        ref = greedy_decode_reference(model, eng.class_params("c"),
+                                      prompts[rids[0]], len(dead.tokens),
+                                      b_kv=8,
+                                      compile_cache=eng.compile_cache)
+        np.testing.assert_array_equal(np.asarray(dead.tokens), ref)
+    rep = eng.report()
+    assert rep.cancelled == 1
+    assert rep.requests_served == 2
+
+
+def test_decode_cancel_queued_request_never_admits():
+    model, eng = _decode_engine(max_batch=2)
+    rid = eng.submit(np.arange(1, 9, dtype=np.int32), "c")
+    dead = eng.cancel(rid)
+    assert dead.cancelled and len(dead.tokens) == 0
+    assert eng.pending == 0 and eng.in_flight == 0
+    assert eng.drain() == []
+    assert eng.report().cancelled == 1
+
+
+def test_decode_step_on_empty_admission_queue():
+    """step()/drain() on an idle engine is a no-op, not a crash — the
+    serving loop may tick with nothing admitted."""
+    _, eng = _decode_engine()
+    assert eng.step() == []
+    assert eng.drain() == []
+    assert eng.pending == 0 and eng.in_flight == 0
+    rep = eng.report()
+    assert rep.requests_served == 0
+    assert rep.decode_rounds == 0
+    assert rep.total_delay_s == 0.0
 
 
 def test_corrupt_checkpoint_falls_back():

@@ -1,0 +1,185 @@
+"""Property-based invariants for the serving-shape ladders
+(``kernels.bucketing``) and the quantization pack/unpack round-trips
+(``kernels.quantize`` / ``kernels.ref`` / ``core.quantization``) — the
+two pieces of pure arithmetic the decode engine's compile-count bound
+and KV-cache parity rest on (DESIGN.md §10, §12).
+
+Runs under hypothesis when installed; otherwise the ``@given`` tests
+skip (see ``_hypothesis_compat``) and the deterministic spot checks
+below still run everywhere.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
+
+from repro.core.quantization import (pack_int4, unpack_int4, wire_bytes)
+from repro.kernels import ref
+from repro.kernels.bucketing import (DEFAULT_SEQ_BASE, next_geometric,
+                                     row_bucket, seq_bucket, seq_ladder)
+from repro.kernels.quantize import (kv_cache_bytes, kv_dequantize,
+                                    kv_levels, kv_quantize)
+
+# ---------------------------------------------------------------------------
+# bucket-ladder invariants (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(s=st.integers(min_value=1, max_value=100_000))
+def test_seq_bucket_covers_and_is_idempotent(s):
+    b = seq_bucket(s)
+    assert b >= s                       # padding never truncates
+    assert seq_bucket(b) == b           # snapping is idempotent
+    # tight: the next rung down would not cover s (or s is below base)
+    assert b == DEFAULT_SEQ_BASE or b // 2 < s
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=st.integers(min_value=1, max_value=100_000),
+       b=st.integers(min_value=1, max_value=100_000))
+def test_seq_bucket_monotone(a, b):
+    lo, hi = min(a, b), max(a, b)
+    assert seq_bucket(lo) <= seq_bucket(hi)
+
+
+@settings(max_examples=100, deadline=None)
+@given(max_s=st.integers(min_value=1, max_value=100_000))
+def test_seq_ladder_geometric_and_covering(max_s):
+    ladder = seq_ladder(max_s)
+    assert ladder[0] == DEFAULT_SEQ_BASE
+    assert ladder[-1] == seq_bucket(max_s) >= max_s
+    for lo, hi in zip(ladder, ladder[1:]):
+        assert hi == 2 * lo             # strictly geometric, no gaps
+    # every length <= max_s snaps to a rung of this ladder: warmup over
+    # the ladder precompiles everything traffic can dispatch
+    assert all(seq_bucket(s) in ladder
+               for s in (1, max_s // 2 or 1, max_s))
+
+
+@settings(max_examples=100, deadline=None)
+@given(max_a=st.integers(min_value=1, max_value=10_000),
+       max_b=st.integers(min_value=1, max_value=10_000))
+def test_seq_ladder_prefix_stable(max_a, max_b):
+    """A longer horizon only appends rungs — it never reshuffles the
+    existing ones, so growing ``warmup()`` coverage never invalidates
+    already-compiled variants."""
+    lo, hi = sorted((max_a, max_b))
+    a, b = seq_ladder(lo), seq_ladder(hi)
+    assert b[:len(a)] == a
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(min_value=1, max_value=1_000_000),
+       base=st.integers(min_value=1, max_value=512),
+       ratio=st.integers(min_value=2, max_value=5))
+def test_next_geometric_minimal(n, base, ratio):
+    g = next_geometric(n, base, ratio)
+    assert g >= n and g >= base
+    assert g == base or g // ratio < n  # the next rung down is too small
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(min_value=1, max_value=100_000))
+def test_row_bucket_mxu_aligned(m):
+    b = row_bucket(m)
+    assert b >= m and b % 128 == 0
+    assert b == 128 or b // 2 < m
+
+
+def test_bucket_spot_checks():
+    # deterministic floor so the invariants are exercised even without
+    # hypothesis installed
+    assert seq_bucket(1) == 16 and seq_bucket(17) == 32
+    assert seq_ladder(48) == (16, 32, 64)
+    assert row_bucket(129) == 256
+    with pytest.raises(ValueError):
+        seq_bucket(0)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trips
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(min_value=1, max_value=8),
+       cols=st.integers(min_value=1, max_value=16),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pack_int4_round_trip(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, size=(rows, 2 * cols)).astype(np.int8)
+    out = np.asarray(unpack_int4(pack_int4(codes)))
+    np.testing.assert_array_equal(out, codes)
+    assert wire_bytes(codes.size, 4) == codes.size // 2
+
+
+@settings(max_examples=50, deadline=None)
+@given(k2=st.integers(min_value=1, max_value=16),
+       n=st.integers(min_value=1, max_value=16),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pack_int4_ref_round_trip(k2, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, size=(2 * k2, n)).astype(np.int8)
+    out = np.asarray(ref.unpack_int4_ref(ref.pack_int4_ref(codes)))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_pack_int4_rejects_odd_axis():
+    with pytest.raises(ValueError):
+        pack_int4(np.zeros((3, 5), np.int8))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]),
+       t=st.integers(min_value=1, max_value=6),
+       d=st.integers(min_value=1, max_value=8),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kv_quantize_round_trip_bounded(bits, t, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((t, d)).astype(np.float32) * 3.0
+    codes, scales = kv_quantize(x, bits)
+    codes, scales = np.asarray(codes), np.asarray(scales)
+    lv = kv_levels(bits)
+    assert codes.dtype == np.int8
+    assert np.abs(codes).max() <= lv
+    assert scales.shape == x.shape[:-1]
+    # symmetric uniform quantization: error is at most half a step per
+    # element (round-to-nearest), scale = absmax / levels per vector
+    dq = np.asarray(kv_dequantize(codes, scales))
+    np.testing.assert_allclose(dq, x, atol=float(scales.max()) / 2 + 1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.sampled_from([4, 8]),
+       d=st.integers(min_value=1, max_value=8))
+def test_kv_quantize_zero_vector_is_safe(bits, d):
+    x = np.zeros((3, d), np.float32)
+    codes, scales = kv_quantize(x, bits)
+    assert np.all(np.asarray(codes) == 0)
+    assert np.all(np.asarray(scales) == 1.0)    # no divide-by-zero scale
+    np.testing.assert_array_equal(np.asarray(kv_dequantize(codes, scales)),
+                                  x)
+
+
+def test_kv_quantize_spot_checks():
+    assert kv_levels(4) == 7 and kv_levels(8) == 127
+    x = np.array([[1.0, -2.0, 0.5, 2.0]], np.float32)
+    codes, scales = kv_quantize(x, 8)
+    assert float(np.asarray(scales)[0]) == pytest.approx(2.0 / 127)
+    np.testing.assert_allclose(np.asarray(kv_dequantize(codes, scales)),
+                               x, atol=2.0 / 127 / 2 + 1e-7)
+    # container accounting matches the wire format: packed int4, int8,
+    # raw float above the ladder
+    shape = (2, 3, 4, 5, 8)
+    n = int(np.prod(shape))
+    n_vec = n // shape[-1]
+    assert kv_cache_bytes(shape, 4) == (n + 1) // 2 + 4 * n_vec
+    assert kv_cache_bytes(shape, 8) == n + 4 * n_vec
+    assert kv_cache_bytes(shape, 16) == 2 * n

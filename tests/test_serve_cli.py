@@ -51,6 +51,34 @@ def test_unsupported_model_reason_accepts_decoder_family():
     # the compiled complaint is the more specific one and wins
     assert "--compiled" in serve.unsupported_model_reason(
         object(), "x", True)
+    # ... and --decode needs the KV-cache decode protocol on top
+    assert "--decode" in serve.unsupported_model_reason(
+        _Decoder(), "x", False, decode=True)
+
+
+@pytest.mark.parametrize("arch", ["seamless-m4t-large-v2", "xlstm-350m"])
+def test_decode_with_unsupported_arch_errors_cleanly(arch, capsys):
+    # encdec/hybrid archs define prefill/decode_step but not the dense
+    # [layers, batch, cache_seq, kv_heads, head_dim] KV cache the decode
+    # engine batches over (DESIGN.md §12) -> clean exit 2, no traceback
+    rc = serve.main(["--arch", arch, "--smoke", "--decode"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "--decode" in err and arch in err
+    assert "Traceback" not in err
+
+
+def test_decode_with_fcdnn_errors_cleanly(capsys):
+    # fcdnn-16 ships no ModelConfig at all (it is the distortion-
+    # benchmark toy); any serve invocation must fail one-line, not with
+    # a build_model traceback
+    rc = serve.main(["--arch", "fcdnn-16", "--smoke", "--decode"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "fcdnn-16" in err
+    assert "Traceback" not in err
 
 
 @pytest.mark.parametrize("payload", ["not json {", "{}",
