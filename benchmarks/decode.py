@@ -1,4 +1,5 @@
-"""Continuous-batching decode over a quantized KV cache (DESIGN.md §12).
+"""Continuous-batching decode over a device-resident quantized KV cache
+(DESIGN.md §12, §13).
 
 Measures, on the ``qwen2_0_5b`` smoke config:
 
@@ -7,7 +8,12 @@ Measures, on the ``qwen2_0_5b`` smoke config:
      generation budgets).  Both runs share the same compiled step
      functions — admission is purely a scheduling policy — so the
      modeled-throughput ratio is deterministic.  Acceptance: continuous
-     strictly beats the barrier on generated tokens/s.
+     strictly beats the barrier on generated tokens/s.  The headline
+     tok/s is wall-clock (the §13 fused multi-token chunks are a
+     real-time win); the virtual-clock numbers stay as ``*_model``.
+     The host<->device transfer volume per token is reported before
+     (host-resident cache, modeled) vs after (device-resident,
+     measured counters).
   2. bitwise greedy-decode parity: every continuous-batched response
      must equal, token for token, the non-batched sequential reference
      (``greedy_decode_reference``) decoding the same prompt alone under
@@ -30,14 +36,14 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import List
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.cost_model import SystemParams
-from repro.kernels.bucketing import seq_ladder
+from repro.kernels.bucketing import seq_bucket, seq_ladder
 from repro.models.registry import build_model
 from repro.runtime import (CompiledForwardCache, DecodeEngine, QosClass,
                            greedy_decode_reference)
@@ -52,9 +58,12 @@ SEQ = 24                 # max prompt length
 MAX_NEW = 12             # max generation budget
 MAX_BATCH = 4
 N_REQUESTS = 20
-# the throughput ratio is modeled (virtual clock), hence deterministic;
-# the slack only absorbs intentional re-tuning of the cost model
+# the modeled throughput ratio is virtual-clock deterministic; the slack
+# only absorbs intentional re-tuning of the cost model
 REGRESSION_TOLERANCE = 0.9
+# the headline tok/s is WALL-CLOCK (§13 device residency is a real-time
+# win, not a modeled one), so its floor absorbs machine jitter
+WALL_TOLERANCE = 0.5
 CLASSES = [
     QosClass("realtime", t0=1.2, e0=1.0),
     QosClass("interactive", t0=3.5, e0=2.0),
@@ -103,8 +112,10 @@ def serve(admission: str, model, params, sysp,
     for toks, qos, n_new, t in traffic(model.cfg):
         rid = eng.submit(toks, qos, max_new_tokens=n_new, arrival_s=t)
         prompts[rid] = toks
+    t0 = time.perf_counter()        # warmup excluded: steady-state only
     responses = eng.drain()
-    return eng, eng.report(), responses, prompts, warm
+    wall_s = time.perf_counter() - t0
+    return eng, eng.report(), responses, prompts, warm, wall_s
 
 
 def verify_parity(model, eng, responses, prompts,
@@ -132,35 +143,42 @@ def run() -> dict:
     print(f"arch={cfg.name} max_batch={MAX_BATCH} prompts<= {SEQ} "
           f"new<= {MAX_NEW} ({N_REQUESTS} ragged requests, smoke scale)")
 
-    reports, rows, parity, warm_by = {}, [], {}, {}
+    reports, rows, parity, warm_by, wall_by = {}, [], {}, {}, {}
     for admission in ("barrier", "continuous"):
-        eng, rep, responses, prompts, warm = serve(
+        eng, rep, responses, prompts, warm, wall_s = serve(
             admission, model, params, sysp, shared)
         reports[admission] = rep
         warm_by[admission] = warm
+        wall_by[admission] = wall_s
         parity[admission] = verify_parity(model, eng, responses, prompts,
                                           ref_cache)
         rows.append([admission, rep.decode_rounds,
+                     f"{rep.tokens_generated / max(wall_s, 1e-9):.1f}",
                      f"{rep.throughput_tps:.2f}",
                      f"{rep.throughput_rps:.2f}",
                      f"{rep.total_delay_s:.2f}s",
                      "yes" if parity[admission] else "NO"])
-    print("\nadmission policy on the same stream (modeled clock):")
-    table(["policy", "rounds", "tok/s", "req/s", "makespan", "parity"],
-          rows)
+    print("\nadmission policy on the same stream "
+          "(wall = measured, model = virtual clock):")
+    table(["policy", "steps", "tok/s wall", "tok/s model", "req/s model",
+           "makespan", "parity"], rows)
     for cs in reports["continuous"].classes:
         print(f"  [{cs.qos:12s}] b_hat={cs.b_hat} b_kv={cs.b_kv} "
               f"ttft={cs.ttft_mean_s * 1e3:7.1f}ms "
-              f"itl={cs.itl_mean_s * 1e3:6.1f}ms")
+              f"itl={cs.itl_mean_s * 1e3:6.1f}ms "
+              f"p50={cs.itl_p50_s * 1e3:6.1f}ms "
+              f"p95={cs.itl_p95_s * 1e3:6.1f}ms")
 
     # compile-count bound on the continuous engine: the shared cache saw
-    # warmup once; everything after must hit.  Bound = (prefill buckets
-    # + step buckets) x distinct b_kv rungs actually resolved.
+    # warmup once; everything after must hit.  Prefill executables are
+    # keyed on (prompt bucket, cache bucket) pairs (the fused slot
+    # scatter puts the cache shape in the graph); decode chunks on cache
+    # buckets alone.
     rep = reports["continuous"]
     b_kvs = sorted({cs.b_kv for cs in rep.classes})
-    n_pre = len(seq_ladder(SEQ))
-    n_step = len(seq_ladder(SEQ + MAX_NEW))
-    bound = (n_pre + n_step) * len(b_kvs)
+    t_rungs = seq_ladder(SEQ + MAX_NEW)
+    n_pairs = sum(1 for s in seq_ladder(SEQ) for t in t_rungs if t >= s)
+    bound = (n_pairs + len(t_rungs)) * len(b_kvs)
     cc = {
         "warmup_compiles": warm_by["barrier"],
         "warm_misses": rep.compile_misses,  # continuous ran second
@@ -169,10 +187,26 @@ def run() -> dict:
         "b_kv_rungs": b_kvs,
     }
     print(f"\ncompile-count bound: {cc['variants']} compiled variants "
-          f"(bound {bound} = ({n_pre} prefill + {n_step} step buckets) "
-          f"x {len(b_kvs)} b_kv rungs), {cc['warm_misses']} misses on "
-          "the second (warm) engine")
+          f"(bound {bound} = ({n_pairs} prefill pairs + {len(t_rungs)} "
+          f"chunk buckets) x {len(b_kvs)} b_kv rungs), "
+          f"{cc['warm_misses']} misses on the second (warm) engine")
 
+    # host<->device traffic per generated token: the PR-6 host-resident
+    # engine shipped the whole slot block's codes+scales BOTH ways every
+    # round (modeled below at the worst-case cache bucket); the device-
+    # resident engine ships tokens and scalars only (measured).
+    t_max = seq_bucket(SEQ + MAX_NEW)
+    blk = cfg.n_layers * MAX_BATCH * t_max * cfg.n_kv_heads
+    per_round = 2 * (2 * blk * cfg.head_dim + 2 * blk * 4) \
+        + 2 * MAX_BATCH * 4 + MAX_BATCH * 4
+    before_bpt = per_round / MAX_BATCH
+    after_bpt = (rep.h2d_bytes + rep.d2h_bytes) \
+        / max(rep.tokens_generated, 1)
+    print(f"transfer per token: {before_bpt:,.0f} B host-resident "
+          f"(modeled) -> {after_bpt:,.0f} B device-resident (measured, "
+          f"{rep.h2d_bytes:,d} h2d + {rep.d2h_bytes:,d} d2h)")
+
+    wall_tps = rep.tokens_generated / max(wall_by["continuous"], 1e-9)
     speedup = reports["continuous"].throughput_tps \
         / max(reports["barrier"].throughput_tps, 1e-12)
     kv_ratio = rep.kv_bytes / rep.kv_bytes_full if rep.kv_bytes_full \
@@ -185,11 +219,12 @@ def run() -> dict:
         "no_misses_after_warmup": cc["warm_misses"] == 0,
         "variants_within_bound": cc["variants"] <= cc["bound"],
         "kv_cache_compressed": kv_ratio < 1.0,
+        "transfer_bytes_collapsed": after_bpt < 0.01 * before_bpt,
     }
     ok = all(v for v in acceptance.values() if isinstance(v, bool))
     print(f"\nacceptance: {'PASS' if ok else 'FAIL'} "
-          f"(continuous {speedup:.2f}x barrier, kv cache "
-          f"{kv_ratio:.2f}x of full precision)")
+          f"({wall_tps:.1f} wall tok/s, continuous {speedup:.2f}x "
+          f"barrier modeled, kv cache {kv_ratio:.2f}x of full precision)")
     for k, v in acceptance.items():
         print(f"  {k}: {v}")
 
@@ -199,18 +234,28 @@ def run() -> dict:
         "seq": SEQ, "max_new": MAX_NEW, "requests": N_REQUESTS,
         "speedup": speedup,
         "kv_cache_ratio": kv_ratio,
-        "throughput": {k: {"tps": r.throughput_tps,
-                           "rps": r.throughput_rps,
+        # headline tps is measured wall-clock (§13); the virtual-clock
+        # numbers live on as *_model for the policy comparison
+        "throughput": {k: {"tps": r.tokens_generated
+                           / max(wall_by[k], 1e-9),
+                           "tps_model": r.throughput_tps,
+                           "rps_model": r.throughput_rps,
                            "rounds": r.decode_rounds}
                        for k, r in reports.items()},
+        "transfer": {"bytes_per_token_host_resident_model": before_bpt,
+                     "bytes_per_token_device_resident": after_bpt,
+                     "h2d_bytes": rep.h2d_bytes,
+                     "d2h_bytes": rep.d2h_bytes},
         "classes": [{"qos": cs.qos, "b_hat": cs.b_hat, "b_kv": cs.b_kv,
                      "ttft_mean_s": cs.ttft_mean_s,
-                     "itl_mean_s": cs.itl_mean_s}
+                     "itl_mean_s": cs.itl_mean_s,
+                     "itl_p50_s": cs.itl_p50_s,
+                     "itl_p95_s": cs.itl_p95_s}
                     for cs in rep.classes],
         "compile_count": cc,
         "acceptance": acceptance,
     }
-    regression = check_regression(speedup)
+    regression = check_regression(speedup, wall_tps)
     if regression:
         print(f"regression vs committed BENCH_decode.json: {regression}")
     out = write_json(results)
@@ -229,25 +274,37 @@ def _json_path() -> pathlib.Path:
         / "BENCH_decode.json"
 
 
-def check_regression(speedup: float):
+def check_regression(speedup: float, wall_tps: "float | None" = None):
     """Compare against the committed record; None = fine, else a message.
 
-    The ratio is virtual-clock deterministic, so the tolerance only
-    absorbs intentional cost-model re-tuning — a drop past it means the
-    continuous scheduler stopped refilling slots mid-flight."""
+    Two floors: the continuous/barrier *modeled* ratio is virtual-clock
+    deterministic, so its tolerance only absorbs intentional cost-model
+    re-tuning — a drop past it means the continuous scheduler stopped
+    refilling slots mid-flight.  The wall-clock tok/s floor is measured,
+    so its (looser) tolerance absorbs machine jitter — a drop past it
+    means the decode path fell off the fused device-resident executables
+    (e.g. back to per-token host round-trips)."""
     path = _json_path()
     if not path.exists():
         return None
     try:
-        old = float(json.loads(path.read_text(
-            encoding="utf-8"))["speedup"])
+        old = json.loads(path.read_text(encoding="utf-8"))
+        old_speedup = float(old["speedup"])
     except (KeyError, ValueError):
         return None
-    floor = REGRESSION_TOLERANCE * old
+    floor = REGRESSION_TOLERANCE * old_speedup
     if speedup < floor:
         return (f"continuous/barrier throughput ratio fell to "
-                f"{speedup:.3f}x (committed {old:.3f}x, "
+                f"{speedup:.3f}x (committed {old_speedup:.3f}x, "
                 f"floor {floor:.3f}x)")
+    try:
+        old_wall = float(old["throughput"]["continuous"]["tps"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if wall_tps is not None and wall_tps < WALL_TOLERANCE * old_wall:
+        return (f"wall-clock decode throughput fell to {wall_tps:.1f} "
+                f"tok/s (committed {old_wall:.1f}, floor "
+                f"{WALL_TOLERANCE * old_wall:.1f})")
     return None
 
 

@@ -36,6 +36,10 @@ Sections (paper artifact -> module):
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import pathlib
+import subprocess
 import sys
 import time
 
@@ -67,10 +71,68 @@ SECTIONS = {
 }
 
 
+# the one number per section worth tracking across commits: the first
+# of these keys present in the section's result dict lands in
+# BENCH_history.jsonl
+_METRIC_KEYS = ("speedup", "throughput_ratio", "ratio", "tps",
+                "throughput_tps", "acceptance_ok")
+
+
+def _git_sha() -> "str | None":
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent.parent,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except OSError:
+        return None
+
+
+def _key_metric(result) -> "tuple[str, object] | None":
+    if not isinstance(result, dict):
+        return None
+    for k in _METRIC_KEYS:
+        if k in result:
+            return k, result[k]
+    # one level down covers sections that nest (e.g. throughput tables)
+    for outer, v in result.items():
+        if isinstance(v, dict):
+            for k in _METRIC_KEYS:
+                if k in v:
+                    return f"{outer}.{k}", v[k]
+    return None
+
+
+def append_history(section: str, result, seconds: float,
+                   path: "pathlib.Path | None" = None) -> None:
+    """Append one line per section run to ``BENCH_history.jsonl`` at the
+    repo root: section, its key metric, the git SHA, wall seconds.  An
+    append-only log (never rewritten, unlike the BENCH_*.json records),
+    so perf across the PR stack stays greppable without archaeology."""
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_history.jsonl"
+    metric = _key_metric(result)
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "git_sha": _git_sha(),
+        "section": section,
+        "metric": metric[0] if metric else None,
+        "value": metric[1] if metric else None,
+        "seconds": round(seconds, 3),
+    }
+    with path.open("a", encoding="utf-8") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list of sections (default: all)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip appending to BENCH_history.jsonl")
     args = ap.parse_args(argv)
     picks = args.only.split(",") if args.only else list(SECTIONS)
 
@@ -79,11 +141,15 @@ def main(argv=None):
     for key in picks:
         title, fn = SECTIONS[key]
         banner(f"[{key}] {title}")
+        t_sec = time.monotonic()
         try:
-            fn()
+            result = fn()
         except Exception as e:  # noqa: BLE001 - keep the harness going
             failures.append((key, repr(e)))
             print(f"!! section {key} failed: {e!r}")
+        else:
+            if not args.no_history:
+                append_history(key, result, time.monotonic() - t_sec)
     dt = time.monotonic() - t0
     print(f"\n{'=' * 72}\nbenchmarks done in {dt / 60:.1f} min; "
           f"{len(picks) - len(failures)}/{len(picks)} sections ok")

@@ -2,10 +2,15 @@
 
   qmm.py       — quantized-weight matmul (int8 / packed-int4 HBM-resident
                  weights, per-group scales, in-VMEM dequant before the MXU)
-  quantize.py  — fused absmax group quantizer
+  quantize.py  — fused absmax group quantizer (+ the plain-jnp KV-cache
+                 quantizer the decode engine traces in-graph)
+  decode_attn.py — fused dequant-attend flash-decoding kernel over
+                 int8-held KV codes (DESIGN.md §13)
   ops.py       — jit'd wrappers (+ CPU interpret fallback, padding,
                  QuantizedLinear record)
   ref.py       — pure-jnp oracles the tests allclose against
+  pallas_env.py — the REPRO_PALLAS_INTERPRET resolver every kernel's
+                 ``interpret=None`` default routes through
 
 Batch contract (DESIGN.md §3, §7): activations may carry any number of
 leading dimensions — ``[S, K]``, ``[B, S, K]``, deeper stacks — which the

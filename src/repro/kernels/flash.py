@@ -33,6 +33,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import use_interpret
+
 NEG_INF = -1e30
 
 
@@ -169,8 +171,7 @@ def _ref_attention(q, k, v, causal, window):
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     interpret: bool | None = None):
     """Fused attention: Pallas on TPU, interpret elsewhere (tests)."""
-    interpret = (jax.default_backend() != "tpu") if interpret is None \
-        else interpret
+    interpret = use_interpret() if interpret is None else interpret
     return flash_attention_fwd(q, k, v, causal=causal, window=window,
                                interpret=interpret)
 

@@ -36,10 +36,9 @@ from . import qmm as _qmm
 from . import quantize as _quantize
 from . import ref as _ref
 from .bucketing import row_bucket
+from .pallas_env import use_interpret
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def _pick_block(dim: int, target: int, quantum: int) -> int:
@@ -90,7 +89,7 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array,
                      block_k: int = 512,
                      interpret: bool | None = None) -> jax.Array:
     """x [..., K] @ dequant(codes [K, N], scales [K//G, N]) -> [..., N]."""
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = codes.shape[1]
@@ -128,7 +127,7 @@ def quantized_matmul_int4(x: jax.Array, packed: jax.Array,
                           block_n: int = 256, block_k: int = 512,
                           interpret: bool | None = None) -> jax.Array:
     """x [..., K] @ dequant(packed [K/2, N], scales) -> [..., N]."""
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = packed.shape[1]
@@ -158,7 +157,7 @@ def group_quantize(w: jax.Array, *, group_size: int = 128, bits: int = 8,
     * ``k`` not tileable at all — per-element groups (group_size 1), the
       degenerate layout where every code hits a quantization level exactly.
     """
-    interpret = _on_cpu() if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     k, n = w.shape
     if k % group_size == 0 and n % 128 == 0:
         return _quantize.group_quantize(w, group_size=group_size, bits=bits,

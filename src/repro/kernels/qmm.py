@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_env import use_interpret
+
 
 # ---------------------------------------------------------------------------
 # int8 codes
@@ -64,11 +66,12 @@ def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int,
 
 def qmm(x: jax.Array, codes: jax.Array, scales: jax.Array, *,
         block_m: int = 256, block_n: int = 256, block_k: int = 512,
-        interpret: bool = False) -> jax.Array:
+        interpret: "bool | None" = None) -> jax.Array:
     """x [M, K] @ dequant(codes [K, N], scales [K//G, N]) -> [M, N].
 
     Requires bm | M, bn | N, bk | K and G | bk (callers pad via ops.py).
     """
+    interpret = use_interpret() if interpret is None else interpret
     m, k = x.shape
     k2, n = codes.shape
     assert k == k2, (k, k2)
@@ -136,8 +139,9 @@ def _qmm_int4_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int,
 
 def qmm_int4(x: jax.Array, packed: jax.Array, scales: jax.Array, *,
              block_m: int = 256, block_n: int = 256, block_k: int = 512,
-             interpret: bool = False) -> jax.Array:
+             interpret: "bool | None" = None) -> jax.Array:
     """x [M, K] @ dequant(packed [K/2, N] int4x2, scales [K//G, N])."""
+    interpret = use_interpret() if interpret is None else interpret
     m, k = x.shape
     k2, n = packed.shape
     assert k == 2 * k2, (k, k2)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .pallas_env import use_interpret
+
 
 def _group_quant_kernel(w_ref, codes_ref, scale_ref, *, levels: int):
     w = w_ref[...].astype(jnp.float32)                     # [G, bn]
@@ -31,13 +33,14 @@ def _group_quant_kernel(w_ref, codes_ref, scale_ref, *, levels: int):
 
 
 def group_quantize(w: jax.Array, *, group_size: int = 128, bits: int = 8,
-                   block_n: int = 512, interpret: bool = False):
+                   block_n: int = 512, interpret: "bool | None" = None):
     """w [K, N] float -> (codes int8 [K, N], scales f32 [K//G, N]).
 
     Symmetric uniform quantization, matching
     ``repro.core.quantization.quantize`` at per-group granularity and
     ``ref.group_quantize_ref`` exactly.
     """
+    interpret = use_interpret() if interpret is None else interpret
     k, n = w.shape
     assert k % group_size == 0, (k, group_size)
     block_n = min(block_n, n)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, ShapeSpec
+from ..kernels.decode_attn import quantized_decode_attention
+from ..kernels.quantize import kv_quantize
 from ..parallel.sharding import constrain_activations
 from . import layers as L
 from . import moe as M
@@ -339,6 +341,71 @@ class DecoderLM:
         x = L.apply_norm(cfg, x, params["final_norm"])
         logits = L.unembed(cfg, params["embed"], x)[:, 0]
         new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+        return logits, new_cache
+
+    def decode_step_q(self, params, qcache, batch, *, b_kv: int):
+        """One token straight over the *quantized* cache (DESIGN.md §13).
+
+        ``qcache`` is the decode engine's device-resident container:
+        ``k_codes``/``v_codes`` [L, B, T, KV, dh] (int8 codes for
+        b_kv < 16, the raw cfg.dtype container otherwise),
+        ``k_scales``/``v_scales`` [L, B, T, KV] f32 (ones for raw), plus
+        per-row ``len``.  Unlike :meth:`decode_step`, the cache is never
+        dequantized wholesale: the fresh entry is quantized *before* it
+        is written (so this step's own attention reads it through the
+        same dequant map every later step will), and attention runs via
+        :func:`quantized_decode_attention`, which dequantizes per-tile
+        in VMEM.  b_kv >= 16 stores raw values with unit scales — an
+        exact path through the identical kernel.
+        """
+        cfg = self.cfg
+        tok, pos = batch["token"], batch["pos"]
+        x = L.embed_tokens(params["embed"], tok, jnp.dtype(cfg.dtype))
+        positions = pos[:, None]
+
+        def write_row(c, entry, pp):
+            # one row: entry [1, ...] into cache [T, ...] at position pp
+            return jax.lax.dynamic_update_slice(
+                c, entry, (pp,) + (0,) * (c.ndim - 1))
+
+        def step(x, lp_and_cache):
+            lp, kc, vc, ksc, vsc = lp_and_cache
+            h = L.apply_norm(cfg, x, lp["ln1"])
+            q, k, v = L.qkv_project(cfg, lp["attn"], h, positions)
+            b = x.shape[0]
+            if b_kv < 16:
+                k_new, ks_new = kv_quantize(k, b_kv)
+                v_new, vs_new = kv_quantize(v, b_kv)
+            else:
+                k_new, v_new = k.astype(kc.dtype), v.astype(vc.dtype)
+                ks_new = jnp.ones(k.shape[:-1], jnp.float32)
+                vs_new = jnp.ones(v.shape[:-1], jnp.float32)
+            kc = jax.vmap(write_row)(kc, k_new.astype(kc.dtype), pos)
+            vc = jax.vmap(write_row)(vc, v_new.astype(vc.dtype), pos)
+            ksc = jax.vmap(write_row)(ksc, ks_new, pos)
+            vsc = jax.vmap(write_row)(vsc, vs_new, pos)
+            attn = quantized_decode_attention(
+                q, kc, vc, ksc, vsc, pos + 1, window=cfg.sliding_window)
+            x = x + attn.reshape(b, 1, cfg.q_dim) \
+                @ lp["attn"]["wo"].astype(x.dtype)
+            h2 = L.apply_norm(cfg, x, lp["ln2"])
+            if cfg.n_experts:
+                y, _ = M.apply_moe(cfg, lp["ffn"], h2,
+                                   path="dense" if cfg.n_experts <= 8
+                                   else "dispatch",
+                                   group_size=min(1024, b))
+            else:
+                y = L.apply_mlp(cfg, lp["ffn"], h2)
+            return x + y, (kc, vc, ksc, vsc)
+
+        x, (ks, vs, kss, vss) = jax.lax.scan(
+            step, x, (params["layers"], qcache["k_codes"],
+                      qcache["v_codes"], qcache["k_scales"],
+                      qcache["v_scales"]))
+        x = L.apply_norm(cfg, x, params["final_norm"])
+        logits = L.unembed(cfg, params["embed"], x)[:, 0]
+        new_cache = {"k_codes": ks, "v_codes": vs, "k_scales": kss,
+                     "v_scales": vss, "len": qcache["len"] + 1}
         return logits, new_cache
 
     # ------------------------------------------------------------------

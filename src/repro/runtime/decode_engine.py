@@ -1,11 +1,12 @@
-"""Continuous-batching decode over a quantized KV cache (DESIGN.md §12).
+"""Continuous-batching decode over a device-resident quantized KV cache
+(DESIGN.md §12, §13).
 
 Everything the engines of ``serve_engine.py`` do is one prefill-style
 forward per request.  Embodied-agent traffic is token-by-token decode:
 a request prefills once, then occupies the accelerator for dozens of
 single-token steps whose cost is dominated by streaming the KV cache.
 This module adds that serving mode on top of the PR-4 compiled fast
-path, with three commitments:
+path, with four commitments:
 
 1.  **Continuous batching.**  A request is admitted into a free decode
     slot the moment one exists and retires the moment its budget is
@@ -14,52 +15,67 @@ path, with three commitments:
     ``admission="barrier"`` on the same engine, so the benchmark's
     throughput comparison is policy-for-policy on identical code.
 
-2.  **Quantized KV cache.**  Cache entries are stored as int8-held codes
-    plus one f32 scale per head vector (``kernels.quantize.kv_quantize``
-    — the weight quantizers' exact scale/round/clip rule), at a stored
-    bit-width ``b_kv`` drawn from the realizable container ladder
-    (int4-packed / int8 / raw).  ``b_kv`` is the third codesign variable:
-    ``codesign.solve_decode`` / ``mixed_precision.allocate_bits_decode``
-    enumerate the ladder, deduct each rung's cache-read share from
-    (T0, E0), and add the cache's distortion gap at λ_kv to the bound.
+2.  **Quantized KV cache, attended directly.**  Cache entries are stored
+    as int8-held codes plus one f32 scale per head vector
+    (``kernels.quantize.kv_quantize`` — the weight quantizers' exact
+    scale/round/clip rule) at a stored bit-width ``b_kv`` from the
+    realizable container ladder.  The decode step never materializes a
+    dequantized copy: ``DecoderLM.decode_step_q`` quantizes the fresh
+    entry *before* writing it and attends through
+    ``kernels.decode_attn.quantized_decode_attention``, which
+    dequantizes per-tile in VMEM.  ``b_kv`` stays the third codesign
+    variable (``codesign.solve_decode`` /
+    ``mixed_precision.allocate_bits_decode``).
 
-3.  **Bitwise parity.**  Greedy decode through the batched engine equals
+3.  **Device residency (DESIGN.md §13).**  Each slot block's
+    ``k_codes/v_codes/k_scales/v_scales/pos/tok`` live as on-device
+    arrays that persist across engine steps and are *donated* to each
+    executable (XLA updates them in place).  The host syncs only at the
+    real serving boundaries: prompt tokens in at admission, generated
+    token blocks out for streaming/retirement.  ``DecodeReport`` counts
+    the actual h2d/d2h bytes so the benchmark can show the per-token
+    transfer volume collapsing.
+
+4.  **Bitwise parity.**  Greedy decode through the batched engine equals
     the non-batched sequential reference token-for-token.  The load-
     bearing invariants: each request's cache length is bucketed from its
     *own* parameters (``T = seq_bucket(prompt_len + max_new_tokens)``,
-    never a batch max — reductions over different cache lengths group
-    lanes differently and are NOT bitwise stable); the current step
-    attends over dequantized history plus the *raw* freshly-written
-    entry (``DecoderLM.decode_step`` order), with the quantized copy
-    stored for all future steps — engine and reference do this through
-    the same traced function; and every per-row op in the decode graph
-    is row-independent, so batch width B does not change row values
-    (the §7 house invariant, re-verified by ``tests/test_decode.py``).
+    never a batch max); every per-row op in the decode graph is
+    row-independent, so batch width B does not change row values (the
+    §7 house invariant); and multi-token stepping is fused through a
+    ``lax.while_loop`` whose trip count is a *runtime* argument — the
+    §10 isolation trick, so each token step compiles to one fixed XLA
+    sub-computation and any chunking of the same step sequence (engine
+    chunks vs reference chunks vs an elastic split/resume) produces
+    identical bits.  Engine and reference share the same traced
+    functions at different batch widths.
 
-Executables are AOT-compiled (``jit().lower().compile()``) and memoized
-in a :class:`~repro.runtime.fastpath.CompiledForwardCache`: prefill is
-keyed on (prompt bucket, b_kv), the decode step on (batch, cache bucket,
-b_kv), so the post-warmup compile count is bounded by the bucket ladder
-times the distinct cache bit-widths — the PR-4 bound, extended.
+Executables are AOT-compiled (``fastpath.aot_compile``) and memoized in
+a :class:`~repro.runtime.fastpath.CompiledForwardCache`: prefill+scatter
+is keyed on (prompt bucket, cache bucket, batch, b_kv), the fused decode
+chunk on (batch, cache bucket, b_kv), so the post-warmup compile count
+is bounded by the (prompt, cache)-bucket pairs plus cache rungs, times
+the distinct cache bit-widths.
 
-Costs are virtual-clock, billed at the *padded* workload (bucket padding
-is compute the hardware really runs, as on the compiled fast path): a
-decode round bills all ``max_batch`` slots plus the full cache read at
-``b_kv`` over the group's [L, B, T] block.  That is exactly why
-continuous admission wins: the barrier policy pays full-width rounds
-over mostly-empty slots while the tail of a batch drains.
+Costs are virtual-clock, billed at the *padded* workload exactly as
+before: each token step inside a fused chunk bills all ``max_batch``
+slots plus the full cache read at ``b_kv``.  A chunk never overruns a
+scheduling boundary — its step count is clamped to the tightest of the
+live slots' remaining budgets, the next queued arrival, and the EOS
+early-exit inside the executable — so admission and retirement timing
+on the virtual clock are identical to stepping one token at a time.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codesign as cd
 from repro.core import mixed_precision as mp
 from repro.core.cost_model import (SystemParams, agent_delay, agent_energy,
                                    kv_delay, kv_energy, server_delay,
@@ -67,9 +83,9 @@ from repro.core.cost_model import (SystemParams, agent_delay, agent_energy,
 from repro.core.quantization import QuantConfig, QuantPlan
 from repro.core.rate_distortion import exponential_mle
 from repro.kernels.bucketing import DEFAULT_SEQ_BASE, seq_bucket, seq_ladder
-from repro.kernels.quantize import kv_cache_bytes, kv_dequantize, kv_quantize
+from repro.kernels.quantize import kv_cache_bytes, kv_quantize
 
-from .fastpath import CompiledForwardCache, _sds
+from .fastpath import CompiledForwardCache, _sds, aot_compile
 from .qat import fake_quantize_agent
 from .serve_engine import CodesignCache, QosClass, fit_lambda
 
@@ -82,6 +98,13 @@ __all__ = [
     "fit_kv_lambda",
     "greedy_decode_reference",
 ]
+
+# the fused decode executable's fixed output-block width: one compiled
+# chunk emits up to this many tokens per slot.  A constant (never a
+# compile key) so chunk size costs no extra executables and — by the
+# while-loop isolation argument — no bitwise risk: a chunk of k steps is
+# the same k loop iterations regardless of where the host cuts them.
+_CHUNK = 64
 
 # the KV-cache layout this engine manages slots in; models exposing the
 # decode hooks over a different state shape (conv streams, recurrent
@@ -97,13 +120,14 @@ def decode_protocol_gap(model) -> Optional[str]:
     """Why ``model`` cannot be decode-served (None when it can).
 
     Requires the full DecoderLM decode protocol — ``prefill`` /
-    ``init_cache`` / ``decode_step`` — *and* the [L, B, T, KV, dh]
-    KV-cache layout this engine's slot arrays assume.  Hybrid/xLSTM/
-    enc-dec families expose same-named hooks over different state
-    shapes; they are rejected here, not by a shape error three calls in.
+    ``init_cache`` / ``decode_step`` / ``decode_step_q`` — *and* the
+    [L, B, T, KV, dh] KV-cache layout this engine's slot arrays assume.
+    Hybrid/xLSTM/enc-dec families expose same-named hooks over different
+    state shapes; they are rejected here, not by a shape error three
+    calls in.
     """
     missing = [h for h in ("prefill", "init_cache", "decode_step",
-                           "cache_axes")
+                           "decode_step_q", "cache_axes")
                if not hasattr(model, h)]
     if missing:
         return f"lacks the {'/'.join(missing)} decode hook(s)"
@@ -154,6 +178,8 @@ class ClassDecodeStats:
     ttft_max_s: float
     itl_mean_s: float
     plan_bits: tuple = ()       # per-agent-layer bits under a mixed plan
+    itl_p50_s: float = 0.0      # inter-token latency percentiles
+    itl_p95_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,11 +204,27 @@ class DecodeReport:
     compile_hits: int = 0
     compile_misses: int = 0
     compiled_variants: int = 0
+    h2d_bytes: int = 0          # measured host->device traffic (§13)
+    d2h_bytes: int = 0          # measured device->host traffic
 
 
 # ---------------------------------------------------------------------------
 # cache-activation statistic
 # ---------------------------------------------------------------------------
+
+_KV_LAMBDA_MEMO: Dict[tuple, float] = {}
+
+
+def _params_fingerprint(params) -> tuple:
+    """A cheap hashable identity for a parameter tree: every leaf's
+    (shape, dtype) plus the first leaf's head bytes.  Distinguishes
+    differently-initialized trees of the same architecture without
+    hashing gigabytes; collisions would need identical leading weights
+    on identical structures."""
+    leaves = jax.tree_util.tree_leaves(params)
+    head = np.asarray(leaves[0]).reshape(-1)[:8].tobytes()
+    return (tuple((tuple(lf.shape), str(lf.dtype)) for lf in leaves), head)
+
 
 def fit_kv_lambda(model, params, *, seq: int = 16) -> float:
     """MLE λ_kv over K/V cache magnitudes from one calibration prefill.
@@ -192,14 +234,21 @@ def fit_kv_lambda(model, params, *, seq: int = 16) -> float:
     deterministic prompt (``arange % vocab``) at full precision is
     calibration enough at the fidelity of the exponential model — and
     determinism keeps the codesign cache key stable across runs.
+
+    Memoized per (arch config, seq, parameter fingerprint): the prefill
+    is a real forward pass, and every :class:`DecodeEngine` construction
+    over the same model/params would otherwise re-run it.
     """
-    cfg = model.cfg
-    toks = (np.arange(seq, dtype=np.int64)
-            % int(cfg.vocab_size)).astype(np.int32)[None]
-    _, cache = model.prefill(params, {"tokens": jnp.asarray(toks)})
-    mags = jnp.concatenate([jnp.abs(cache["k"]).reshape(-1),
-                            jnp.abs(cache["v"]).reshape(-1)])
-    return float(exponential_mle(mags))
+    key = (model.cfg, int(seq), _params_fingerprint(params))
+    if key not in _KV_LAMBDA_MEMO:
+        cfg = model.cfg
+        toks = (np.arange(seq, dtype=np.int64)
+                % int(cfg.vocab_size)).astype(np.int32)[None]
+        _, cache = model.prefill(params, {"tokens": jnp.asarray(toks)})
+        mags = jnp.concatenate([jnp.abs(cache["k"]).reshape(-1),
+                                jnp.abs(cache["v"]).reshape(-1)])
+        _KV_LAMBDA_MEMO[key] = float(exponential_mle(mags))
+    return _KV_LAMBDA_MEMO[key]
 
 
 # ---------------------------------------------------------------------------
@@ -207,74 +256,89 @@ def fit_kv_lambda(model, params, *, seq: int = 16) -> float:
 # ---------------------------------------------------------------------------
 
 def _build_prefill(model, b_kv: int) -> Callable:
-    """(weights, tokens [1, S], last_idx [1]) -> (first greedy token [1],
-    quantized cache block).  Quantization of the prefill cache happens
-    *inside* the traced function so engine and reference share its
-    arithmetic exactly."""
+    """Fused prefill + quantize + slot scatter (DESIGN.md §13).
+
+    (weights, tokens [1, S], last_idx [1], slot [], k_codes, v_codes,
+    k_scales, v_scales, pos [B], tok [B]) -> (first greedy token [1],
+    updated buffers).  The prompt's cache block is quantized and written
+    into decode slot ``slot`` of the group's device-resident buffers
+    inside one executable — the quantization arithmetic is in-trace, so
+    engine and reference share it exactly, and the cache block never
+    visits the host.  Buffer positions past the prompt keep the previous
+    occupant's stale entries: attention masks positions >= the row's
+    cache length, so they are never read before this occupant overwrites
+    them token by token.
+    """
     raw = b_kv >= 16
 
-    def fn(weights, tokens, last_idx):
+    def fn(weights, tokens, last_idx, slot, kc, vc, ks, vs, pos, tok):
         logits, cache = model.prefill(weights, {"tokens": tokens},
                                       last_index=last_idx)
         tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k, v = cache["k"], cache["v"]
+        k, v = cache["k"], cache["v"]       # [L, 1, S, KV, dh]
         if raw:
-            return (tok0, k, v,
-                    jnp.ones(k.shape[:-1], jnp.float32),
-                    jnp.ones(v.shape[:-1], jnp.float32))
-        kq, ks = kv_quantize(k, b_kv)
-        vq, vs = kv_quantize(v, b_kv)
-        return tok0, kq, vq, ks, vs
+            kq, vq = k.astype(kc.dtype), v.astype(vc.dtype)
+            ksn = jnp.ones(k.shape[:-1], jnp.float32)
+            vsn = jnp.ones(v.shape[:-1], jnp.float32)
+        else:
+            kq, ksn = kv_quantize(k, b_kv)
+            vq, vsn = kv_quantize(v, b_kv)
+            kq, vq = kq.astype(kc.dtype), vq.astype(vc.dtype)
+        at5 = (0, slot, 0, 0, 0)
+        kc = jax.lax.dynamic_update_slice(kc, kq, at5)
+        vc = jax.lax.dynamic_update_slice(vc, vq, at5)
+        ks = jax.lax.dynamic_update_slice(ks, ksn, at5[:-1])
+        vs = jax.lax.dynamic_update_slice(vs, vsn, at5[:-1])
+        pos = jax.lax.dynamic_update_slice(pos, last_idx + 1, (slot,))
+        tok = jax.lax.dynamic_update_slice(tok, tok0, (slot,))
+        return tok0, kc, vc, ks, vs, pos, tok
 
     return fn
 
 
-def _build_decode(model, b_kv: int) -> Callable:
-    """(weights, k_codes, v_codes, k_scales, v_scales, token [B,1],
-    pos [B]) -> (next token [B], updated cache block).
+def _build_fused_decode(model, b_kv: int) -> Callable:
+    """Multi-token decode chunk as ONE executable (DESIGN.md §13).
 
-    Quantize-on-write: ``decode_step`` attends over the dequantized
-    history plus the raw freshly-written entry at ``pos`` (its own write
-    order); only the stored copy of that entry is re-quantized here.
-    Every op is per-row (vmapped slices, row-masked attention), so row
-    values are independent of the batch width — the parity invariant.
+    (weights, k_codes, v_codes, k_scales, v_scales, tok [B], pos [B],
+    live [B] i32, eos [], n_steps []) -> (token block [B, _CHUNK] i32,
+    steps done [], updated buffers).  A ``lax.while_loop`` whose trip
+    count ``n_steps`` is a *runtime* argument steps
+    ``DecoderLM.decode_step_q`` up to ``n_steps`` times, exiting early
+    once every live slot has emitted ``eos`` (pass eos = -1 to disable —
+    greedy tokens are always >= 0).  The §10 isolation argument makes
+    each iteration one fixed XLA sub-computation, so chunk boundaries
+    cannot change bits; dead slots (live = 0) still compute, but every
+    op is row-independent so their garbage never escapes the row.
     """
-    raw = b_kv >= 16
-    dt = jnp.dtype(model.cfg.dtype)
 
-    def row_slice(c, p):                   # c [L, T, ...]: one row's block
-        return jax.lax.dynamic_slice_in_dim(c, p, 1, 1)
+    def fn(weights, kc, vc, ks, vs, tok, pos, live, eos, n_steps):
+        b = tok.shape[0]
+        live_m = live > 0
+        n = jnp.asarray(n_steps, jnp.int32)
 
-    def row_write(c, u, p):
-        return jax.lax.dynamic_update_slice_in_dim(c, u, p, 1)
+        def cond(carry):
+            i = carry[0]
+            eos_hit = carry[7]
+            return (i < n) & jnp.any(live_m & ~eos_hit)
 
-    def fn(weights, kc, vc, ks, vs, tok, pos):
-        if raw:
-            k, v = kc, vc
-        else:
-            k = kv_dequantize(kc, ks, dt)
-            v = kv_dequantize(vc, vs, dt)
-        logits, new_cache = model.decode_step(
-            weights, {"k": k, "v": v, "len": pos},
-            {"token": tok, "pos": pos})
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        knew = jax.vmap(row_slice, in_axes=(1, 0),
-                        out_axes=1)(new_cache["k"], pos)   # [L, B, 1, KV, dh]
-        vnew = jax.vmap(row_slice, in_axes=(1, 0),
-                        out_axes=1)(new_cache["v"], pos)
-        if raw:
-            kc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(
-                kc, knew, pos)
-            vc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(
-                vc, vnew, pos)
-            return nxt, kc, vc, ks, vs
-        kq, ksn = kv_quantize(knew, b_kv)
-        vq, vsn = kv_quantize(vnew, b_kv)
-        kc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(kc, kq, pos)
-        vc = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(vc, vq, pos)
-        ks = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(ks, ksn, pos)
-        vs = jax.vmap(row_write, in_axes=(1, 1, 0), out_axes=1)(vs, vsn, pos)
-        return nxt, kc, vc, ks, vs
+        def body(carry):
+            i, tok, pos, kc, vc, ks, vs, eos_hit, out = carry
+            logits, qc = model.decode_step_q(
+                weights,
+                {"k_codes": kc, "v_codes": vc, "k_scales": ks,
+                 "v_scales": vs, "len": pos},
+                {"token": tok[:, None], "pos": pos}, b_kv=b_kv)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
+            eos_hit = eos_hit | (nxt == eos)
+            return (i + 1, nxt, qc["len"], qc["k_codes"], qc["v_codes"],
+                    qc["k_scales"], qc["v_scales"], eos_hit, out)
+
+        carry = (jnp.int32(0), tok, pos, kc, vc, ks, vs,
+                 jnp.zeros((b,), bool), jnp.zeros((b, _CHUNK), jnp.int32))
+        i, tok, pos, kc, vc, ks, vs, _, out = jax.lax.while_loop(
+            cond, body, carry)
+        return out, i, kc, vc, ks, vs, tok, pos
 
     return fn
 
@@ -283,23 +347,36 @@ def _container_dtype(cfg, b_kv: int) -> np.dtype:
     return np.dtype("int8") if b_kv < 16 else np.dtype(cfg.dtype)
 
 
-def _compile_prefill(model, params, b_kv: int, s_bucket: int):
-    w = _sds(params)
-    tok = jax.ShapeDtypeStruct((1, s_bucket), jnp.int32)
-    li = jax.ShapeDtypeStruct((1,), jnp.int32)
-    return jax.jit(_build_prefill(model, b_kv)).lower(w, tok, li).compile()
-
-
-def _compile_decode(model, params, b_kv: int, batch: int, t_bucket: int):
-    cfg = model.cfg
+def _cache_sds(cfg, b_kv: int, batch: int, t_bucket: int):
     cont = _container_dtype(cfg, b_kv)
     shape = (cfg.n_layers, batch, t_bucket, cfg.n_kv_heads, cfg.head_dim)
     codes = jax.ShapeDtypeStruct(shape, cont)
     scales = jax.ShapeDtypeStruct(shape[:-1], jnp.float32)
-    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
-    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    return jax.jit(_build_decode(model, b_kv)).lower(
-        _sds(params), codes, codes, scales, scales, tok, pos).compile()
+    vec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return codes, scales, vec
+
+
+def _compile_prefill(model, params, b_kv: int, s_bucket: int,
+                     t_bucket: int, batch: int):
+    codes, scales, vec = _cache_sds(model.cfg, b_kv, batch, t_bucket)
+    tokens = jax.ShapeDtypeStruct((1, s_bucket), jnp.int32)
+    li = jax.ShapeDtypeStruct((1,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return aot_compile(
+        _build_prefill(model, b_kv),
+        (_sds(params), tokens, li, scalar, codes, codes, scales, scales,
+         vec, vec),
+        donate_argnums=(4, 5, 6, 7, 8, 9))
+
+
+def _compile_fused(model, params, b_kv: int, batch: int, t_bucket: int):
+    codes, scales, vec = _cache_sds(model.cfg, b_kv, batch, t_bucket)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return aot_compile(
+        _build_fused_decode(model, b_kv),
+        (_sds(params), codes, codes, scales, scales, vec, vec, vec,
+         scalar, scalar),
+        donate_argnums=(1, 2, 3, 4, 5, 6))
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +411,15 @@ class _Active:
 
 class _Group:
     """One (QoS class, cache bucket) slot block: a fixed-width batched
-    cache of ``max_batch`` decode slots at cache length ``t_bucket``."""
+    cache of ``max_batch`` decode slots at cache length ``t_bucket``.
+
+    All buffers are ON-DEVICE jax arrays (DESIGN.md §13) that persist
+    across steps and are donated to every prefill/decode executable —
+    the host never copies the cache.  Inactive rows hold pos=0/token=0:
+    their (garbage, row-independent) computation never escapes the row,
+    and the next admission overwrites the prompt span before position 0
+    is ever attended.
+    """
 
     def __init__(self, cfg, qos_name: str, t_bucket: int, max_batch: int,
                  b_kv: int):
@@ -343,15 +428,12 @@ class _Group:
         cont = _container_dtype(cfg, b_kv)
         shape = (cfg.n_layers, max_batch, t_bucket, cfg.n_kv_heads,
                  cfg.head_dim)
-        self.k_codes = np.zeros(shape, cont)
-        self.v_codes = np.zeros(shape, cont)
-        self.k_scales = np.ones(shape[:-1], np.float32)
-        self.v_scales = np.ones(shape[:-1], np.float32)
-        # inactive rows hold pos=0/token=0: their (garbage, row-
-        # independent) computation never escapes the row, and position 0
-        # is rewritten at the next admission before it is ever attended
-        self.pos = np.zeros((max_batch,), np.int32)
-        self.tok = np.zeros((max_batch,), np.int32)
+        self.k_codes = jnp.zeros(shape, cont)
+        self.v_codes = jnp.zeros(shape, cont)
+        self.k_scales = jnp.ones(shape[:-1], jnp.float32)
+        self.v_scales = jnp.ones(shape[:-1], jnp.float32)
+        self.pos = jnp.zeros((max_batch,), jnp.int32)
+        self.tok = jnp.zeros((max_batch,), jnp.int32)
         self.slots: List[Optional[_Active]] = [None] * max_batch
         self.barrier_open = True
 
@@ -388,6 +470,10 @@ class DecodeEngine:
     code: ``"continuous"`` admits into any free slot every step and
     retires mid-flight; ``"barrier"`` refills a slot block only once it
     has fully drained (the FIFO-barrier baseline the benchmark beats).
+
+    ``eos_id`` (optional) retires a request at its first emission of
+    that token: the fused chunk executable exits early once every live
+    slot has hit it, and the host truncates the row's stream there.
     """
 
     def __init__(self, model, params, sysp: SystemParams, *,
@@ -402,6 +488,7 @@ class DecodeEngine:
                  auto: bool = True,
                  lam: Optional[float] = None,
                  lam_kv: Optional[float] = None,
+                 eos_id: Optional[int] = None,
                  codesign_cache: Optional[CodesignCache] = None,
                  compile_cache: Optional[CompiledForwardCache] = None,
                  seq_bucket_base: int = DEFAULT_SEQ_BASE):
@@ -426,6 +513,7 @@ class DecodeEngine:
         self.kv_ladder = tuple(int(b) for b in kv_ladder)
         self.kv_weight = float(kv_weight)
         self.b_emb = b_emb
+        self.eos_id = int(eos_id) if eos_id is not None else None
         self.seq_bucket_base = int(seq_bucket_base)
         self._axes = model.logical_axes()
         self.lam = float(lam) if lam is not None \
@@ -455,6 +543,8 @@ class DecodeEngine:
         self._tokens_out = 0
         self._kv_bytes = 0
         self._kv_bytes_full = 0
+        self._h2d = 0
+        self._d2h = 0
         self._class_lat: Dict[str, Dict[str, list]] = {}
         for c in classes:
             if auto:
@@ -576,30 +666,39 @@ class DecodeEngine:
         self._own_compile_misses += cc.misses - m0
         return exe
 
-    def _prefill_exe(self, c: _ClassState, s_bucket: int):
+    def _prefill_exe(self, c: _ClassState, s_bucket: int, t_bucket: int):
         return self._cached(
-            ("decode-prefill", self.cfg, s_bucket, c.b_kv),
+            ("decode-prefill", self.cfg, s_bucket, t_bucket,
+             self.max_batch, c.b_kv),
             lambda: _compile_prefill(self.model, self.params, c.b_kv,
-                                     s_bucket))
+                                     s_bucket, t_bucket, self.max_batch))
 
     def _decode_exe(self, c: _ClassState, t_bucket: int):
         return self._cached(
-            ("decode-step", self.cfg, self.max_batch, t_bucket, c.b_kv),
-            lambda: _compile_decode(self.model, self.params, c.b_kv,
-                                    self.max_batch, t_bucket))
+            ("decode-fused", self.cfg, self.max_batch, t_bucket, c.b_kv),
+            lambda: _compile_fused(self.model, self.params, c.b_kv,
+                                   self.max_batch, t_bucket))
 
     def warmup(self, max_prompt: int, max_new: Optional[int] = None) -> int:
-        """Precompile every reachable (bucket, b_kv) variant; returns the
-        number of XLA compiles this triggered.  After a warmup covering
-        the traffic's prompt/generation bounds, steady-state serving
-        never compiles (asserted by tests and ``benchmarks/decode.py``)."""
+        """Precompile every reachable variant; returns the number of XLA
+        compiles this triggered.  Prefill executables are keyed on the
+        (prompt bucket, cache bucket) PAIR — the in-executable scatter
+        makes the slot block's shape part of the graph — so the reachable
+        set is every s <= t from the two ladders, plus one fused-chunk
+        executable per cache bucket, times the classes' b_kv rungs.
+        After a warmup covering the traffic's prompt/generation bounds,
+        steady-state serving never compiles (asserted by tests and
+        ``benchmarks/decode.py``)."""
         m0 = self._own_compile_misses
         mn = int(max_new) if max_new is not None else self.max_new_tokens
         for c in self._classes.values():
-            for s in seq_ladder(max_prompt, self.seq_bucket_base):
-                self._prefill_exe(c, s)
-            for t in seq_ladder(max_prompt + mn, self.seq_bucket_base):
+            t_rungs = seq_ladder(max_prompt + mn, self.seq_bucket_base)
+            for t in t_rungs:
                 self._decode_exe(c, t)
+            for s in seq_ladder(max_prompt, self.seq_bucket_base):
+                for t in t_rungs:
+                    if t >= s:
+                        self._prefill_exe(c, s, t)
         return self._own_compile_misses - m0
 
     # ------------------------------------------------------------------
@@ -678,10 +777,17 @@ class DecodeEngine:
     # ------------------------------------------------------------------
     # the decode loop
     # ------------------------------------------------------------------
-    def step(self) -> List[DecodeResponse]:
+    def step(self, max_decode_steps: Optional[int] = None) \
+            -> List[DecodeResponse]:
         """One engine round: admit what the policy allows, then run one
-        decode step for the next non-empty slot block (round-robin).
-        Returns the requests that retired during the round."""
+        fused decode chunk for the next non-empty slot block
+        (round-robin).  Returns the requests that retired.
+
+        The chunk is clamped so it never overruns a scheduling boundary
+        (see :meth:`_decode_round`); ``max_decode_steps`` caps it
+        further — ``max_decode_steps=1`` reproduces the one-token-per-
+        step cadence (used by tests that interleave cancel/step).
+        """
         out: List[DecodeResponse] = []
         if self.in_flight == 0 and self._queue:
             nxt = min(r.arrival_s for r in self._queue)
@@ -690,7 +796,7 @@ class DecodeEngine:
         self._admit(out)
         g = self._next_group()
         if g is not None:
-            self._decode_round(g, out)
+            self._decode_round(g, out, max_decode_steps)
         return out
 
     def drain(self) -> List[DecodeResponse]:
@@ -738,16 +844,18 @@ class DecodeEngine:
         s_bucket = int(seq_bucket(p_len, self.seq_bucket_base))
         padded = np.zeros((1, s_bucket), np.int32)
         padded[0, :p_len] = req.tokens
-        exe = self._prefill_exe(c, s_bucket)
-        tok0, kq, vq, ks, vs = exe(
+        exe = self._prefill_exe(c, s_bucket, g.t_bucket)
+        (tok0, g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.pos,
+         g.tok) = exe(
             self._weights[c.plan_key], jnp.asarray(padded),
-            jnp.asarray([p_len - 1], jnp.int32))
-        g.k_codes[:, slot, :s_bucket] = np.asarray(kq)[:, 0]
-        g.v_codes[:, slot, :s_bucket] = np.asarray(vq)[:, 0]
-        g.k_scales[:, slot, :s_bucket] = np.asarray(ks)[:, 0]
-        g.v_scales[:, slot, :s_bucket] = np.asarray(vs)[:, 0]
-        g.pos[slot] = p_len
-        g.tok[slot] = int(np.asarray(tok0)[0])
+            jnp.asarray([p_len - 1], jnp.int32),
+            jnp.asarray(slot, jnp.int32),
+            g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.pos, g.tok)
+        first = int(np.asarray(tok0)[0])
+        # the only host<->device traffic an admission causes: the padded
+        # prompt + two scalars in, the streamed first token out
+        self._h2d += padded.nbytes + 8
+        self._d2h += 4
         # bill the prefill at its bucketed workload, sequentially on the
         # virtual clock (prefills occupy the same accelerator)
         t_pre, e_pre = self._prefill_cost(c, s_bucket)
@@ -759,14 +867,14 @@ class DecodeEngine:
         self._kv_bytes += 2 * kv_cache_bytes(shape, c.b_kv)
         self._kv_bytes_full += int(2 * np.prod(shape)
                                    * self.sysp.b_full / 8.0)
-        act = _Active(req=req, generated=[int(g.tok[slot])],
+        act = _Active(req=req, generated=[first],
                       admitted_s=self._clock,
                       ttft_s=self._clock - req.arrival_s,
                       last_emit_s=self._clock, itls=[],
                       on_token=self._on_token.pop(req.request_id, None))
         g.slots[slot] = act
         if act.on_token is not None:
-            act.on_token(req.request_id, int(g.tok[slot]), self._clock)
+            act.on_token(req.request_id, first, self._clock)
         if len(act.generated) >= req.max_new_tokens:
             out.append(self._retire(g, slot))
 
@@ -779,42 +887,78 @@ class DecodeEngine:
                 return g
         return None
 
-    def _decode_round(self, g: _Group, out: List[DecodeResponse]) -> None:
+    def _chunk_steps(self, g: _Group, t_round: float,
+                     max_steps: Optional[int]) -> int:
+        """How many fused steps this chunk may run: the tightest of the
+        live slots' remaining budgets (the chunk then ends exactly at
+        the first retirement), the next queued arrival (so admission
+        timing matches one-token-at-a-time stepping), the fixed output
+        block width, and the caller's cap."""
+        rem = min(a.req.max_new_tokens - len(a.generated)
+                  for a in g.slots if a is not None)
+        k = max(1, min(rem, _CHUNK))
+        future = [r.arrival_s for r in self._queue
+                  if r.arrival_s > self._clock]
+        if future:
+            due = (min(future) - self._clock) / max(t_round, 1e-12)
+            k = min(k, max(1, int(math.ceil(due))))
+        if max_steps is not None:
+            k = min(k, max(1, int(max_steps)))
+        return k
+
+    def _decode_round(self, g: _Group, out: List[DecodeResponse],
+                      max_steps: Optional[int] = None) -> None:
         c = self._classes[g.qos_name]
-        exe = self._decode_exe(c, g.t_bucket)
-        nxt, kc, vc, ks, vs = exe(
-            self._weights[c.plan_key], jnp.asarray(g.k_codes),
-            jnp.asarray(g.v_codes), jnp.asarray(g.k_scales),
-            jnp.asarray(g.v_scales), jnp.asarray(g.tok[:, None]),
-            jnp.asarray(g.pos))
-        # np.array (not asarray): device outputs come back as read-only
-        # views, and admissions write prefill blocks into these buffers
-        g.k_codes = np.array(kc)
-        g.v_codes = np.array(vc)
-        g.k_scales = np.array(ks)
-        g.v_scales = np.array(vs)
-        nxt = np.asarray(nxt)
         t_round, e_round = self._round_cost(c, g)
-        self._clock += t_round
-        self._energy += e_round
-        self._rounds += 1
-        for i, act in enumerate(g.slots):
-            if act is None:
-                continue
-            g.pos[i] += 1
-            g.tok[i] = int(nxt[i])
-            act.generated.append(int(nxt[i]))
-            act.itls.append(self._clock - act.last_emit_s)
-            act.last_emit_s = self._clock
-            if act.on_token is not None:
-                act.on_token(act.req.request_id, int(nxt[i]), self._clock)
-            if len(act.generated) >= act.req.max_new_tokens:
-                out.append(self._retire(g, i))
+        k = self._chunk_steps(g, t_round, max_steps)
+        live = np.zeros((self.max_batch,), np.int32)
+        live_rows = [i for i, a in enumerate(g.slots) if a is not None]
+        live[live_rows] = 1
+        eos = self.eos_id if self.eos_id is not None else -1
+        exe = self._decode_exe(c, g.t_bucket)
+        (blk, steps, g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.tok,
+         g.pos) = exe(
+            self._weights[c.plan_key], g.k_codes, g.v_codes, g.k_scales,
+            g.v_scales, g.tok, g.pos, jnp.asarray(live),
+            jnp.asarray(eos, jnp.int32), jnp.asarray(k, jnp.int32))
+        blk = np.asarray(blk)
+        steps = int(steps)
+        # the only host<->device traffic a chunk causes, independent of
+        # the cache size: the live mask + two scalars in, the token
+        # block + step count out
+        self._h2d += live.nbytes + 8
+        self._d2h += blk.nbytes + 4
+        clock0 = self._clock
+        self._clock += steps * t_round
+        self._energy += steps * e_round
+        self._rounds += steps
+        finished: List[int] = []
+        done = set()
+        for j in range(steps):
+            t_emit = clock0 + (j + 1) * t_round
+            for i in live_rows:
+                if i in done:
+                    continue
+                act = g.slots[i]
+                tok_ij = int(blk[i, j])
+                act.generated.append(tok_ij)
+                act.itls.append(t_emit - act.last_emit_s)
+                act.last_emit_s = t_emit
+                if act.on_token is not None:
+                    act.on_token(act.req.request_id, tok_ij, t_emit)
+                if (self.eos_id is not None and tok_ij == self.eos_id) \
+                        or len(act.generated) >= act.req.max_new_tokens:
+                    done.add(i)
+                    finished.append(i)
+        for i in finished:
+            out.append(self._retire(g, i))
 
     def _retire(self, g: _Group, slot: int,
                 cancelled: bool = False) -> DecodeResponse:
         act = g.slots[slot]
         g.slots[slot] = None
+        g.pos = g.pos.at[slot].set(0)
+        g.tok = g.tok.at[slot].set(0)
         if g.active_count() == 0:
             g.barrier_open = True
         c = self._classes[act.req.qos]
@@ -832,8 +976,8 @@ class DecodeEngine:
             request_id=act.req.request_id, qos=act.req.qos,
             tokens=np.asarray(act.generated, np.int32),
             prompt_len=act.req.tokens.size, b_kv=c.b_kv,
-            ttft_s=act.ttft_s, itl_mean_s=itl, finished_s=self._clock,
-            cancelled=cancelled)
+            ttft_s=act.ttft_s, itl_mean_s=itl,
+            finished_s=act.last_emit_s, cancelled=cancelled)
 
     # ------------------------------------------------------------------
     # billing
@@ -849,11 +993,12 @@ class DecodeEngine:
         return t, e
 
     def _round_cost(self, c: _ClassState, g: _Group):
-        """One decode round over the FULL slot block: all ``max_batch``
+        """One decode step over the FULL slot block: all ``max_batch``
         rows and the whole [L, B, T] cache read at b_kv are billed
         whether or not every slot is live — padding is compute/traffic
         the hardware really runs, which is exactly the waste continuous
-        admission exists to avoid."""
+        admission exists to avoid.  A fused chunk of k steps bills k of
+        these."""
         n_a, n_s = self.flop_split(self.max_batch)
         kv_full = 2.0 * self.cfg.n_layers * self.max_batch * g.t_bucket \
             * self.cfg.n_kv_heads * self.cfg.head_dim \
@@ -875,6 +1020,7 @@ class DecodeEngine:
         classes = []
         for name, c in self._classes.items():
             lat = self._class_lat[name]
+            itls = np.asarray(lat["itl"], np.float64)
             classes.append(ClassDecodeStats(
                 qos=name, b_hat=c.b_hat, b_kv=c.b_kv,
                 requests=len(lat["ttft"]),
@@ -883,9 +1029,12 @@ class DecodeEngine:
                 if lat["ttft"] else 0.0,
                 ttft_max_s=float(np.max(lat["ttft"]))
                 if lat["ttft"] else 0.0,
-                itl_mean_s=float(np.mean(lat["itl"]))
-                if lat["itl"] else 0.0,
-                plan_bits=c.plan_bits))
+                itl_mean_s=float(np.mean(itls)) if itls.size else 0.0,
+                plan_bits=c.plan_bits,
+                itl_p50_s=float(np.percentile(itls, 50))
+                if itls.size else 0.0,
+                itl_p95_s=float(np.percentile(itls, 95))
+                if itls.size else 0.0))
         clock = max(self._clock, 1e-12)
         return DecodeReport(
             requests_served=self._served, cancelled=self._cancelled,
@@ -900,7 +1049,8 @@ class DecodeEngine:
             codesign_misses=self._own_misses,
             compile_hits=self._own_compile_hits,
             compile_misses=self._own_compile_misses,
-            compiled_variants=self.compile_cache.compiled_variants)
+            compiled_variants=self.compile_cache.compiled_variants,
+            h2d_bytes=self._h2d, d2h_bytes=self._d2h)
 
 
 # ---------------------------------------------------------------------------
@@ -915,12 +1065,15 @@ def greedy_decode_reference(model, weights, tokens, max_new_tokens: int, *,
                                 CompiledForwardCache] = None,
                             state: Optional[dict] = None,
                             return_state: bool = False):
-    """One request, batch width 1, one token at a time — the parity oracle.
+    """One request, batch width 1 — the parity oracle.
 
     Decodes ``max_new_tokens`` greedy tokens from ``tokens`` under the
-    same bucketing, quantize-on-write cache, and traced step functions
-    as :class:`DecodeEngine`; the engine must reproduce its output
-    token-for-token at any batch width and admission order.
+    same bucketing, quantized-cache step (``decode_step_q`` through the
+    fused while-loop executable), and prefill+scatter as
+    :class:`DecodeEngine`, at batch width 1; the engine must reproduce
+    its output token-for-token at any batch width, admission order, and
+    chunking (the while-loop iterations are isolated sub-computations,
+    so where the host cuts a chunk cannot change bits).
 
     ``reserve_tokens`` fixes the cache bucket from a larger planned
     generation budget (``T = seq_bucket(prompt + reserve)``) so a
@@ -933,6 +1086,7 @@ def greedy_decode_reference(model, weights, tokens, max_new_tokens: int, *,
     cfg = model.cfg
     cache = compile_cache if compile_cache is not None \
         else CompiledForwardCache()
+    cont = _container_dtype(cfg, b_kv)
     out: List[int] = []
     if state is None:
         toks = np.asarray(tokens, np.int32).reshape(-1)
@@ -945,54 +1099,52 @@ def greedy_decode_reference(model, weights, tokens, max_new_tokens: int, *,
         s_bucket = int(seq_bucket(p_len, seq_bucket_base))
         padded = np.zeros((1, s_bucket), np.int32)
         padded[0, :p_len] = toks
-        exe = cache.get(
-            ("decode-prefill", cfg, s_bucket, b_kv),
-            lambda: _compile_prefill(model, weights, b_kv, s_bucket))
-        tok0, kq, vq, ks, vs = exe(weights, jnp.asarray(padded),
-                                   jnp.asarray([p_len - 1], jnp.int32))
-        cont = _container_dtype(cfg, b_kv)
         shape = (cfg.n_layers, 1, t_bucket, cfg.n_kv_heads, cfg.head_dim)
-        k_codes = np.zeros(shape, cont)
-        v_codes = np.zeros(shape, cont)
-        k_scales = np.ones(shape[:-1], np.float32)
-        v_scales = np.ones(shape[:-1], np.float32)
-        k_codes[:, :, :s_bucket] = np.asarray(kq)
-        v_codes[:, :, :s_bucket] = np.asarray(vq)
-        k_scales[:, :, :s_bucket] = np.asarray(ks)
-        v_scales[:, :, :s_bucket] = np.asarray(vs)
-        pos = p_len
-        last = int(np.asarray(tok0)[0])
-        out.append(last)
+        k_codes = jnp.zeros(shape, cont)
+        v_codes = jnp.zeros(shape, cont)
+        k_scales = jnp.ones(shape[:-1], jnp.float32)
+        v_scales = jnp.ones(shape[:-1], jnp.float32)
+        pos = jnp.zeros((1,), jnp.int32)
+        tok = jnp.zeros((1,), jnp.int32)
+        exe = cache.get(
+            ("decode-prefill", cfg, s_bucket, t_bucket, 1, b_kv),
+            lambda: _compile_prefill(model, weights, b_kv, s_bucket,
+                                     t_bucket, 1))
+        tok0, k_codes, v_codes, k_scales, v_scales, pos, tok = exe(
+            weights, jnp.asarray(padded),
+            jnp.asarray([p_len - 1], jnp.int32), jnp.asarray(0, jnp.int32),
+            k_codes, v_codes, k_scales, v_scales, pos, tok)
+        out.append(int(np.asarray(tok0)[0]))
         remaining = max_new_tokens - 1
     else:
-        k_codes = np.asarray(state["k_codes"])
-        v_codes = np.asarray(state["v_codes"])
-        k_scales = np.asarray(state["k_scales"])
-        v_scales = np.asarray(state["v_scales"])
-        pos = int(state["pos"])
-        last = int(state["last_token"])
+        k_codes = jnp.asarray(np.asarray(state["k_codes"]))
+        v_codes = jnp.asarray(np.asarray(state["v_codes"]))
+        k_scales = jnp.asarray(np.asarray(state["k_scales"]))
+        v_scales = jnp.asarray(np.asarray(state["v_scales"]))
+        pos = jnp.asarray([int(state["pos"])], jnp.int32)
+        tok = jnp.asarray([int(state["last_token"])], jnp.int32)
         t_bucket = int(state["t_bucket"])
         remaining = max_new_tokens
-    for _ in range(remaining):
+    live = jnp.ones((1,), jnp.int32)
+    eos = jnp.asarray(-1, jnp.int32)
+    while remaining > 0:
         exe = cache.get(
-            ("decode-step", cfg, 1, t_bucket, b_kv),
-            lambda: _compile_decode(model, weights, b_kv, 1, t_bucket))
-        nxt, kc, vc, ks_, vs_ = exe(
-            weights, jnp.asarray(k_codes), jnp.asarray(v_codes),
-            jnp.asarray(k_scales), jnp.asarray(v_scales),
-            jnp.asarray([[last]], jnp.int32),
-            jnp.asarray([pos], jnp.int32))
-        k_codes = np.asarray(kc)
-        v_codes = np.asarray(vc)
-        k_scales = np.asarray(ks_)
-        v_scales = np.asarray(vs_)
-        pos += 1
-        last = int(np.asarray(nxt)[0])
-        out.append(last)
+            ("decode-fused", cfg, 1, t_bucket, b_kv),
+            lambda: _compile_fused(model, weights, b_kv, 1, t_bucket))
+        blk, steps, k_codes, v_codes, k_scales, v_scales, tok, pos = exe(
+            weights, k_codes, v_codes, k_scales, v_scales, tok, pos,
+            live, eos, jnp.asarray(min(remaining, _CHUNK), jnp.int32))
+        blk = np.asarray(blk)
+        steps = int(steps)
+        out.extend(int(blk[0, j]) for j in range(steps))
+        remaining -= steps
     result = np.asarray(out, np.int32)
     if return_state:
-        return result, {"k_codes": k_codes, "v_codes": v_codes,
-                        "k_scales": k_scales, "v_scales": v_scales,
-                        "pos": np.int32(pos), "last_token": np.int32(last),
+        return result, {"k_codes": np.asarray(k_codes),
+                        "v_codes": np.asarray(v_codes),
+                        "k_scales": np.asarray(k_scales),
+                        "v_scales": np.asarray(v_scales),
+                        "pos": np.int32(np.asarray(pos)[0]),
+                        "last_token": np.int32(np.asarray(tok)[0]),
                         "t_bucket": np.int32(t_bucket)}
     return result

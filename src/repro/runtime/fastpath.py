@@ -55,7 +55,7 @@ from ..models import layers as L
 __all__ = ["CompiledForwardCache", "SegmentDesc", "restack_segments",
            "layer_side_tree", "quantized_block", "scan_segment",
            "transport_quantize", "forward_bounds", "build_forward",
-           "compile_forward"]
+           "compile_forward", "aot_compile"]
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +304,24 @@ def _sds(tree):
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
 
 
+def aot_compile(fn, args, *, donate_argnums=()):
+    """``jit(fn, donate_argnums).lower(*args).compile()`` with the
+    donation-advisory noise suppressed.
+
+    ``args`` are ShapeDtypeStructs (or arrays).  On backends that cannot
+    alias a donated buffer (CPU for small int arrays) XLA simply drops
+    the donation and emits an advisory UserWarning; the executables this
+    repo builds donate deliberately chosen scratch, so the warning is
+    noise.  Shared by :func:`compile_forward` and the decode engine's
+    prefill/fused-step compiles (DESIGN.md §13).
+    """
+    jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message=".*donated.*", category=UserWarning)
+        return jitted.lower(*args).compile()
+
+
 def compile_forward(forward, params, agent, batch: int, seq: int,
                     n_bounds: int):
     """AOT-compile ``forward`` for one (batch, seq) bucket.
@@ -312,17 +330,12 @@ def compile_forward(forward, params, agent, batch: int, seq: int,
     the engine rebuilds every step, so XLA may reuse them for activations.
     Returns the compiled executable (callable with concrete arrays).
     """
-    jitted = jax.jit(forward, donate_argnums=(2, 3))
     tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
     lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
     bounds = jax.ShapeDtypeStruct((n_bounds,), jnp.int32)
-    with warnings.catch_warnings():
-        # on backends that cannot alias the small int buffers the
-        # donation is simply dropped; the advisory warning is noise here
-        warnings.filterwarnings(
-            "ignore", message=".*donated.*", category=UserWarning)
-        return jitted.lower(_sds(params), _sds(agent), tok, lens,
-                            bounds).compile()
+    return aot_compile(forward,
+                       (_sds(params), _sds(agent), tok, lens, bounds),
+                       donate_argnums=(2, 3))
 
 
 # ---------------------------------------------------------------------------

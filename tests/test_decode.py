@@ -160,6 +160,46 @@ def test_decode_streaming_matches_response(qwen, shared_cache):
         assert times[-1] <= r.finished_s + 1e-9
 
 
+def test_decode_eos_early_exit(qwen, shared_cache):
+    """``eos_id`` retires a request at its first emission of that token:
+    the response is the reference's prefix through the EOS, nothing is
+    emitted past it, and batch-mates are untouched (DESIGN.md §13 —
+    the fused chunk exits its while-loop early, which must be invisible
+    to everything but the truncation point)."""
+    _, model, params = qwen
+    toks = np.arange(3, 15, dtype=np.int32)
+    budget = 8
+    eng0 = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                        max_batch=2, max_new_tokens=budget,
+                        compile_cache=shared_cache)
+    eng0.set_operating_point(QOS.name, 8, 8)
+    ref = greedy_decode_reference(model, eng0.class_params(QOS.name),
+                                  toks, budget, b_kv=8,
+                                  compile_cache=shared_cache)
+    # pick an EOS the stream emits strictly after the first token and
+    # never before (so the prefill token does not trip it)
+    cut = next(j for j in range(1, budget)
+               if ref[j] not in ref[:j].tolist())
+    eng = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                       max_batch=2, max_new_tokens=budget,
+                       eos_id=int(ref[cut]), compile_cache=shared_cache)
+    eng.set_operating_point(QOS.name, 8, 8)
+    rid_eos = eng.submit(toks, QOS.name, arrival_s=0.0)
+    rid_full = eng.submit(np.arange(5, 25, dtype=np.int32), QOS.name,
+                          arrival_s=0.0)
+    got = {r.request_id: r for r in eng.drain()}
+    np.testing.assert_array_equal(np.asarray(got[rid_eos].tokens),
+                                  ref[:cut + 1])
+    # the batch-mate without an EOS in its stream runs to budget and
+    # still matches its own reference
+    mate_ref = greedy_decode_reference(
+        model, eng.class_params(QOS.name),
+        np.arange(5, 25, dtype=np.int32), len(got[rid_full].tokens),
+        b_kv=8, compile_cache=shared_cache)
+    np.testing.assert_array_equal(np.asarray(got[rid_full].tokens),
+                                  mate_ref)
+
+
 # ---------------------------------------------------------------------------
 # compile-count bound + warmup (mirrors test_fastpath)
 # ---------------------------------------------------------------------------
@@ -178,8 +218,13 @@ def test_decode_compile_count_bounded_and_warm_traffic_never_recompiles(
     max_prompt = 40
     warm = eng.warmup(max_prompt)
     n_kv = len({eng.b_kv_for(c.name) for c in classes})
-    bound = (len(seq_ladder(max_prompt))
-             + len(seq_ladder(max_prompt + 8))) * n_kv
+    # prefill executables are keyed on (prompt bucket, cache bucket)
+    # pairs — the in-executable slot scatter makes the cache shape part
+    # of the graph — plus one fused-chunk executable per cache bucket
+    t_rungs = seq_ladder(max_prompt + 8)
+    pairs = sum(1 for s in seq_ladder(max_prompt) for t in t_rungs
+                if t >= s)
+    bound = (pairs + len(t_rungs)) * n_kv
     assert 0 < warm <= bound
     miss0 = cache.misses
 

@@ -137,8 +137,9 @@ def test_decode_request_retired_mid_decode():
         prompts[eng.submit(toks, "c", arrival_s=0.0)] = toks
     rids = list(prompts)
     # two in flight, one queued; kill an in-flight request mid-decode
+    # (one-token steps so the fused chunk cannot run anyone to budget)
     for _ in range(3):
-        eng.step()
+        eng.step(max_decode_steps=1)
     assert eng.in_flight == 2
     dead = eng.cancel(rids[0])
     assert dead is not None and dead.cancelled

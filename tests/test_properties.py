@@ -168,6 +168,47 @@ def test_kv_quantize_zero_vector_is_safe(bits, d):
                                   x)
 
 
+@settings(max_examples=25, deadline=None)
+@given(b_kv=st.sampled_from([4, 8, 16]),
+       dh=st.sampled_from([8, 16]),
+       len0=st.integers(min_value=1, max_value=32),
+       len1=st.integers(min_value=1, max_value=32),
+       grow=st.sampled_from([16, 32, 96]),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_cache_bucket_padding_is_attention_invisible(b_kv, dh, len0, len1,
+                                                     grow, seed):
+    """Growing a request's cache bucket (T -> T + grow) around identical
+    live entries changes the fused decode attention output by ZERO bits:
+    padded positions sit in fully-masked tiles, and a fully-masked
+    tile's online-softmax update is an exact no-op (DESIGN.md §13).
+    This is the invariant that lets the engine bucket each request's
+    cache from its own (prompt, budget) independent of its batch-mates
+    while staying bitwise-comparable to the sequential reference."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attn import quantized_decode_attention
+
+    t = 32
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((2, 1, 4, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, t, 2, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, t, 2, dh)), jnp.float32)
+    if b_kv < 16:
+        kc, ks = kv_quantize(k, b_kv)
+        vc, vs = kv_quantize(v, b_kv)
+    else:
+        kc, vc = k, v
+        ks = jnp.ones(k.shape[:-1], jnp.float32)
+        vs = jnp.ones(v.shape[:-1], jnp.float32)
+    lens = jnp.asarray([len0, len1], jnp.int32)
+    pad = [(0, 0), (0, grow), (0, 0), (0, 0)]
+    out = quantized_decode_attention(q, kc, vc, ks, vs, lens, block_t=16)
+    out_pad = quantized_decode_attention(
+        q, jnp.pad(kc, pad), jnp.pad(vc, pad),
+        jnp.pad(ks, pad[:-1]), jnp.pad(vs, pad[:-1]), lens, block_t=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_pad))
+
+
 def test_kv_quantize_spot_checks():
     assert kv_levels(4) == 7 and kv_levels(8) == 127
     x = np.array([[1.0, -2.0, 0.5, 2.0]], np.float32)
