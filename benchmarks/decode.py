@@ -45,6 +45,7 @@ from repro.configs import get_smoke
 from repro.core.cost_model import SystemParams
 from repro.kernels.bucketing import seq_bucket, seq_ladder
 from repro.models.registry import build_model
+from repro.obs import NULL_METRICS, MetricsRegistry
 from repro.runtime import (CompiledForwardCache, DecodeEngine, QosClass,
                            greedy_decode_reference)
 
@@ -103,10 +104,11 @@ def traffic(cfg, seed: int = 7):
 
 
 def serve(admission: str, model, params, sysp,
-          compile_cache: CompiledForwardCache):
+          compile_cache: CompiledForwardCache, metrics=NULL_METRICS):
     eng = DecodeEngine(model, params, sysp, classes=CLASSES,
                        max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
-                       admission=admission, compile_cache=compile_cache)
+                       admission=admission, compile_cache=compile_cache,
+                       metrics=metrics)
     warm = eng.warmup(SEQ)
     prompts = {}
     for toks, qos, n_new, t in traffic(model.cfg):
@@ -143,10 +145,14 @@ def run() -> dict:
     print(f"arch={cfg.name} max_batch={MAX_BATCH} prompts<= {SEQ} "
           f"new<= {MAX_NEW} ({N_REQUESTS} ragged requests, smoke scale)")
 
+    # instrument the continuous run only, so the snapshot attached to
+    # BENCH_history.jsonl (DESIGN.md §14) describes the headline policy
+    metrics = MetricsRegistry()
     reports, rows, parity, warm_by, wall_by = {}, [], {}, {}, {}
     for admission in ("barrier", "continuous"):
         eng, rep, responses, prompts, warm, wall_s = serve(
-            admission, model, params, sysp, shared)
+            admission, model, params, sysp, shared,
+            metrics=metrics if admission == "continuous" else NULL_METRICS)
         reports[admission] = rep
         warm_by[admission] = warm
         wall_by[admission] = wall_s
@@ -246,14 +252,12 @@ def run() -> dict:
                      "bytes_per_token_device_resident": after_bpt,
                      "h2d_bytes": rep.h2d_bytes,
                      "d2h_bytes": rep.d2h_bytes},
-        "classes": [{"qos": cs.qos, "b_hat": cs.b_hat, "b_kv": cs.b_kv,
-                     "ttft_mean_s": cs.ttft_mean_s,
-                     "itl_mean_s": cs.itl_mean_s,
-                     "itl_p50_s": cs.itl_p50_s,
-                     "itl_p95_s": cs.itl_p95_s}
-                    for cs in rep.classes],
+        # the per-class report dataclass serializes itself (DESIGN.md
+        # §14) — a superset of the hand-picked keys this used to list
+        "classes": [cs.to_dict() for cs in rep.classes],
         "compile_count": cc,
         "acceptance": acceptance,
+        "metrics": metrics.snapshot(),
     }
     regression = check_regression(speedup, wall_tps)
     if regression:

@@ -130,13 +130,11 @@ def run_allocator(allocator: str, specs, streams, refs) -> dict:
                    for i in range(len(streams[s.name])))
         dist /= len(streams[s.name])
         agg_dist += s.weight * dist
-        per_agent.append({
-            "name": pa.name, "share": pa.share, "b_hat": pa.b_hat,
-            "bound": pa.bound, "distortion": dist,
-            "requests": pa.requests_served,
-            "violations": pa.deadline_violations,
-            "occupancy": pa.mean_occupancy,
-        })
+        # per-agent stats serialize themselves (DESIGN.md §14); only the
+        # benchmark-side distortion score is hand-added
+        row = pa.to_dict()
+        row["distortion"] = dist
+        per_agent.append(row)
     return {
         "allocator": allocator,
         "aggregate_bound": rep.aggregate_bound,
@@ -189,7 +187,7 @@ def run() -> dict:
                "violations"],
               [[p["name"], f"{p['share']:.3f}", p["b_hat"],
                 f"{p['bound']:.3e}", f"{p['distortion']:.2f}",
-                p["violations"]] for p in r["per_agent"]])
+                p["deadline_violations"]] for p in r["per_agent"]])
 
     bitwise = verify_single_agent_bitwise(specs, streams)
     acceptance = {

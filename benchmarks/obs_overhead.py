@@ -1,0 +1,209 @@
+"""Observability overhead gate: decode throughput traced vs untraced
+(DESIGN.md §14).
+
+The obs layer's contract is two-sided:
+
+  1. *Disabled is free.*  Engines built without a tracer/metrics get the
+     module-level no-op singletons (``NULL_TRACER`` / ``NULL_METRICS``)
+     — verified by identity, plus a microbenchmark that the null span
+     costs nanoseconds and buffers nothing.
+  2. *Enabled is cheap.*  The same decode stream served through a live
+     ``Tracer`` + ``MetricsRegistry`` must stay within
+     ``OVERHEAD_TOLERANCE`` (3%) of the untraced wall-clock tok/s,
+     best-of-``REPEATS`` to absorb machine jitter, and the generated
+     tokens must be **bitwise identical** — instrumentation observes the
+     run, it never perturbs it.
+
+``run()`` RAISES when either side fails, so CI's extras job turns an
+obs-layer regression into a red build.  Results (including the traced
+run's metrics snapshot) land in ``BENCH_obs.json`` and, via
+``benchmarks/run.py``, on the BENCH_history.jsonl row.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only obs_overhead
+  or  PYTHONPATH=src python benchmarks/obs_overhead.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.models.registry import build_model
+from repro.obs import NULL_METRICS, NULL_TRACER, MetricsRegistry, Tracer
+from repro.runtime import CompiledForwardCache, DecodeEngine, QosClass
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SEQ = 16
+MAX_NEW = 8
+MAX_BATCH = 4
+N_REQUESTS = 10
+REPEATS = 3              # best-of, alternating modes to decorrelate drift
+OVERHEAD_TOLERANCE = 0.03
+# null-span microbench: generous per-call ceiling — the no-op singleton
+# is two attribute lookups and a constant return, ~100x under this
+NULL_SPAN_BUDGET_S = 2.0e-6
+CLASSES = [
+    QosClass("realtime", t0=1.2, e0=1.0),
+    QosClass("interactive", t0=3.5, e0=2.0),
+]
+
+
+def make_sysp(cfg) -> SystemParams:
+    per_layer = cfg.active_param_count() / max(cfg.n_layers, 1)
+    tokens = MAX_BATCH * SEQ
+    kv_full = (2.0 * cfg.n_layers * MAX_BATCH * (SEQ + MAX_NEW)
+               * cfg.n_kv_heads * cfg.head_dim
+               * np.dtype(cfg.dtype).itemsize)
+    return SystemParams(
+        n_flop_agent=2.0 * per_layer * cfg.split_layer * tokens,
+        n_flop_server=2.0 * per_layer
+        * (cfg.n_layers - cfg.split_layer) * tokens,
+        kv_bytes_full=kv_full, kv_bw_bps=kv_full, kv_power_w=2.0)
+
+
+def traffic(cfg, seed: int = 11):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(N_REQUESTS):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(SEQ // 2, SEQ + 1)))
+        out.append((toks.astype(np.int32), CLASSES[i % len(CLASSES)].name,
+                    int(rng.integers(2, MAX_NEW + 1)), 0.01 * i))
+    return out
+
+
+def serve_once(model, params, sysp, cache, tracer, metrics):
+    """One full drain of the shared stream; returns (wall_s, tokens)."""
+    eng = DecodeEngine(model, params, sysp, classes=CLASSES,
+                       max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
+                       compile_cache=cache, tracer=tracer, metrics=metrics)
+    eng.warmup(SEQ)        # hits the shared cache after the first engine
+    for toks, qos, n_new, t in traffic(model.cfg):
+        eng.submit(toks, qos, max_new_tokens=n_new, arrival_s=t)
+    t0 = time.perf_counter()
+    responses = eng.drain()
+    wall_s = time.perf_counter() - t0
+    tokens = [np.asarray(r.tokens)
+              for r in sorted(responses, key=lambda r: r.request_id)]
+    return wall_s, tokens
+
+
+def null_span_cost(n: int = 100_000) -> float:
+    """Seconds per NULL_TRACER.span(...) enter/exit round trip."""
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with NULL_TRACER.span("x", qos="a", n=4):
+            pass
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = make_sysp(cfg)
+    cache = CompiledForwardCache()   # shared: every mode runs warm
+    print(f"arch={cfg.name} max_batch={MAX_BATCH} prompts<= {SEQ} "
+          f"new<= {MAX_NEW} ({N_REQUESTS} requests, best of {REPEATS})")
+
+    # --- disabled is free: structural + microbenched -------------------
+    eng = DecodeEngine(model, params, sysp, classes=CLASSES,
+                       max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
+                       compile_cache=cache)
+    default_is_null = (eng.tracer is NULL_TRACER
+                       and eng.metrics is NULL_METRICS)
+    span_cost = null_span_cost()
+    null_buffers_nothing = len(NULL_TRACER.events) == 0
+    print(f"disabled path: default tracer is the no-op singleton="
+          f"{default_is_null}, null span {span_cost * 1e9:.0f} ns/call "
+          f"(budget {NULL_SPAN_BUDGET_S * 1e9:.0f} ns), "
+          f"buffered events={len(NULL_TRACER.events)}")
+
+    # --- enabled overhead: alternate modes, keep the best of each ------
+    walls = {"off": [], "on": []}
+    tokens_by = {}
+    metrics = None
+    for rep in range(REPEATS):
+        w, toks = serve_once(model, params, sysp, cache,
+                             NULL_TRACER, NULL_METRICS)
+        walls["off"].append(w)
+        tokens_by.setdefault("off", toks)
+        tr, metrics = Tracer(), MetricsRegistry()
+        w, toks = serve_once(model, params, sysp, cache, tr, metrics)
+        walls["on"].append(w)
+        tokens_by.setdefault("on", toks)
+
+    n_tok = sum(len(t) for t in tokens_by["off"])
+    best = {k: min(v) for k, v in walls.items()}
+    overhead = best["on"] / best["off"] - 1.0
+    bitwise = (len(tokens_by["off"]) == len(tokens_by["on"])
+               and all(np.array_equal(a, b)
+                       for a, b in zip(tokens_by["off"], tokens_by["on"])))
+    table(["tracing", "best drain", "tok/s wall"],
+          [[k, f"{best[k] * 1e3:.1f} ms", f"{n_tok / best[k]:.1f}"]
+           for k in ("off", "on")])
+    print(f"enabled overhead: {overhead * 100:+.2f}% "
+          f"(tolerance {OVERHEAD_TOLERANCE * 100:.0f}%), "
+          f"bitwise-identical tokens={bitwise}")
+
+    acceptance = {
+        "default_obs_is_noop_singleton": default_is_null,
+        "null_tracer_buffers_nothing": null_buffers_nothing,
+        "null_span_within_budget": span_cost < NULL_SPAN_BUDGET_S,
+        "enabled_overhead_within_tolerance":
+            overhead <= OVERHEAD_TOLERANCE,
+        "traced_equals_untraced_bitwise": bitwise,
+    }
+    ok = all(v for v in acceptance.values() if isinstance(v, bool))
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'}")
+    for k, v in acceptance.items():
+        print(f"  {k}: {v}")
+
+    results = {
+        "acceptance_ok": ok,
+        "arch": cfg.name, "requests": N_REQUESTS, "repeats": REPEATS,
+        # the tracked ratio: traced / untraced wall clock (1.0 = free)
+        "ratio": best["on"] / best["off"],
+        "overhead_frac": overhead,
+        "overhead_tolerance": OVERHEAD_TOLERANCE,
+        "null_span_seconds": span_cost,
+        "wall_s": {k: {"best": best[k], "all": walls[k]}
+                   for k in ("off", "on")},
+        "tokens_generated": n_tok,
+        "acceptance": acceptance,
+        "metrics": metrics.snapshot() if metrics is not None else {},
+    }
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    if not ok:
+        # CI runs this section in the extras job; a 3%+ tracing tax or a
+        # single perturbed token must fail the build (DESIGN.md §14)
+        raise RuntimeError(f"obs overhead acceptance failed: {acceptance}")
+    return results
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the overhead numbers as ``BENCH_obs.json`` at the repo root
+    — the machine-readable obs perf record diffed across PRs."""
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_obs.json"
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+if __name__ == "__main__":
+    run()

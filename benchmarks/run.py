@@ -31,6 +31,10 @@ Sections (paper artifact -> module):
             (also writes BENCH_decode.json at the repo root; raises if
              continuous admission stops beating the barrier, decode
              parity breaks, or warm traffic compiles)
+    obs_overhead decode tok/s traced vs untraced      obs_overhead.py
+            (also writes BENCH_obs.json at the repo root; raises if
+             enabled tracing costs more than 3%, the disabled no-op
+             path is not free, or tracing perturbs a single token)
 """
 
 from __future__ import annotations
@@ -45,8 +49,8 @@ import time
 
 from . import (adaptive_serve, codesign_sweep, decode, distortion,
                fastpath, fleet, kernel_bench, mixed_precision_sweep,
-               rd_bounds, serve_throughput, testbed_profiles,
-               weight_stats)
+               obs_overhead, rd_bounds, serve_throughput,
+               testbed_profiles, weight_stats)
 from .common import banner
 
 SECTIONS = {
@@ -68,6 +72,8 @@ SECTIONS = {
               fleet.run),
     "decode": ("Decode  continuous-batching vs FIFO-barrier over a "
                "quantized KV cache", decode.run),
+    "obs_overhead": ("Observability  decode tok/s traced vs untraced "
+                     "(3% gate, bitwise parity)", obs_overhead.run),
 }
 
 
@@ -76,6 +82,19 @@ SECTIONS = {
 # BENCH_history.jsonl
 _METRIC_KEYS = ("speedup", "throughput_ratio", "ratio", "tps",
                 "throughput_tps", "acceptance_ok")
+
+# BENCH_history.jsonl row schema: bumped to 2 when the rows gained
+# explicit schema_version/units fields and the optional metrics
+# snapshot (DESIGN.md §14); v1 rows (no schema_version key) predate it
+_HISTORY_SCHEMA_VERSION = 2
+
+# units for each trackable metric, so a history row is interpretable
+# without chasing the producing section's source
+_METRIC_UNITS = {
+    "speedup": "ratio", "throughput_ratio": "ratio", "ratio": "ratio",
+    "tps": "tokens/s", "throughput_tps": "tokens/s",
+    "acceptance_ok": "bool",
+}
 
 
 def _git_sha() -> "str | None":
@@ -115,14 +134,24 @@ def append_history(section: str, result, seconds: float,
             / "BENCH_history.jsonl"
     metric = _key_metric(result)
     entry = {
+        "schema_version": _HISTORY_SCHEMA_VERSION,
         "ts": datetime.datetime.now(datetime.timezone.utc)
         .strftime("%Y-%m-%dT%H:%M:%SZ"),
         "git_sha": _git_sha(),
         "section": section,
         "metric": metric[0] if metric else None,
         "value": metric[1] if metric else None,
+        "units": _METRIC_UNITS.get(
+            metric[0].rsplit(".", 1)[-1]) if metric else None,
         "seconds": round(seconds, 3),
     }
+    # sections that serve through instrumented engines may attach a
+    # MetricsRegistry snapshot under "metrics" (DESIGN.md §14) — carry
+    # it onto the history row so counter/histogram series stay greppable
+    # across the PR stack alongside the headline number
+    if isinstance(result, dict) and isinstance(result.get("metrics"),
+                                               dict):
+        entry["metrics"] = result["metrics"]
     with path.open("a", encoding="utf-8") as f:
         f.write(json.dumps(entry, sort_keys=True) + "\n")
 

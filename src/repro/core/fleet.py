@@ -187,11 +187,15 @@ class FleetSolution:
     aggregate_bound: float      # Σ w_i (D^U - D^L) at the solutions
     upgrades: int = 0           # greedy single-bit upgrades applied
     solves: int = 0
+    # one record per greedy upgrade, in application order:
+    # (agent name, new bit-width, share spent, marginal gain/share ratio)
+    # — the decision log the fleet engine's tracer replays (DESIGN.md §14)
+    upgrade_log: tuple = ()
 
 
 def _finalize(agents: Sequence[FleetAgent], shares: Sequence[float],
               solver: str, *, share_link: bool, upgrades: int = 0,
-              ) -> Optional[FleetSolution]:
+              upgrade_log: tuple = ()) -> Optional[FleetSolution]:
     """Solve every agent at its final share and assemble the record."""
     sols = []
     for a, s in zip(agents, shares):
@@ -205,7 +209,8 @@ def _finalize(agents: Sequence[FleetAgent], shares: Sequence[float],
     return FleetSolution(solver=solver, shares=tuple(float(s)
                                                      for s in shares),
                          solutions=tuple(sols), aggregate_bound=float(agg),
-                         upgrades=upgrades, solves=len(sols))
+                         upgrades=upgrades, solves=len(sols),
+                         upgrade_log=upgrade_log)
 
 
 def _validate(agents: Sequence[FleetAgent]) -> None:
@@ -282,6 +287,7 @@ def solve_fleet(agents: Sequence[FleetAgent], *,
         return thresholds[i][b]
 
     upgrades = 0
+    upgrade_log: list = []
     while leftover > _EPS:
         best, best_ratio, best_cost = -1, -1.0, 0.0
         for i, a in enumerate(agents):
@@ -306,9 +312,12 @@ def solve_fleet(agents: Sequence[FleetAgent], *,
         shares[best] += best_cost
         leftover -= best_cost
         upgrades += 1
+        upgrade_log.append((agents[best].name, bits[best],
+                            float(best_cost), float(best_ratio)))
 
     if leftover > _EPS:
         extra = leftover / n
         shares = [s + extra for s in shares]
     return _finalize(agents, shares, "water-filling",
-                     share_link=share_link, upgrades=upgrades)
+                     share_link=share_link, upgrades=upgrades,
+                     upgrade_log=tuple(upgrade_log))

@@ -46,6 +46,7 @@ from ..core.cost_model import SystemParams
 from ..data import MarkovLMConfig, MarkovLMDataset
 from ..env import presets as env_presets
 from ..models.registry import build_model
+from ..obs import NULL_METRICS, NULL_TRACER, MetricsRegistry, Tracer
 from ..runtime import (AdaptiveCoInferenceEngine, BatchedCoInferenceEngine,
                        CodesignCache, CoInferenceEngine, DecodeEngine,
                        FleetAgentSpec, FleetCoInferenceEngine, QosClass,
@@ -114,10 +115,29 @@ def main(argv=None):
                     help="fleet share allocator: water-filling joint "
                          "codesign or the equal-split baseline "
                          "(default: the spec's choice, else joint)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(DESIGN.md §14) — load it in Perfetto/"
+                         "chrome://tracing or feed tools/trace_summary.py")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.json",
+                    help="write a JSON metrics snapshot (counters/gauges/"
+                         "histograms, DESIGN.md §14) at the end of the run")
     args = ap.parse_args(argv)
 
+    # observability is strictly opt-in: without the flags the engines get
+    # the module-level no-op singletons and pay nothing (DESIGN.md §14)
+    tracer = Tracer() if args.trace_out else NULL_TRACER
+    metrics = MetricsRegistry() if args.metrics_out else NULL_METRICS
+    try:
+        rc = _dispatch(args, tracer, metrics)
+    finally:
+        _write_obs(args, tracer, metrics)
+    return rc
+
+
+def _dispatch(args, tracer, metrics):
     if args.fleet is not None:
-        return serve_fleet(args)
+        return serve_fleet(args, tracer, metrics)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg is None:
@@ -146,12 +166,23 @@ def main(argv=None):
         * (cfg.n_layers - cfg.split_layer) * tokens)
 
     if args.decode:
-        return serve_decode(cfg, model, params, sysp, args)
+        return serve_decode(cfg, model, params, sysp, args, tracer, metrics)
     if args.env_trace is not None:
-        return serve_adaptive(cfg, model, params, args)
+        return serve_adaptive(cfg, model, params, args, tracer, metrics)
     if args.engine == "batched":
-        return serve_batched(cfg, model, params, sysp, args)
-    return serve_sequential(cfg, model, params, sysp, args)
+        return serve_batched(cfg, model, params, sysp, args, tracer, metrics)
+    return serve_sequential(cfg, model, params, sysp, args, tracer, metrics)
+
+
+def _write_obs(args, tracer, metrics):
+    """Flush --trace-out / --metrics-out files (in a finally, so a failed
+    run still leaves a loadable partial trace behind for debugging)."""
+    if args.trace_out and tracer.enabled:
+        tracer.write(args.trace_out)
+        print(f"trace: {len(tracer.events)} events -> {args.trace_out}")
+    if args.metrics_out and metrics.enabled:
+        metrics.write(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
 
 
 def unsupported_model_reason(model, arch: str, compiled: bool,
@@ -187,9 +218,11 @@ def unsupported_model_reason(model, arch: str, compiled: bool,
     return None
 
 
-def serve_sequential(cfg, model, params, sysp, args):
+def serve_sequential(cfg, model, params, sysp, args,
+                     tracer=NULL_TRACER, metrics=NULL_METRICS):
     eng = CoInferenceEngine(model, params, sysp, path=args.path,
-                            compiled=args.compiled)
+                            compiled=args.compiled,
+                            tracer=tracer, metrics=metrics)
     print(f"arch={cfg.name} split={cfg.split_layer}/{cfg.n_layers} "
           f"lambda_hat={eng.lam:.2f} path={args.path} engine=sequential "
           f"compiled={args.compiled}")
@@ -238,7 +271,8 @@ def serve_sequential(cfg, model, params, sysp, args):
     return 0
 
 
-def serve_adaptive(cfg, model, params, args):
+def serve_adaptive(cfg, model, params, args,
+                   tracer=NULL_TRACER, metrics=NULL_METRICS):
     """Serve a request stream spread across a dynamic-environment trace
     through ``AdaptiveCoInferenceEngine`` (DESIGN.md §9)."""
     env = ENV_TRACES[args.env_trace](seed=args.env_seed)
@@ -255,7 +289,8 @@ def serve_adaptive(cfg, model, params, args):
     eng = AdaptiveCoInferenceEngine(
         model, params, sysp, classes=classes, max_batch=args.max_batch,
         path=args.path, environment=env, policy=args.adaptive_policy,
-        mixed_precision=args.mixed_precision, compiled=args.compiled)
+        mixed_precision=args.mixed_precision, compiled=args.compiled,
+        tracer=tracer, metrics=metrics)
     print(f"arch={cfg.name} env={args.env_trace} (seed {args.env_seed}, "
           f"{env.n_steps} x {env.dt_s}s) policy={args.adaptive_policy} "
           f"engine=adaptive")
@@ -296,7 +331,8 @@ def serve_adaptive(cfg, model, params, args):
     return 0
 
 
-def serve_decode(cfg, model, params, sysp, args):
+def serve_decode(cfg, model, params, sysp, args,
+                 tracer=NULL_TRACER, metrics=NULL_METRICS):
     """Continuous-batching greedy decode over a quantized KV cache
     (DESIGN.md §12) through ``DecodeEngine``."""
     # give the codesign a KV-cost term sized to this model's cache so the
@@ -319,7 +355,8 @@ def serve_decode(cfg, model, params, sysp, args):
                            max_batch=args.max_batch,
                            max_new_tokens=args.max_new,
                            mixed_precision=args.mixed_precision,
-                           codesign_cache=cache)
+                           codesign_cache=cache,
+                           tracer=tracer, metrics=metrics)
     except ValueError as e:
         print(e)
         return 1
@@ -384,7 +421,8 @@ def serve_decode(cfg, model, params, sysp, args):
     return 0
 
 
-def serve_batched(cfg, model, params, sysp, args):
+def serve_batched(cfg, model, params, sysp, args,
+                  tracer=NULL_TRACER, metrics=NULL_METRICS):
     classes = [
         QosClass("realtime", t0=max(args.t0 / 3.0, 0.2),
                  e0=max(args.e0 / 2.0, 0.2)),
@@ -397,7 +435,8 @@ def serve_batched(cfg, model, params, sysp, args):
             model, params, sysp, classes=classes, max_batch=args.max_batch,
             path=args.path, codesign_cache=cache,
             mixed_precision=args.mixed_precision,
-            compiled=args.compiled)
+            compiled=args.compiled,
+            tracer=tracer, metrics=metrics)
     except ValueError as e:
         print(e)
         return 1
@@ -460,7 +499,7 @@ def serve_batched(cfg, model, params, sysp, args):
     return 0
 
 
-def serve_fleet(args):
+def serve_fleet(args, tracer=NULL_TRACER, metrics=NULL_METRICS):
     """Serve a multi-agent fleet from a JSON spec (DESIGN.md §11).
 
     The spec's ``agents`` list gives one entry per fleet member: ``name``
@@ -540,7 +579,8 @@ def serve_fleet(args):
         fleet = FleetCoInferenceEngine(specs, allocator=allocator,
                                        max_batch=max_batch, path=path,
                                        compiled=compiled,
-                                       mixed_precision=mixed)
+                                       mixed_precision=mixed,
+                                       tracer=tracer, metrics=metrics)
     except (TypeError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

@@ -47,6 +47,7 @@ from ..core import codesign as cd
 from ..core import mixed_precision as mp
 from ..core.cost_model import SystemParams, total_delay, total_energy
 from ..env.environment import Environment, EnvState
+from ..obs import ReportBase
 from .serve_engine import (BatchedCoInferenceEngine, QosClass,
                            ServeResponse)
 
@@ -66,7 +67,7 @@ class ReplanEvent:
 
 
 @dataclasses.dataclass(frozen=True)
-class AdaptiveReport:
+class AdaptiveReport(ReportBase):
     """Whole-run controller accounting, complementing ``EngineReport``."""
     policy: str
     requests_served: int
@@ -230,10 +231,18 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
         self._drift_streak[name] = 0
         self._miss_streak[name] = 0
         self._last_replan_t[name] = t
+        degraded = not getattr(sol, "feasible", True)
         self.replan_events.append(ReplanEvent(
             t_s=t, qos=name, reason=reason, env_key=key,
             b_before=self._mean_bits(old), b_after=self._mean_bits(sol),
-            degraded=not getattr(sol, "feasible", True)))
+            degraded=degraded))
+        self.tracer.instant("adaptive.replan", qos=name, reason=reason,
+                            env_key=str(key),
+                            b_before=self._mean_bits(old),
+                            b_after=self._mean_bits(sol),
+                            degraded=degraded)
+        self.metrics.counter("adaptive.replans", engine="Adaptive",
+                             qos=name, reason=reason).inc()
 
     def _maybe_replan(self, name: str, state: EnvState, t: float) -> None:
         """The per-batch controller decision: never for ``static``, on
@@ -257,14 +266,33 @@ class AdaptiveCoInferenceEngine(BatchedCoInferenceEngine):
         # never triggers (tests/test_adaptive.py)
         if key != current:
             self._drift_streak[name] = self._drift_streak.get(name, 0) + 1
+            self.tracer.instant("adaptive.env_drift", qos=name,
+                                env_key=str(key),
+                                streak=self._drift_streak[name])
+            self.metrics.counter("adaptive.drift_observations",
+                                 engine="Adaptive", qos=name).inc()
         else:
             self._drift_streak[name] = 0
         drift = self._drift_streak.get(name, 0) >= self.hysteresis_steps
         miss = self._miss_streak.get(name, 0) >= self.hysteresis_steps
         if not (drift or miss):
+            if key != current:
+                # a drift observation the hysteresis debounce swallowed
+                self.tracer.instant("adaptive.replan_suppressed",
+                                    qos=name, reason="hysteresis",
+                                    env_key=str(key),
+                                    streak=self._drift_streak[name])
+                self.metrics.counter("adaptive.replans_suppressed",
+                                     engine="Adaptive", qos=name,
+                                     reason="hysteresis").inc()
             return
         if t - self._last_replan_t.get(name, -math.inf) \
                 < self.min_replan_interval_s:
+            self.tracer.instant("adaptive.replan_suppressed", qos=name,
+                                reason="min-interval", env_key=str(key))
+            self.metrics.counter("adaptive.replans_suppressed",
+                                 engine="Adaptive", qos=name,
+                                 reason="min-interval").inc()
             return
         self._replan(name, t, state,
                      reason="env-drift" if drift else "qos-miss")

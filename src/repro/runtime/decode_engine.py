@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -84,6 +85,7 @@ from repro.core.quantization import QuantConfig, QuantPlan
 from repro.core.rate_distortion import exponential_mle
 from repro.kernels.bucketing import DEFAULT_SEQ_BASE, seq_bucket, seq_ladder
 from repro.kernels.quantize import kv_cache_bytes, kv_quantize
+from repro.obs import NULL_METRICS, NULL_TRACER, ReportBase
 
 from .fastpath import CompiledForwardCache, _sds, aot_compile
 from .qat import fake_quantize_agent
@@ -167,7 +169,7 @@ class DecodeResponse:
 
 
 @dataclasses.dataclass(frozen=True)
-class ClassDecodeStats:
+class ClassDecodeStats(ReportBase):
     """Per-QoS-class latency aggregates of a :class:`DecodeReport`."""
     qos: str
     b_hat: int
@@ -183,7 +185,7 @@ class ClassDecodeStats:
 
 
 @dataclasses.dataclass(frozen=True)
-class DecodeReport:
+class DecodeReport(ReportBase):
     """Whole-run aggregates of a :class:`DecodeEngine` (the decode
     counterpart of ``serve_engine.EngineReport``, streamed per class)."""
     requests_served: int
@@ -491,7 +493,8 @@ class DecodeEngine:
                  eos_id: Optional[int] = None,
                  codesign_cache: Optional[CodesignCache] = None,
                  compile_cache: Optional[CompiledForwardCache] = None,
-                 seq_bucket_base: int = DEFAULT_SEQ_BASE):
+                 seq_bucket_base: int = DEFAULT_SEQ_BASE,
+                 tracer=None, metrics=None):
         gap = decode_protocol_gap(model)
         if gap is not None:
             raise TypeError(f"{type(model).__name__} {gap}; the decode "
@@ -524,6 +527,10 @@ class DecodeEngine:
             else CodesignCache()
         self.compile_cache = compile_cache if compile_cache is not None \
             else CompiledForwardCache()
+        # observability (DESIGN.md §14): the no-op singletons by default,
+        # so an uninstrumented engine pays nothing on the decode path
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
         self._own_hits = self._own_misses = 0
         self._own_compile_hits = self._own_compile_misses = 0
         self._layer_stats: Optional[mp.LayerStats] = None
@@ -585,8 +592,16 @@ class DecodeEngine:
                 self.lam, self.lam_kv, self.sysp, c, b_max,
                 b_emb=self.b_emb, kv_ladder=self.kv_ladder,
                 kv_weight=self.kv_weight)
-        self._own_hits += self.codesign_cache.hits - h0
-        self._own_misses += self.codesign_cache.misses - m0
+        dh = self.codesign_cache.hits - h0
+        dm = self.codesign_cache.misses - m0
+        self._own_hits += dh
+        self._own_misses += dm
+        if dh:
+            self.metrics.counter("codesign.cache_hits",
+                                 engine="DecodeEngine", qos=c.name).inc(dh)
+        if dm:
+            self.metrics.counter("codesign.cache_misses",
+                                 engine="DecodeEngine", qos=c.name).inc(dm)
         if sol is None:
             raise ValueError(
                 f"QoS class {c.name!r} (T0={c.t0}, E0={c.e0}) is "
@@ -658,12 +673,30 @@ class DecodeEngine:
     # ------------------------------------------------------------------
     # executables
     # ------------------------------------------------------------------
-    def _cached(self, key: tuple, build: Callable):
+    def _cached(self, key: tuple, build: Callable,
+                plan: str = "", bucket: str = ""):
         cc = self.compile_cache
         h0, m0 = cc.hits, cc.misses
-        exe = cc.get(key, build)
-        self._own_compile_hits += cc.hits - h0
-        self._own_compile_misses += cc.misses - m0
+        if key in cc:
+            exe = cc.get(key, build)
+        else:
+            # one XLA compile: traced + timed under its (plan, bucket)
+            # attribution (DESIGN.md §14)
+            with self.tracer.span("xla.compile", plan=plan, bucket=bucket):
+                t0 = time.monotonic()
+                exe = cc.get(key, build)
+                self.metrics.histogram(
+                    "compile.seconds", plan=plan,
+                    bucket=bucket).observe(time.monotonic() - t0)
+        dh, dm = cc.hits - h0, cc.misses - m0
+        self._own_compile_hits += dh
+        self._own_compile_misses += dm
+        if dh:
+            self.metrics.counter("compile.cache_hits",
+                                 engine="DecodeEngine").inc(dh)
+        if dm:
+            self.metrics.counter("compile.cache_misses",
+                                 engine="DecodeEngine").inc(dm)
         return exe
 
     def _prefill_exe(self, c: _ClassState, s_bucket: int, t_bucket: int):
@@ -671,13 +704,17 @@ class DecodeEngine:
             ("decode-prefill", self.cfg, s_bucket, t_bucket,
              self.max_batch, c.b_kv),
             lambda: _compile_prefill(self.model, self.params, c.b_kv,
-                                     s_bucket, t_bucket, self.max_batch))
+                                     s_bucket, t_bucket, self.max_batch),
+            plan=f"decode-prefill/bkv{c.b_kv}",
+            bucket=f"{s_bucket}->{t_bucket}x{self.max_batch}")
 
     def _decode_exe(self, c: _ClassState, t_bucket: int):
         return self._cached(
             ("decode-fused", self.cfg, self.max_batch, t_bucket, c.b_kv),
             lambda: _compile_fused(self.model, self.params, c.b_kv,
-                                   self.max_batch, t_bucket))
+                                   self.max_batch, t_bucket),
+            plan=f"decode-fused/bkv{c.b_kv}",
+            bucket=f"{t_bucket}x{self.max_batch}")
 
     def warmup(self, max_prompt: int, max_new: Optional[int] = None) -> int:
         """Precompile every reachable variant; returns the number of XLA
@@ -842,16 +879,22 @@ class DecodeEngine:
         c = self._classes[req.qos]
         p_len = req.tokens.size
         s_bucket = int(seq_bucket(p_len, self.seq_bucket_base))
+        self.tracer.instant("decode.admit", rid=req.request_id,
+                            qos=req.qos, slot=slot, prompt_len=p_len,
+                            t_bucket=g.t_bucket)
         padded = np.zeros((1, s_bucket), np.int32)
         padded[0, :p_len] = req.tokens
         exe = self._prefill_exe(c, s_bucket, g.t_bucket)
-        (tok0, g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.pos,
-         g.tok) = exe(
-            self._weights[c.plan_key], jnp.asarray(padded),
-            jnp.asarray([p_len - 1], jnp.int32),
-            jnp.asarray(slot, jnp.int32),
-            g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.pos, g.tok)
-        first = int(np.asarray(tok0)[0])
+        with self.tracer.span("decode.prefill", rid=req.request_id,
+                              qos=req.qos, s_bucket=s_bucket,
+                              t_bucket=g.t_bucket):
+            (tok0, g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.pos,
+             g.tok) = exe(
+                self._weights[c.plan_key], jnp.asarray(padded),
+                jnp.asarray([p_len - 1], jnp.int32),
+                jnp.asarray(slot, jnp.int32),
+                g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.pos, g.tok)
+            first = int(np.asarray(tok0)[0])
         # the only host<->device traffic an admission causes: the padded
         # prompt + two scalars in, the streamed first token out
         self._h2d += padded.nbytes + 8
@@ -873,6 +916,15 @@ class DecodeEngine:
                       last_emit_s=self._clock, itls=[],
                       on_token=self._on_token.pop(req.request_id, None))
         g.slots[slot] = act
+        m = self.metrics
+        if m.enabled:
+            m.counter("decode.prefills", engine="DecodeEngine",
+                      qos=req.qos).inc()
+            m.counter("decode.h2d_bytes",
+                      engine="DecodeEngine").inc(padded.nbytes + 8)
+            m.counter("decode.d2h_bytes", engine="DecodeEngine").inc(4)
+            m.histogram("decode.ttft_s", engine="DecodeEngine",
+                        qos=req.qos).observe(act.ttft_s)
         if act.on_token is not None:
             act.on_token(req.request_id, first, self._clock)
         if len(act.generated) >= req.max_new_tokens:
@@ -916,18 +968,33 @@ class DecodeEngine:
         live[live_rows] = 1
         eos = self.eos_id if self.eos_id is not None else -1
         exe = self._decode_exe(c, g.t_bucket)
-        (blk, steps, g.k_codes, g.v_codes, g.k_scales, g.v_scales, g.tok,
-         g.pos) = exe(
-            self._weights[c.plan_key], g.k_codes, g.v_codes, g.k_scales,
-            g.v_scales, g.tok, g.pos, jnp.asarray(live),
-            jnp.asarray(eos, jnp.int32), jnp.asarray(k, jnp.int32))
-        blk = np.asarray(blk)
-        steps = int(steps)
+        with self.tracer.span("decode.chunk", qos=g.qos_name,
+                              live_rows=len(live_rows),
+                              t_bucket=g.t_bucket, max_steps=k):
+            (blk, steps, g.k_codes, g.v_codes, g.k_scales, g.v_scales,
+             g.tok, g.pos) = exe(
+                self._weights[c.plan_key], g.k_codes, g.v_codes,
+                g.k_scales, g.v_scales, g.tok, g.pos, jnp.asarray(live),
+                jnp.asarray(eos, jnp.int32), jnp.asarray(k, jnp.int32))
+            blk = np.asarray(blk)
+            steps = int(steps)
         # the only host<->device traffic a chunk causes, independent of
         # the cache size: the live mask + two scalars in, the token
         # block + step count out
         self._h2d += live.nbytes + 8
         self._d2h += blk.nbytes + 4
+        m = self.metrics
+        if m.enabled:
+            m.counter("decode.chunks", engine="DecodeEngine",
+                      qos=g.qos_name).inc()
+            m.counter("decode.chunk_steps", engine="DecodeEngine",
+                      qos=g.qos_name).inc(steps)
+            m.counter("decode.h2d_bytes",
+                      engine="DecodeEngine").inc(live.nbytes + 8)
+            m.counter("decode.d2h_bytes",
+                      engine="DecodeEngine").inc(blk.nbytes + 4)
+            m.gauge("decode.live_rows", engine="DecodeEngine",
+                    qos=g.qos_name).set(len(live_rows))
         clock0 = self._clock
         self._clock += steps * t_round
         self._energy += steps * e_round
@@ -972,6 +1039,21 @@ class DecodeEngine:
             lat["itl"].extend(act.itls)
             lat["tokens"].append(len(act.generated))
         self._tokens_out += len(act.generated)
+        self.tracer.instant("decode.retire", rid=act.req.request_id,
+                            qos=act.req.qos, tokens=len(act.generated),
+                            cancelled=cancelled)
+        m = self.metrics
+        if m.enabled:
+            m.counter("decode.retired", engine="DecodeEngine",
+                      qos=act.req.qos).inc()
+            m.counter("decode.tokens", engine="DecodeEngine",
+                      qos=act.req.qos).inc(len(act.generated))
+            # per-token ITL, observed in one batch at retirement so the
+            # hot emission loop above stays instrument-free
+            h = m.histogram("decode.itl_s", engine="DecodeEngine",
+                            qos=act.req.qos)
+            for v in act.itls:
+                h.observe(v)
         return DecodeResponse(
             request_id=act.req.request_id, qos=act.req.qos,
             tokens=np.asarray(act.generated, np.int32),

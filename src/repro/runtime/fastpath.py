@@ -362,6 +362,13 @@ class CompiledForwardCache:
     def __len__(self) -> int:
         return len(self._exe)
 
+    def __contains__(self, key: tuple) -> bool:
+        """Membership probe that does NOT touch the hit/miss counters —
+        engines use it to decide whether an upcoming :meth:`get` will
+        compile, so the compile can be wrapped in a trace span
+        (DESIGN.md §14) without double-counting."""
+        return key in self._exe
+
     @property
     def compiled_variants(self) -> int:
         return len(self._exe)

@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from ..checkpoint import CheckpointManager
+from ..obs import ReportBase
 
 
 class HostFailure(RuntimeError):
@@ -89,7 +90,7 @@ class StragglerMonitor:
 
 
 @dataclasses.dataclass
-class SupervisorReport:
+class SupervisorReport(ReportBase):
     steps_run: int
     restarts: int
     failures: List[int]

@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from ..core import fleet as fl
 from ..core.cost_model import SystemParams
 from ..env.environment import Environment
+from ..obs import NULL_METRICS, NULL_TRACER, ReportBase
 from . import fastpath as fp
 from .adaptive import AdaptiveCoInferenceEngine
 from .serve_engine import (BatchedCoInferenceEngine, CodesignCache,
@@ -80,7 +81,7 @@ class FleetAgentSpec:
 
 
 @dataclasses.dataclass(frozen=True)
-class AgentServeStats:
+class AgentServeStats(ReportBase):
     """Per-agent slice of a fleet run (the fleet-level analogue of
     ``ServeStats``: allocation + realized serving aggregates)."""
 
@@ -99,7 +100,7 @@ class AgentServeStats:
 
 
 @dataclasses.dataclass(frozen=True)
-class FleetReport:
+class FleetReport(ReportBase):
     """Whole-fleet aggregates plus the per-agent breakdown."""
 
     allocator: str              # "joint" | "equal"
@@ -133,7 +134,8 @@ class FleetCoInferenceEngine:
                  share_link: bool = False,
                  codesign_cache: Optional[CodesignCache] = None,
                  compile_cache: Optional[fp.CompiledForwardCache] = None,
-                 pad_token: int = 0):
+                 pad_token: int = 0,
+                 tracer=None, metrics=None):
         if allocator not in ("joint", "equal"):
             raise ValueError(f"unknown allocator {allocator!r} "
                              "(want 'joint' or 'equal')")
@@ -151,6 +153,10 @@ class FleetCoInferenceEngine:
             if codesign_cache is not None else CodesignCache()
         self.compile_cache = compile_cache if compile_cache is not None \
             else (fp.CompiledForwardCache() if compiled else None)
+        # observability (DESIGN.md §14): shared by every member engine,
+        # so one trace/metrics sink sees the whole fleet
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
 
         # the share split (core.fleet): per-agent λ via the engines' own
         # statistic, then water-filling or equal split over the server
@@ -169,6 +175,18 @@ class FleetCoInferenceEngine:
                 "(T0, E0) budgets cannot all be met from one server — "
                 "loosen a budget or shrink the fleet")
         self.allocation: fl.FleetSolution = alloc
+        # replay the allocator's decisions into the trace: each greedy
+        # water-filling upgrade, then every agent's final share
+        for aname, new_b, cost, ratio in alloc.upgrade_log:
+            self.tracer.instant("fleet.upgrade", agent=aname,
+                                new_bits=new_b, share_cost=cost,
+                                ratio=ratio)
+        for spec, share in zip(self.specs, alloc.shares):
+            self.tracer.instant("fleet.share", agent=spec.name,
+                                share=share, allocator=allocator)
+            self.metrics.gauge("fleet.agent_share",
+                               agent=spec.name).set(share)
+        self.metrics.counter("fleet.upgrades").inc(alloc.upgrades)
 
         # one member engine per agent, against its server slice, over
         # the shared caches
@@ -182,7 +200,8 @@ class FleetCoInferenceEngine:
                           mixed_precision=mixed_precision,
                           compiled=compiled,
                           compile_cache=self.compile_cache,
-                          pad_token=pad_token)
+                          pad_token=pad_token,
+                          tracer=self.tracer, metrics=self.metrics)
             if spec.environment is not None:
                 eng = AdaptiveCoInferenceEngine(
                     spec.model, spec.params, p,

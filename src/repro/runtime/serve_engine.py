@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Deque, Dict, List, Literal, Optional, Sequence
 
 import jax
@@ -64,6 +65,7 @@ from ..kernels import ops as kops
 from ..kernels.bucketing import (DEFAULT_SEQ_BASE, next_geometric,
                                  seq_bucket, seq_ladder)
 from ..models import layers as L
+from ..obs import NULL_METRICS, NULL_TRACER, OCCUPANCY_BUCKETS, ReportBase
 from . import fastpath as fp
 from .qat import fake_quantize_agent
 
@@ -156,7 +158,7 @@ class BatchStats:
 
 
 @dataclasses.dataclass(frozen=True)
-class EngineReport:
+class EngineReport(ReportBase):
     """Whole-run aggregates of a :class:`BatchedCoInferenceEngine`."""
     requests_served: int
     batches_served: int
@@ -339,7 +341,8 @@ class CoInferenceEngine:
                  compiled: bool = False,
                  compile_cache: Optional[fp.CompiledForwardCache] = None,
                  seq_bucket_base: int = DEFAULT_SEQ_BASE,
-                 batch_quantum: Optional[int] = None):
+                 batch_quantum: Optional[int] = None,
+                 tracer=None, metrics=None):
         if not hasattr(model, "run_layers"):
             raise TypeError(
                 f"{type(model).__name__} lacks run_layers; co-inference "
@@ -366,6 +369,10 @@ class CoInferenceEngine:
         self.batch_quantum = int(batch_quantum) if batch_quantum else None
         self.compile_cache = compile_cache if compile_cache is not None \
             else (fp.CompiledForwardCache() if compiled else None)
+        # observability (DESIGN.md §14): default to the no-op singletons
+        # so uninstrumented serving pays nothing
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
         # this engine's own compile-cache lookups (the cache may be shared
         # across engines — same attribution discipline as CodesignCache)
         self._own_compile_hits = 0
@@ -679,9 +686,29 @@ class CoInferenceEngine:
 
         cc = self.compile_cache
         h0, m0 = cc.hits, cc.misses
-        exe = cc.get(key, build)
-        self._own_compile_hits += cc.hits - h0
-        self._own_compile_misses += cc.misses - m0
+        if key in cc:
+            exe = cc.get(key, build)
+        else:
+            # a miss is exactly one XLA compile: trace + time it keyed by
+            # (plan, bucket) — the attribution DESIGN.md §14 asks for
+            plan_tag = str(self._weight_key)
+            bucket_tag = f"{bp}x{sp}"
+            with self.tracer.span("xla.compile", plan=plan_tag,
+                                  bucket=bucket_tag):
+                t0 = time.monotonic()
+                exe = cc.get(key, build)
+                self.metrics.histogram(
+                    "compile.seconds", plan=plan_tag,
+                    bucket=bucket_tag).observe(time.monotonic() - t0)
+        dh, dm = cc.hits - h0, cc.misses - m0
+        self._own_compile_hits += dh
+        self._own_compile_misses += dm
+        if dh:
+            self.metrics.counter("compile.cache_hits",
+                                 engine=type(self).__name__).inc(dh)
+        if dm:
+            self.metrics.counter("compile.cache_misses",
+                                 engine=type(self).__name__).inc(dm)
         return exe, agent, bounds
 
     def precompile(self, batch: int, seq: int) -> None:
@@ -902,7 +929,8 @@ class BatchedCoInferenceEngine:
                  mixed_precision: bool = False,
                  compiled: bool = False,
                  compile_cache: Optional[fp.CompiledForwardCache] = None,
-                 seq_bucket_base: int = DEFAULT_SEQ_BASE):
+                 seq_bucket_base: int = DEFAULT_SEQ_BASE,
+                 tracer=None, metrics=None):
         if not classes:
             raise ValueError("need at least one QosClass")
         if max_batch < 1:
@@ -916,7 +944,10 @@ class BatchedCoInferenceEngine:
                                         compiled=compiled,
                                         compile_cache=compile_cache,
                                         seq_bucket_base=seq_bucket_base,
-                                        batch_quantum=max_batch)
+                                        batch_quantum=max_batch,
+                                        tracer=tracer, metrics=metrics)
+        self.tracer = self.engine.tracer
+        self.metrics = self.engine.metrics
         self.compiled = bool(compiled)
         self.sysp = sysp
         self.max_batch = int(max_batch)
@@ -969,8 +1000,18 @@ class BatchedCoInferenceEngine:
         attribution (the cache may be shared across engines)."""
         h0, m0 = self.codesign_cache.hits, self.codesign_cache.misses
         sol = self._class_solution(c, sysp=sysp, env_key=env_key)
-        self._own_hits += self.codesign_cache.hits - h0
-        self._own_misses += self.codesign_cache.misses - m0
+        dh = self.codesign_cache.hits - h0
+        dm = self.codesign_cache.misses - m0
+        self._own_hits += dh
+        self._own_misses += dm
+        if dh:
+            self.metrics.counter("codesign.cache_hits",
+                                 engine=type(self).__name__,
+                                 qos=c.name).inc(dh)
+        if dm:
+            self.metrics.counter("codesign.cache_misses",
+                                 engine=type(self).__name__,
+                                 qos=c.name).inc(dm)
         return sol
 
     def _class_solution(self, c: QosClass,
@@ -1088,24 +1129,30 @@ class BatchedCoInferenceEngine:
         """Serve one batch; returns its responses ([] if queue empty)."""
         if not self._queue:
             return []
-        reqs = self._take_batch()
-        qos = self.classes[reqs[0].qos]
-        sol = self._solutions[qos.name]
-        # configure() is a dict lookup after the first batch of a class
-        # (weight cache keyed on the stable plan key); freqs are scalars
-        target = self._plans.get(qos.name, sol.b_hat)
-        self.engine.configure(target, sol.f, sol.f_server)
+        # batch assembly (take + pad/pack) and the fused forward dispatch
+        # are the step's two traced phases (DESIGN.md §14)
+        with self.tracer.span("batch.assemble"):
+            reqs = self._take_batch()
+            qos = self.classes[reqs[0].qos]
+            sol = self._solutions[qos.name]
+            # configure() is a dict lookup after the first batch of a
+            # class (weight cache keyed on the stable plan key); freqs
+            # are scalars
+            target = self._plans.get(qos.name, sol.b_hat)
+            self.engine.configure(target, sol.f, sol.f_server)
 
-        s_max = max(r.tokens.size for r in reqs)
-        lengths = [r.tokens.size for r in reqs]
-        padded = np.full((len(reqs), s_max), self.pad_token, np.int32)
-        for i, r in enumerate(reqs):
-            padded[i, :r.tokens.size] = r.tokens
+            s_max = max(r.tokens.size for r in reqs)
+            lengths = [r.tokens.size for r in reqs]
+            padded = np.full((len(reqs), s_max), self.pad_token, np.int32)
+            for i, r in enumerate(reqs):
+                padded[i, :r.tokens.size] = r.tokens
         # hand the host array over as-is: the compiled path re-pads it to
         # the bucket before its single device upload, and the eager embed
         # converts on use — uploading here would round-trip device->host
-        logits, stats = self.engine.serve_batch(
-            {"tokens": padded}, lengths=lengths)
+        with self.tracer.span("batch.forward", qos=qos.name,
+                              n=len(reqs), seq=s_max):
+            logits, stats = self.engine.serve_batch(
+                {"tokens": padded}, lengths=lengths)
 
         start = max(self._clock, max(r.arrival_s for r in reqs))
         end = start + stats.total_delay_s
@@ -1137,6 +1184,16 @@ class BatchedCoInferenceEngine:
         self.batch_history.append(bstats)
         self._served += n
         self._energy += stats.energy_j
+        m = self.metrics
+        if m.enabled:
+            eng = type(self).__name__
+            m.counter("serve.requests", engine=eng, qos=qos.name).inc(n)
+            m.counter("serve.batches", engine=eng, qos=qos.name).inc()
+            m.histogram("serve.batch_occupancy",
+                        buckets=OCCUPANCY_BUCKETS, engine=eng,
+                        qos=qos.name).observe(bstats.occupancy)
+            m.histogram("serve.batch_delay_s", engine=eng,
+                        qos=qos.name).observe(bstats.batch_delay_s)
 
         out = []
         for i, r in enumerate(reqs):

@@ -1,0 +1,313 @@
+"""Unified tracing + metrics layer (DESIGN.md §14): Chrome trace-event
+schema validity, deterministic-clock byte stability, histogram bucket
+properties, the free no-op path, and — the house invariant — bitwise
+identity of traced vs untraced decode."""
+
+import json
+import pathlib
+import subprocess
+import sys
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.models.registry import build_model
+from repro.obs import (LATENCY_BUCKETS_S, NULL_METRICS, NULL_TRACER,
+                       Histogram, MetricsRegistry, ReportBase, TickClock,
+                       Tracer, to_jsonable, validate_chrome_trace)
+from repro.runtime import CompiledForwardCache, DecodeEngine, QosClass
+
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
+
+TOOLS = pathlib.Path(__file__).resolve().parent.parent / "tools"
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+QOS = QosClass("interactive", t0=3.5, e0=2.0)
+
+
+def _demo_tracer() -> Tracer:
+    """A small deterministic trace: nested spans + an instant."""
+    tr = Tracer(clock=TickClock())
+    with tr.span("outer", qos="interactive", n=4):
+        with tr.span("inner"):
+            tr.instant("mark", rid=0)
+        with tr.span("inner"):
+            pass
+    return tr
+
+
+# ---------------------------------------------------------------- trace
+
+
+def test_trace_schema_valid_and_loadable(tmp_path):
+    tr = _demo_tracer()
+    path = tmp_path / "t.json"
+    tr.write(path)
+    obj = json.loads(path.read_text(encoding="utf-8"))
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    # required keys on every event, integer microsecond timestamps
+    for ev in evs:
+        for k in ("name", "ph", "ts", "pid", "tid"):
+            assert k in ev
+        assert isinstance(ev["ts"], int)
+    # balanced B/E: 3 spans -> 3 B + 3 E, plus one instant
+    assert sum(e["ph"] == "B" for e in evs) == 3
+    assert sum(e["ph"] == "E" for e in evs) == 3
+    assert sum(e["ph"] == "i" for e in evs) == 1
+    # monotone non-decreasing within the lane
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)
+    # args survive where given
+    assert evs[0]["args"] == {"qos": "interactive", "n": 4}
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda evs: evs.append({"name": "x", "ph": "E", "ts": 10 ** 9,
+                             "pid": 1, "tid": 0}), "matching"),
+    (lambda evs: evs.pop(), "unclosed"),
+    (lambda evs: evs[0].pop("ts"), "missing"),
+    (lambda evs: evs[0].update(ts=10 ** 12), "decreas"),
+    (lambda evs: evs[0].update(ph="Z"), "phase"),
+])
+def test_validator_catches_malformed_traces(mutate, needle):
+    obj = _demo_tracer().to_chrome_trace()
+    mutate(obj["traceEvents"])
+    problems = validate_chrome_trace(obj)
+    assert problems, "validator accepted a malformed trace"
+    assert any(needle in p for p in problems), problems
+
+
+def test_validator_rejects_non_envelope():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({"events": []}) != []
+
+
+def test_tick_clock_traces_are_byte_stable(tmp_path):
+    """Same instrumentation under the injected deterministic clock ⇒
+    byte-identical trace files (the test-trace golden contract)."""
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    _demo_tracer().write(a)
+    _demo_tracer().write(b)
+    assert a.read_bytes() == b.read_bytes()
+
+
+def test_tracer_thread_safety():
+    tr = Tracer(clock=TickClock())
+
+    def emit(tid):
+        for i in range(200):
+            with tr.span("w", tid=tid, i=i):
+                pass
+
+    threads = [threading.Thread(target=emit, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(tr.events) == 4 * 200 * 2
+    assert validate_chrome_trace(tr.to_chrome_trace()) == []
+
+
+# ------------------------------------------------------------- metrics
+
+
+def test_histogram_rejects_bad_edges():
+    with pytest.raises(ValueError):
+        Histogram(buckets=(1.0, 1.0, 2.0))
+    with pytest.raises(ValueError):
+        Histogram(buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram(buckets=())
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e4,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=50))
+def test_histogram_bucket_properties(values):
+    """Counts conserve mass, land in the right half-open bucket, and the
+    mean matches the observed values."""
+    h = Histogram(buckets=LATENCY_BUCKETS_S)
+    for v in values:
+        h.observe(v)
+    assert sum(h.counts) == len(values)
+    assert h.count == len(values)
+    edges = list(h.buckets)
+    for v in values:
+        # v belongs in the first bucket whose edge is >= v (bisect_left
+        # on the right-closed edges); recompute independently
+        idx = next((i for i, e in enumerate(edges) if v <= e), len(edges))
+        assert h.counts[idx] >= 1
+    assert h.mean == pytest.approx(sum(values) / len(values))
+
+
+def test_registry_labels_and_kind_conflicts():
+    m = MetricsRegistry()
+    m.counter("serve.requests", qos="a").inc(2)
+    m.counter("serve.requests", qos="b").inc()
+    m.counter("serve.requests", qos="a").inc()     # same series
+    m.gauge("live", engine="x").set(3.5)
+    with pytest.raises(ValueError):
+        m.gauge("serve.requests", qos="a")         # kind conflict
+    snap = m.snapshot()
+    series = {tuple(sorted(s["labels"].items())): s
+              for s in snap["serve.requests"]["series"]}
+    assert series[(("qos", "a"),)]["value"] == 3
+    assert series[(("qos", "b"),)]["value"] == 1
+    assert snap["live"]["kind"] == "gauge"
+    json.dumps(snap)                               # snapshot is JSON-clean
+
+
+def test_registry_write(tmp_path):
+    m = MetricsRegistry()
+    m.histogram("lat", engine="e").observe(0.01)
+    path = tmp_path / "m.json"
+    m.write(path)
+    loaded = json.loads(path.read_text(encoding="utf-8"))
+    assert loaded["lat"]["kind"] == "histogram"
+
+
+# -------------------------------------------------------- no-op layer
+
+
+def test_null_singletons_are_free_and_shared():
+    assert not NULL_TRACER.enabled and not NULL_METRICS.enabled
+    s1 = NULL_TRACER.span("a", qos="x")
+    s2 = NULL_TRACER.span("b", n=3)
+    assert s1 is s2                      # one preallocated span object
+    with s1:
+        pass
+    assert NULL_TRACER.instant("i") is None
+    assert len(NULL_TRACER.events) == 0  # nothing ever buffered
+    c = NULL_METRICS.counter("x", qos="a")
+    assert c is NULL_METRICS.histogram("y") is NULL_METRICS.gauge("z")
+    c.inc(); c.observe(1.0); c.set(2.0)  # all absorbed
+
+
+def test_engines_default_to_null_obs():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                       max_batch=2, max_new_tokens=2)
+    assert eng.tracer is NULL_TRACER
+    assert eng.metrics is NULL_METRICS
+
+
+# ------------------------------------------- traced == untraced decode
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _decode_once(model, params, cache, tracer, metrics):
+    eng = DecodeEngine(model, params, SYSP, classes=[QOS], auto=False,
+                       max_batch=2, max_new_tokens=4,
+                       compile_cache=cache, tracer=tracer, metrics=metrics)
+    eng.set_operating_point(QOS.name, 8, 8)
+    rng = np.random.default_rng(5)
+    for i in range(4):
+        toks = rng.integers(0, model.cfg.vocab_size,
+                            size=int(rng.integers(4, 12))).astype(np.int32)
+        eng.submit(toks, QOS.name, max_new_tokens=2 + i % 3,
+                   arrival_s=0.05 * i)
+    responses = eng.drain()
+    return [np.asarray(r.tokens)
+            for r in sorted(responses, key=lambda r: r.request_id)]
+
+
+def test_traced_decode_bitwise_identical(qwen):
+    """Instrumentation observes the run without perturbing it: the same
+    stream decodes to bit-identical tokens with tracing on and off, and
+    the trace it leaves behind is schema-valid with the full
+    admission -> prefill -> chunk -> retirement story."""
+    _, model, params = qwen
+    cache = CompiledForwardCache()
+    plain = _decode_once(model, params, cache, NULL_TRACER, NULL_METRICS)
+    tr, m = Tracer(), MetricsRegistry()
+    traced = _decode_once(model, params, cache, tr, m)
+    assert len(plain) == len(traced)
+    for a, b in zip(plain, traced):
+        np.testing.assert_array_equal(a, b)
+
+    assert validate_chrome_trace(tr.to_chrome_trace()) == []
+    names = {e["name"] for e in tr.events}
+    assert {"decode.admit", "decode.prefill", "decode.chunk",
+            "decode.retire"} <= names
+    snap = m.snapshot()
+    tokens = sum(s["value"] for s in snap["decode.tokens"]["series"])
+    assert tokens == sum(len(t) for t in traced)
+
+
+def test_compile_events_keyed_plan_bucket(qwen):
+    """Cold compiles surface as xla.compile spans keyed (plan, bucket)
+    and land in the compile.seconds histogram; warm runs add none."""
+    _, model, params = qwen
+    cache = CompiledForwardCache()
+    tr, m = Tracer(), MetricsRegistry()
+    _decode_once(model, params, cache, tr, m)
+    compiles = [e for e in tr.events
+                if e["name"] == "xla.compile" and e["ph"] == "B"]
+    assert compiles
+    for ev in compiles:
+        assert ev["args"]["plan"] and ev["args"]["bucket"]
+    assert "compile.seconds" in m.snapshot()
+    # warm: same cache, fresh tracer -> no compile spans at all
+    tr2 = Tracer()
+    _decode_once(model, params, cache, tr2, NULL_METRICS)
+    assert not any(e["name"] == "xla.compile" for e in tr2.events)
+
+
+# ------------------------------------------------------------ reports
+
+
+def test_report_base_to_dict_json():
+    import dataclasses
+
+    @dataclasses.dataclass
+    class R(ReportBase):
+        n: int
+        ratio: np.float64
+        classes: tuple
+
+    r = R(n=3, ratio=np.float64(0.5), classes=({"qos": "a"},))
+    d = r.to_dict()
+    assert d == {"n": 3, "ratio": 0.5, "classes": [{"qos": "a"}]}
+    assert json.loads(r.to_json()) == d
+    assert to_jsonable({1: np.int32(2)}) == {"1": 2}
+
+
+# ---------------------------------------------------------- CLI smoke
+
+
+def test_trace_summary_cli(tmp_path):
+    path = tmp_path / "t.json"
+    _demo_tracer().write(path)
+    env_cmd = [sys.executable, str(TOOLS / "trace_summary.py"), str(path)]
+    out = subprocess.run(env_cmd, capture_output=True, text=True,
+                         timeout=60)
+    assert out.returncode == 0, out.stderr
+    assert "outer" in out.stdout and "inner" in out.stdout
+    assert "per-QoS-class" in out.stdout      # qos arg present on outer
+
+    ok = subprocess.run(env_cmd + ["--validate"], capture_output=True,
+                        text=True, timeout=60)
+    assert ok.returncode == 0 and "OK" in ok.stdout
+
+    bad = tmp_path / "bad.json"
+    obj = _demo_tracer().to_chrome_trace()
+    obj["traceEvents"].pop()                  # unclosed span
+    bad.write_text(json.dumps(obj), encoding="utf-8")
+    rc = subprocess.run([sys.executable, str(TOOLS / "trace_summary.py"),
+                         str(bad), "--validate"],
+                        capture_output=True, text=True, timeout=60)
+    assert rc.returncode == 1 and "INVALID" in rc.stdout

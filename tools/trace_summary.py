@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Summarize (or validate) a Chrome trace-event JSON file.
+
+    python tools/trace_summary.py TRACE.json            # summary tables
+    python tools/trace_summary.py TRACE.json --validate # schema check only
+    python tools/trace_summary.py TRACE.json --top 20
+
+Works on any trace ``launch/serve.py --trace-out`` writes (DESIGN.md
+§14): prints the top spans by *self* time (span duration minus the time
+spent in its nested children — the number that says where the wall clock
+actually went), and a per-QoS-class latency table built from span/event
+``args`` carrying a ``qos`` key.  ``--validate`` runs the trace-event
+schema checker (``repro.obs.validate_chrome_trace``) and exits nonzero
+on any problem — the mode CI's trace-smoke step drives.
+
+Stdlib only when validating is not needed; the validator is imported
+from ``src/repro`` with a path fallback so the tool runs from the repo
+root without PYTHONPATH.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import pathlib
+import sys
+
+
+def _load_validator():
+    try:
+        from repro.obs import validate_chrome_trace
+    except ImportError:
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent
+                               .parent / "src"))
+        from repro.obs import validate_chrome_trace
+    return validate_chrome_trace
+
+
+def span_stats(events):
+    """Per-name {count, total_us, self_us} from balanced B/E pairs.
+
+    Self time = a span's duration minus its children's durations,
+    computed with one stack per (pid, tid) lane.  Unbalanced tails are
+    ignored (the validator, not the summarizer, is the schema gate).
+    """
+    stats = collections.defaultdict(
+        lambda: {"count": 0, "total_us": 0.0, "self_us": 0.0})
+    stacks = collections.defaultdict(list)   # lane -> [[name, t0, child]]
+    for ev in events:
+        ph = ev.get("ph")
+        if ph not in ("B", "E"):
+            continue
+        lane = (ev.get("pid"), ev.get("tid"))
+        if ph == "B":
+            stacks[lane].append([ev.get("name"), float(ev.get("ts", 0)),
+                                 0.0])
+        elif stacks[lane]:
+            name, t0, child = stacks[lane].pop()
+            dur = float(ev.get("ts", 0)) - t0
+            s = stats[name]
+            s["count"] += 1
+            s["total_us"] += dur
+            s["self_us"] += dur - child
+            if stacks[lane]:
+                stacks[lane][-1][2] += dur
+    return dict(stats)
+
+
+def qos_latency(events):
+    """Per-QoS span-duration aggregates from spans whose args carry
+    ``qos``: {qos: {name: [durations_us]}}."""
+    out = collections.defaultdict(lambda: collections.defaultdict(list))
+    stacks = collections.defaultdict(list)
+    for ev in events:
+        ph = ev.get("ph")
+        if ph not in ("B", "E"):
+            continue
+        lane = (ev.get("pid"), ev.get("tid"))
+        if ph == "B":
+            stacks[lane].append((ev.get("name"), float(ev.get("ts", 0)),
+                                 (ev.get("args") or {}).get("qos")))
+        elif stacks[lane]:
+            name, t0, qos = stacks[lane].pop()
+            if qos is not None:
+                out[qos][name].append(float(ev.get("ts", 0)) - t0)
+    return {q: dict(v) for q, v in out.items()}
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.3f} s"
+    if us >= 1e3:
+        return f"{us / 1e3:.3f} ms"
+    return f"{us:.0f} us"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarize/validate a Chrome trace-event JSON file")
+    ap.add_argument("trace", help="path to the trace JSON")
+    ap.add_argument("--top", type=int, default=15,
+                    help="rows in the top-spans table (default 15)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only; exit 1 on any problem")
+    args = ap.parse_args(argv)
+
+    with open(args.trace, encoding="utf-8") as f:
+        obj = json.load(f)
+
+    if args.validate:
+        problems = _load_validator()(obj)
+        if problems:
+            for p in problems:
+                print(f"INVALID: {p}")
+            return 1
+        n = len(obj.get("traceEvents", []))
+        print(f"OK: {args.trace} is valid Chrome trace-event JSON "
+              f"({n} events)")
+        return 0
+
+    events = obj.get("traceEvents", [])
+    if not isinstance(events, list):
+        print("not a trace-event file (no traceEvents list)")
+        return 1
+
+    stats = span_stats(events)
+    n_inst = sum(1 for e in events if isinstance(e, dict)
+                 and e.get("ph") == "i")
+    print(f"{args.trace}: {len(events)} events "
+          f"({sum(s['count'] for s in stats.values())} spans, "
+          f"{n_inst} instants)\n")
+
+    print(f"top spans by self time "
+          f"(span minus nested children)\n{'-' * 64}")
+    print(f"{'span':<28} {'count':>6} {'self':>12} {'total':>12}")
+    rows = sorted(stats.items(), key=lambda kv: -kv[1]["self_us"])
+    for name, s in rows[:args.top]:
+        print(f"{name:<28} {s['count']:>6} {_fmt_us(s['self_us']):>12} "
+              f"{_fmt_us(s['total_us']):>12}")
+
+    per_qos = qos_latency(events)
+    if per_qos:
+        print(f"\nper-QoS-class span latency\n{'-' * 64}")
+        print(f"{'qos':<12} {'span':<20} {'count':>6} {'mean':>12} "
+              f"{'max':>12}")
+        for qos in sorted(per_qos):
+            for name in sorted(per_qos[qos]):
+                ds = per_qos[qos][name]
+                print(f"{qos:<12} {name:<20} {len(ds):>6} "
+                      f"{_fmt_us(sum(ds) / len(ds)):>12} "
+                      f"{_fmt_us(max(ds)):>12}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
