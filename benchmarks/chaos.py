@@ -1,0 +1,275 @@
+"""Chaos-hardening gate: supervised serving under injected faults
+(DESIGN.md §15).
+
+One seeded fault trace (link outage + server preemption, calibrated to
+the engine's own decode-round cost so faults actually land mid-stream)
+drives the same request stream through the ``ServingSupervisor`` twice
+— supervised, and as the bare unsupervised baseline — plus once on a
+fault-free trace.  Four acceptance gates, all RAISED on failure:
+
+  1. *Goodput.*  Supervised goodput (delivered tokens per virtual
+     second) beats the unsupervised baseline on the faulty trace — the
+     defenses must pay for their own overhead.
+  2. *No token is lost or forged.*  The supervised run reports zero
+     lost and zero duplicated tokens across every injected fault.
+  3. *Crash recovery is exact.*  At least one decode stream is
+     interrupted by a server crash, resumed from its snapshot, and
+     every delivered stream is bitwise identical to the uninterrupted
+     ``greedy_decode_reference`` run.
+  4. *Clean is free.*  On a fault-free trace the supervised engine's
+     tokens are bitwise identical to the bare engine's and the wall
+     clock stays within ``OVERHEAD_TOLERANCE`` (the §14 obs budget),
+     best-of-``REPEATS``.
+
+Results land in ``BENCH_chaos.json`` and, via ``benchmarks/run.py``,
+on the BENCH_history.jsonl row.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only chaos
+  or  PYTHONPATH=src python benchmarks/chaos.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.env import ChaosTrace, LinkOutage, ServerPreemption
+from repro.models.registry import build_model
+from repro.runtime import (CompiledForwardCache, DecodeEngine, QosClass,
+                           ServingSupervisor, greedy_decode_reference)
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SEQ = 16
+MAX_NEW = 8
+MAX_BATCH = 4
+N_REQUESTS = 10
+REPEATS = 3              # best-of for the clean-overhead gate
+OVERHEAD_TOLERANCE = 0.03
+CHAOS_SEED = 5
+CLASSES = [
+    QosClass("realtime", t0=1.2, e0=1.0),
+    QosClass("interactive", t0=3.5, e0=2.0),
+]
+
+
+def make_sysp(cfg) -> SystemParams:
+    per_layer = cfg.active_param_count() / max(cfg.n_layers, 1)
+    tokens = MAX_BATCH * SEQ
+    kv_full = (2.0 * cfg.n_layers * MAX_BATCH * (SEQ + MAX_NEW)
+               * cfg.n_kv_heads * cfg.head_dim
+               * np.dtype(cfg.dtype).itemsize)
+    return SystemParams(
+        n_flop_agent=2.0 * per_layer * cfg.split_layer * tokens,
+        n_flop_server=2.0 * per_layer
+        * (cfg.n_layers - cfg.split_layer) * tokens,
+        kv_bytes_full=kv_full, kv_bw_bps=kv_full, kv_power_w=2.0)
+
+
+def make_engine(model, params, sysp, cache) -> DecodeEngine:
+    return DecodeEngine(model, params, sysp, classes=CLASSES,
+                        max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
+                        compile_cache=cache)
+
+
+def traffic(cfg, spacing_s: float, seed: int = 11):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(N_REQUESTS):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(SEQ // 2, SEQ + 1)))
+        out.append((toks.astype(np.int32), CLASSES[i % len(CLASSES)].name,
+                    int(rng.integers(2, MAX_NEW + 1)), spacing_s * i))
+    return out
+
+
+def serve_once(model, params, sysp, cache, stream, chaos, supervised):
+    """One full drain through a fresh supervised engine; returns
+    (wall_s, {request index: tokens}, ResilienceReport)."""
+    eng = make_engine(model, params, sysp, cache)
+    sup = ServingSupervisor(eng, chaos=chaos, supervised=supervised,
+                            seed=CHAOS_SEED)
+    rids = {}
+    for i, (toks, qos, n_new, t) in enumerate(stream):
+        rids[sup.submit(toks, qos, max_new_tokens=n_new, arrival_s=t)] = i
+    t0 = time.perf_counter()
+    responses = sup.drain()
+    wall_s = time.perf_counter() - t0
+    tokens = {rids[r.request_id]: np.asarray(r.tokens) for r in responses}
+    return wall_s, tokens, sup.report()
+
+
+def bare_drain(model, params, sysp, cache, stream):
+    """The unwrapped engine (no supervisor object at all) — the clean
+    gate's identity baseline."""
+    eng = make_engine(model, params, sysp, cache)
+    rids = {}
+    for i, (toks, qos, n_new, t) in enumerate(stream):
+        rids[eng.submit(toks, qos, max_new_tokens=n_new, arrival_s=t)] = i
+    t0 = time.perf_counter()
+    responses = eng.drain()
+    wall_s = time.perf_counter() - t0
+    return wall_s, {rids[r.request_id]: np.asarray(r.tokens)
+                    for r in responses}
+
+
+def bitwise(a: dict, b: dict) -> bool:
+    return a.keys() == b.keys() and \
+        all(np.array_equal(a[k], b[k]) for k in a)
+
+
+def bitwise_delivered(delivered: dict, ref: dict) -> bool:
+    """Every stream that WAS delivered matches the uninterrupted
+    reference exactly (shed requests deliver nothing, so they have
+    nothing to match)."""
+    return all(np.array_equal(delivered[k], ref[k]) for k in delivered)
+
+
+def run() -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = make_sysp(cfg)
+    cache = CompiledForwardCache()   # shared: every mode runs warm
+    make_engine(model, params, sysp, cache).warmup(SEQ)
+
+    # calibrate the fault timescale to the engine's own decode round so
+    # crashes land *between tokens of in-flight streams*, not in the
+    # idle gaps — otherwise the recovery gate would be vacuous
+    t_round = make_engine(model, params, sysp, cache) \
+        .decode_round_cost(CLASSES[0].name, 32)[0]
+    stream = traffic(cfg, spacing_s=10 * t_round)
+    chaos = ChaosTrace(
+        dt_s=t_round, horizon_s=4000 * t_round, seed=CHAOS_SEED,
+        link_outage=LinkOutage(p_fail=0.05, p_recover=0.30),
+        preemption=ServerPreemption(mtbf_s=10 * t_round,
+                                    mttr_s=10 * t_round))
+    print(f"arch={cfg.name} requests={N_REQUESTS} new<= {MAX_NEW} "
+          f"t_round={t_round * 1e6:.1f}us chaos seed={CHAOS_SEED} "
+          f"outage={chaos.outage_fraction() * 100:.1f}% of trace")
+
+    # uninterrupted reference per request: the sequential decode the
+    # batched engine is bitwise-pinned to (PR-6), run to completion
+    ref = {}
+    probe = make_engine(model, params, sysp, cache)
+    for i, (toks, qos, n_new, _) in enumerate(stream):
+        ref[i] = np.asarray(greedy_decode_reference(
+            model, probe.class_params(qos), toks, n_new,
+            b_kv=probe.solution_for(qos).b_kv, compile_cache=cache))
+
+    # --- faulty trace: supervised vs bare ------------------------------
+    _, tok_sup, rep_sup = serve_once(model, params, sysp, cache, stream,
+                                     chaos, supervised=True)
+    _, tok_bare, rep_bare = serve_once(model, params, sysp, cache, stream,
+                                       chaos, supervised=False)
+    recovered_exact = bitwise_delivered(tok_sup, ref)
+    # bare often delivers *nothing* under this trace; clamp so the JSON
+    # stays strict (no Infinity literal) and history plots stay finite
+    goodput_ratio = (rep_sup.goodput / rep_bare.goodput
+                     if rep_bare.goodput > 0 else 1e6)
+    table(["mode", "delivered", "failed", "shed", "recoveries",
+           "lost/dup", "goodput tok/s"],
+          [["supervised", rep_sup.delivered, rep_sup.failed, rep_sup.shed,
+            rep_sup.recoveries,
+            f"{rep_sup.tokens_lost}/{rep_sup.tokens_duplicated}",
+            f"{rep_sup.goodput:.2f}"],
+           ["bare", rep_bare.delivered, rep_bare.failed, rep_bare.shed,
+            rep_bare.recoveries,
+            f"{rep_bare.tokens_lost}/{rep_bare.tokens_duplicated}",
+            f"{rep_bare.goodput:.2f}"]])
+    print(f"faulty trace: faults={rep_sup.faults_seen} "
+          f"retries={rep_sup.retries} recoveries={rep_sup.recoveries} "
+          f"goodput ratio={goodput_ratio:.2f}x "
+          f"recovered-bitwise={recovered_exact}")
+
+    # --- clean trace: identity + overhead, best-of-REPEATS -------------
+    walls = {"bare": [], "supervised": []}
+    tok_clean_bare = tok_clean_sup = None
+    rep_clean = None
+    for _ in range(REPEATS):
+        w, toks = bare_drain(model, params, sysp, cache, stream)
+        walls["bare"].append(w)
+        tok_clean_bare = toks
+        w, toks, rep_clean = serve_once(model, params, sysp, cache,
+                                        stream, None, supervised=True)
+        walls["supervised"].append(w)
+        tok_clean_sup = toks
+    best = {k: min(v) for k, v in walls.items()}
+    overhead = best["supervised"] / best["bare"] - 1.0
+    clean_bitwise = bitwise(tok_clean_sup, tok_clean_bare)
+    print(f"clean trace: pass-through={rep_clean.clean} "
+          f"bitwise={clean_bitwise} overhead={overhead * 100:+.2f}% "
+          f"(tolerance {OVERHEAD_TOLERANCE * 100:.0f}%)")
+
+    acceptance = {
+        # (a) the defenses pay for themselves on the faulty trace
+        "supervised_goodput_beats_bare": goodput_ratio > 1.0,
+        # (b) nothing lost, nothing forged, nothing shed silently
+        "zero_tokens_lost": rep_sup.tokens_lost == 0,
+        "zero_tokens_duplicated": rep_sup.tokens_duplicated == 0
+        and rep_bare.tokens_duplicated == 0,
+        # every request is either delivered or deliberately shed (its
+        # deadline had already passed) — never silently failed
+        "all_requests_accounted":
+            rep_sup.delivered + rep_sup.shed == N_REQUESTS
+            and rep_sup.failed == 0,
+        # (c) crashes actually happened and recovery is exact
+        "crashes_interrupted_streams": rep_sup.recoveries > 0,
+        "recovered_bitwise_identical": recovered_exact,
+        "bare_actually_loses_work": rep_bare.failed > 0,
+        # (d) the house invariant: clean trace = bare engine
+        "clean_trace_bitwise_identical": clean_bitwise,
+        "clean_trace_is_passthrough": bool(rep_clean.clean),
+        "clean_overhead_within_tolerance": overhead <= OVERHEAD_TOLERANCE,
+    }
+    ok = all(acceptance.values())
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'}")
+    for k, v in acceptance.items():
+        print(f"  {k}: {v}")
+
+    results = {
+        "acceptance_ok": ok,
+        "arch": cfg.name, "requests": N_REQUESTS,
+        "chaos_seed": CHAOS_SEED,
+        "outage_fraction": chaos.outage_fraction(),
+        # the tracked ratio: supervised / bare goodput under faults
+        "ratio": goodput_ratio,
+        "clean_overhead_frac": overhead,
+        "overhead_tolerance": OVERHEAD_TOLERANCE,
+        "supervised": rep_sup.to_dict(),
+        "bare": rep_bare.to_dict(),
+        "acceptance": acceptance,
+    }
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    if not ok:
+        # CI turns a resilience regression into a red build: lost
+        # tokens, inexact recovery, or a supervisor tax on clean runs
+        raise RuntimeError(f"chaos acceptance failed: {acceptance}")
+    return results
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the resilience numbers as ``BENCH_chaos.json`` at the repo
+    root — the machine-readable chaos record diffed across PRs."""
+    if path is None:
+        path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_chaos.json"
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+if __name__ == "__main__":
+    run()

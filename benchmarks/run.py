@@ -35,6 +35,12 @@ Sections (paper artifact -> module):
             (also writes BENCH_obs.json at the repo root; raises if
              enabled tracing costs more than 3%, the disabled no-op
              path is not free, or tracing perturbs a single token)
+    chaos   supervised vs bare decode under a seeded  chaos.py
+            fault trace (outages, crashes)
+            (also writes BENCH_chaos.json at the repo root; raises if
+             the supervisor stops beating the bare engine, loses or
+             duplicates tokens, recovered streams break bitwise
+             parity, or the clean-trace pass-through costs over 3%)
 """
 
 from __future__ import annotations
@@ -47,7 +53,7 @@ import subprocess
 import sys
 import time
 
-from . import (adaptive_serve, codesign_sweep, decode, distortion,
+from . import (adaptive_serve, chaos, codesign_sweep, decode, distortion,
                fastpath, fleet, kernel_bench, mixed_precision_sweep,
                obs_overhead, rd_bounds, serve_throughput,
                testbed_profiles, weight_stats)
@@ -74,6 +80,8 @@ SECTIONS = {
                "quantized KV cache", decode.run),
     "obs_overhead": ("Observability  decode tok/s traced vs untraced "
                      "(3% gate, bitwise parity)", obs_overhead.run),
+    "chaos": ("Chaos  supervised vs bare decode under a seeded fault "
+              "trace", chaos.run),
 }
 
 

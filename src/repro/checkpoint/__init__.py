@@ -1,4 +1,4 @@
 """msgpack+zstd pytree checkpoints with async writer and manifest."""
 
-from .store import (CheckpointManager, available_steps, latest_step,  # noqa: F401
-                    load_tree, save_tree)
+from .store import (CheckpointManager, CorruptCheckpointError,  # noqa: F401
+                    available_steps, latest_step, load_tree, save_tree)

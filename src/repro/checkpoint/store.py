@@ -47,6 +47,14 @@ _MANIFEST = "manifest.json"
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+class CorruptCheckpointError(IOError):
+    """A checkpoint's bytes do not match its manifest checksums.
+
+    Subclasses ``IOError`` so ``CheckpointManager.restore_latest`` keeps
+    treating a corrupt step as "fall back to the previous one" without
+    callers having to know about this type."""
+
+
 def _require_zstd(action: str):
     if zstd is None:
         raise ModuleNotFoundError(
@@ -122,6 +130,11 @@ def save_tree(tree: Any, directory: str, step: int,
         "bytes_raw": len(payload),
         "bytes_compressed": len(blob),
         "sha256": hashlib.sha256(blob).hexdigest(),
+        # content checksum over the *uncompressed* payload: catches
+        # corruption the on-disk blob sha cannot (e.g. a tampered blob
+        # whose manifest sha was rewritten to match, or a decompressor
+        # bug), verified after decompression on every load
+        "sha256_raw": hashlib.sha256(payload).hexdigest(),
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp_dir, _MANIFEST), "w") as f:
@@ -140,7 +153,8 @@ def _verify(step_dir: str) -> Dict[str, Any]:
         blob = f.read()
     digest = hashlib.sha256(blob).hexdigest()
     if digest != manifest["sha256"]:
-        raise IOError(f"checkpoint {step_dir} corrupt: sha mismatch")
+        raise CorruptCheckpointError(
+            f"checkpoint {step_dir} corrupt: blob sha mismatch")
     return manifest
 
 
@@ -161,6 +175,13 @@ def load_tree(directory: str, step: int, like: Any,
             .ZstdDecompressor().decompress(blob)
     else:
         raw = blob
+    # manifests from before the content-checksum change have no
+    # "sha256_raw": skip the check rather than fail old checkpoints
+    want_raw = manifest.get("sha256_raw")
+    if want_raw is not None and \
+            hashlib.sha256(raw).hexdigest() != want_raw:
+        raise CorruptCheckpointError(
+            f"checkpoint {step_dir} corrupt: content sha mismatch")
     records = _deserialize_records(raw)
 
     flat_like = jax.tree_util.tree_leaves_with_path(like)

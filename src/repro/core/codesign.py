@@ -50,6 +50,8 @@ __all__ = [
     "solve_oracle",
     "solve_sca",
     "solve_decode",
+    "device_only_params",
+    "solve_device_only",
 ]
 
 _EPS = 1e-12
@@ -158,6 +160,13 @@ def min_energy_under_deadline(workload_frac: float, p: SystemParams,
         tau_a = t0 - tau_s
         e = b / max(tau_s, _EPS) ** 2
         return e, 0.0, p.f_server_max * ks / max(tau_s, _EPS)
+    if b <= 0.0:  # degenerate: no server workload (device-only split)
+        tau_a = t0  # whole deadline on the agent minimizes its energy
+        e = a / max(tau_a, _EPS) ** 2
+        f_opt = p.f_max * ka * w / max(tau_a, _EPS)
+        # f~ = f~_max is inert here (zero server FLOPs) but keeps the
+        # cost model's server-delay expression well-defined
+        return e, min(f_opt, p.f_max), p.f_server_max
     r = (a / b) ** (1.0 / 3.0)
     tau_a = t0 * r / (1.0 + r)
     # clip into the box implied by max frequencies
@@ -248,6 +257,46 @@ def solve_oracle(lam: float, p: SystemParams, t0: float, e0: float,
         if ok:
             return _pack(b_hat, f, fs, lam, p, b_emb=b_emb)
     return None
+
+
+# ---------------------------------------------------------------------------
+# Degraded device-only fallback (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def device_only_params(p: SystemParams) -> SystemParams:
+    """The system with the split pinned fully on-agent: every server
+    FLOP moves to the device, and the uplink disappears (no boundary
+    embedding is ever transmitted, so transport delay/energy and the
+    link rate are all zeroed).  This is (P1) restricted to the corner
+    the paper's split makes first-class: when the server is
+    unreachable the agent still holds the full model at some b̂."""
+    return dataclasses.replace(
+        p, n_flop_agent=p.n_flop_agent + p.n_flop_server,
+        n_flop_server=0.0, link_bps=0.0, emb_bytes_full=0.0,
+        tx_power_w=0.0)
+
+
+def solve_device_only(lam: float, p: SystemParams, t0: float, e0: float,
+                      b_max: int = 16) -> CodesignSolution:
+    """(P1) over :func:`device_only_params`: the largest bit-width the
+    agent can run the *whole* model at within (T0, E0), with the
+    min-energy frequency assignment — the supervisor's degraded
+    operating point when the server is unreachable (DESIGN.md §15).
+
+    Never returns ``None``: if no bit-width meets both budgets the
+    energy budget is relaxed (deadline kept), and failing that the
+    solve pins b̂=1 at full frequency with ``feasible=False`` — a
+    degraded agent keeps acting, it does not halt."""
+    pl = device_only_params(p)
+    for b_hat in range(b_max, 0, -1):
+        ok, f, fs, _ = feasible_bitwidth(b_hat, pl, t0, e0)
+        if ok:
+            return _pack(b_hat, f, fs, lam, pl)
+    for b_hat in range(b_max, 0, -1):
+        ok, f, fs, _ = feasible_bitwidth(b_hat, pl, t0, math.inf)
+        if ok:
+            return _pack(b_hat, f, fs, lam, pl, feasible=False)
+    return _pack(1, pl.f_max, pl.f_server_max, lam, pl, feasible=False)
 
 
 # ---------------------------------------------------------------------------

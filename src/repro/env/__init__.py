@@ -3,6 +3,9 @@ thermal / battery processes realized into deterministic, time-indexed
 ``SystemParams`` views for adaptive co-inference serving."""
 
 from .environment import Environment, EnvState  # noqa: F401
+from .faults import (AgentDropout, ChaosTrace, FaultState,  # noqa: F401
+                     LinkOutage, PacketCorruption, ServerPreemption,
+                     chaos_from_spec)
 from .processes import (Battery, MarkovLink, RayleighLink,  # noqa: F401
                         ThermalThrottle, TraceReplay)
 from . import presets  # noqa: F401

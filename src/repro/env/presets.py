@@ -13,11 +13,15 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from .environment import Environment
+from .faults import (AgentDropout, ChaosTrace, LinkOutage,
+                     PacketCorruption, ServerPreemption)
 from .processes import (Battery, MarkovLink, RayleighLink, ThermalThrottle,
                         TraceReplay)
 
 __all__ = ["PROFILE_FMAX", "wifi_markov", "rayleigh_fading",
-           "profile_replay", "battery_drain", "edge_day", "constant"]
+           "profile_replay", "battery_drain", "edge_day", "constant",
+           "chaos_outage", "chaos_corruption", "chaos_preemption",
+           "chaos_storm", "chaos_clean"]
 
 # Table I coarse frequency profiles (benchmarks/testbed_profiles.py);
 # duplicated here so src/ never imports from benchmarks/
@@ -106,6 +110,59 @@ def edge_day(*, seed: int = 0, horizon_s: float = 90.0,
         f_cap=ThermalThrottle(tau_s=horizon_s / 4.0),
         battery=Battery(capacity_j=40.0 * horizon_s, drain_w=15.0,
                         soc0=0.5))
+
+
+# ----------------------------------------------------------------------
+# chaos presets (DESIGN.md §15) — seeded fault schedules for the
+# supervisor, one per headline failure mode plus the kitchen sink
+# ----------------------------------------------------------------------
+def chaos_outage(*, seed: int = 0, horizon_s: float = 60.0,
+                 dt_s: float = 0.5) -> ChaosTrace:
+    """Flaky uplink: sticky Markov outages, ~14% of steps dark.
+
+    The headline goodput scenario of ``benchmarks/chaos.py``: a bare
+    engine loses every request in flight during a dark window, the
+    supervisor backs off and retries through it."""
+    return ChaosTrace(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+                      link_outage=LinkOutage(p_fail=0.05, p_recover=0.30))
+
+
+def chaos_corruption(*, seed: int = 0, horizon_s: float = 60.0,
+                     dt_s: float = 0.5) -> ChaosTrace:
+    """Noisy uplink: payload bit-flips on ~5% of transmissions — the
+    checksum detect-and-retransmit scenario."""
+    return ChaosTrace(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+                      corruption=PacketCorruption(rate=0.05))
+
+
+def chaos_preemption(*, seed: int = 0, horizon_s: float = 60.0,
+                     dt_s: float = 0.5) -> ChaosTrace:
+    """Preemptible edge server: crash/restart windows (MTBF 20 s,
+    MTTR 4 s) — the decode snapshot/restore recovery scenario."""
+    return ChaosTrace(seed=seed, horizon_s=horizon_s, dt_s=dt_s,
+                      preemption=ServerPreemption(mtbf_s=20.0, mttr_s=4.0))
+
+
+def chaos_storm(*, seed: int = 0, horizon_s: float = 90.0,
+                dt_s: float = 0.5, n_agents: int = 1) -> ChaosTrace:
+    """Everything at once: outages + corruption + preemption (+ fleet
+    dropout when ``n_agents > 1``) — the zero-lost/zero-duplicated
+    token stress test."""
+    return ChaosTrace(
+        seed=seed, horizon_s=horizon_s, dt_s=dt_s, n_agents=n_agents,
+        link_outage=LinkOutage(p_fail=0.04, p_recover=0.35),
+        corruption=PacketCorruption(rate=0.03),
+        preemption=ServerPreemption(mtbf_s=30.0, mttr_s=5.0),
+        dropout=AgentDropout(p_drop=0.02, p_rejoin=0.25)
+        if n_agents > 1 else None)
+
+
+def chaos_clean(*, seed: int = 0, horizon_s: float = 60.0,
+                dt_s: float = 0.5) -> ChaosTrace:
+    """The identity fault schedule: nothing ever fails, so the
+    supervisor passes every step straight through and is bitwise
+    identical to the bare engine (the §15 identity contract)."""
+    return ChaosTrace(seed=seed, horizon_s=horizon_s, dt_s=dt_s)
 
 
 def constant(*, horizon_s: float = 60.0, dt_s: float = 0.5,

@@ -25,6 +25,16 @@ presets: Markov Wi-Fi, Rayleigh fading, Table I profile replay, battery
 drain, or the combined ``edge-day``) and serves through the online
 adaptive engine (DESIGN.md §9); ``--adaptive-policy`` chooses the
 static / adaptive / oracle controller.
+
+``--chaos-trace <spec.json>`` injects a seeded fault trace (DESIGN.md
+§15: link outages, uplink corruption, server preemption, fleet agent
+dropout — see ``examples/chaos_spec.json``) and serves through the
+``ServingSupervisor``, which retries with backoff, retransmits
+corrupted uplinks, fails over to degraded device-only serving, and
+crash-recovers in-flight decode state; ``--chaos-bare`` drops the
+defenses for the unsupervised baseline.  Works with every queued
+engine (batched / adaptive / decode / fleet); ``--engine sequential``
+has no queue to supervise and rejects the flag.
 """
 
 from __future__ import annotations
@@ -45,12 +55,13 @@ from ..core import codesign as cd
 from ..core.cost_model import SystemParams
 from ..data import MarkovLMConfig, MarkovLMDataset
 from ..env import presets as env_presets
+from ..env.faults import chaos_from_spec
 from ..models.registry import build_model
 from ..obs import NULL_METRICS, NULL_TRACER, MetricsRegistry, Tracer
 from ..runtime import (AdaptiveCoInferenceEngine, BatchedCoInferenceEngine,
                        CodesignCache, CoInferenceEngine, DecodeEngine,
                        FleetAgentSpec, FleetCoInferenceEngine, QosClass,
-                       greedy_decode_reference)
+                       ServingSupervisor, greedy_decode_reference)
 from ..runtime.decode_engine import decode_protocol_gap
 
 ENV_TRACES = {
@@ -115,6 +126,15 @@ def main(argv=None):
                     help="fleet share allocator: water-filling joint "
                          "codesign or the equal-split baseline "
                          "(default: the spec's choice, else joint)")
+    ap.add_argument("--chaos-trace", default=None, metavar="SPEC.json",
+                    help="inject a seeded fault trace (DESIGN.md §15) and "
+                         "serve through the ServingSupervisor — see "
+                         "examples/chaos_spec.json for the format")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="override the chaos spec's seed")
+    ap.add_argument("--chaos-bare", action="store_true",
+                    help="unsupervised baseline: same injected faults, no "
+                         "retry/failover/recovery — faults lose work")
     ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
                     help="write a Chrome trace-event JSON of the run "
                          "(DESIGN.md §14) — load it in Perfetto/"
@@ -135,9 +155,55 @@ def main(argv=None):
     return rc
 
 
+def _load_chaos(args):
+    """Parse --chaos-trace into a ChaosTrace, or (None, rc) on failure —
+    same one-line-error/exit-2 contract as the fleet spec path."""
+    if args.chaos_trace is None:
+        return None, None
+    if args.engine == "sequential" and args.fleet is None \
+            and not args.decode and args.env_trace is None:
+        print("error: --chaos-trace needs a queued engine to supervise; "
+              "--engine sequential serves one call at a time. Use the "
+              "batched/adaptive/decode/fleet modes.", file=sys.stderr)
+        return None, 2
+    spec_path = pathlib.Path(args.chaos_trace)
+    try:
+        spec = json.loads(spec_path.read_text(encoding="utf-8"))
+        chaos = chaos_from_spec(spec, seed=args.chaos_seed)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot load chaos trace {spec_path}: {e}",
+              file=sys.stderr)
+        return None, 2
+    return chaos, None
+
+
+def _supervise(eng, chaos, args, tracer, metrics):
+    """Wrap an engine for --chaos-trace serving (None chaos = no wrap)."""
+    if chaos is None:
+        return None
+    return ServingSupervisor(eng, chaos=chaos,
+                             supervised=not args.chaos_bare,
+                             seed=chaos.seed, tracer=tracer,
+                             metrics=metrics)
+
+
+def _print_resilience(sup):
+    r = sup.report()
+    print(f"resilience [{r.mode}]: delivered {r.delivered}/"
+          f"{r.requests_total} (failed {r.failed}, shed {r.shed}) "
+          f"retries={r.retries} retransmits={r.retransmits} "
+          f"failovers={r.failovers} recoveries={r.recoveries} "
+          f"reallocations={r.reallocations} faults={r.faults_seen} "
+          f"tokens lost/dup={r.tokens_lost}/{r.tokens_duplicated} "
+          f"goodput={r.goodput:.1f} {r.goodput_unit}")
+
+
 def _dispatch(args, tracer, metrics):
+    chaos, rc = _load_chaos(args)
+    if rc is not None:
+        return rc
     if args.fleet is not None:
-        return serve_fleet(args, tracer, metrics)
+        return serve_fleet(args, tracer, metrics, chaos=chaos)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg is None:
@@ -166,11 +232,14 @@ def _dispatch(args, tracer, metrics):
         * (cfg.n_layers - cfg.split_layer) * tokens)
 
     if args.decode:
-        return serve_decode(cfg, model, params, sysp, args, tracer, metrics)
+        return serve_decode(cfg, model, params, sysp, args, tracer, metrics,
+                            chaos=chaos)
     if args.env_trace is not None:
-        return serve_adaptive(cfg, model, params, args, tracer, metrics)
+        return serve_adaptive(cfg, model, params, args, tracer, metrics,
+                              chaos=chaos)
     if args.engine == "batched":
-        return serve_batched(cfg, model, params, sysp, args, tracer, metrics)
+        return serve_batched(cfg, model, params, sysp, args, tracer, metrics,
+                             chaos=chaos)
     return serve_sequential(cfg, model, params, sysp, args, tracer, metrics)
 
 
@@ -272,7 +341,7 @@ def serve_sequential(cfg, model, params, sysp, args,
 
 
 def serve_adaptive(cfg, model, params, args,
-                   tracer=NULL_TRACER, metrics=NULL_METRICS):
+                   tracer=NULL_TRACER, metrics=NULL_METRICS, chaos=None):
     """Serve a request stream spread across a dynamic-environment trace
     through ``AdaptiveCoInferenceEngine`` (DESIGN.md §9)."""
     env = ENV_TRACES[args.env_trace](seed=args.env_seed)
@@ -300,6 +369,8 @@ def serve_adaptive(cfg, model, params, args,
               f"b_hat={s.b_hat} f={s.f / 1e9:.2f}GHz "
               f"f~={s.f_server / 1e9:.2f}GHz")
 
+    sup = _supervise(eng, chaos, args, tracer, metrics)
+    front = sup if sup is not None else eng
     # arrivals spread across the trace so the stream *experiences* it
     rng = np.random.default_rng(1)
     span = env.horizon_s * 0.9
@@ -307,9 +378,9 @@ def serve_adaptive(cfg, model, params, args,
         toks = rng.integers(0, cfg.vocab_size,
                             size=int(rng.integers(args.seq // 2,
                                                   args.seq + 1)))
-        eng.submit(toks, classes[i % len(classes)].name,
-                   arrival_s=i * span / max(args.requests, 1))
-    responses = eng.drain()
+        front.submit(toks, classes[i % len(classes)].name,
+                     arrival_s=i * span / max(args.requests, 1))
+    responses = front.drain()
 
     print(f"served {len(responses)} requests in "
           f"{len(eng.batch_history)} batches:")
@@ -328,11 +399,13 @@ def serve_adaptive(cfg, model, params, args,
         print(f"  t={e.t_s:7.2f}s [{e.qos:12s}] {e.reason}: "
               f"b {e.b_before:.0f} -> {e.b_after:.0f}"
               + (" (degraded)" if e.degraded else ""))
+    if sup is not None:
+        _print_resilience(sup)
     return 0
 
 
 def serve_decode(cfg, model, params, sysp, args,
-                 tracer=NULL_TRACER, metrics=NULL_METRICS):
+                 tracer=NULL_TRACER, metrics=NULL_METRICS, chaos=None):
     """Continuous-batching greedy decode over a quantized KV cache
     (DESIGN.md §12) through ``DecodeEngine``."""
     # give the codesign a KV-cost term sized to this model's cache so the
@@ -377,16 +450,18 @@ def serve_decode(cfg, model, params, sysp, args,
               f"b_hat={bdesc} b_kv={s.b_kv} f={s.f / 1e9:.2f}GHz "
               f"f~={s.f_server / 1e9:.2f}GHz bound={s.objective:.3e}")
 
+    sup = _supervise(eng, chaos, args, tracer, metrics)
+    front = sup if sup is not None else eng
     rng = np.random.default_rng(0)
     prompts = {}
     for i in range(args.requests):
         toks = rng.integers(0, cfg.vocab_size,
                             size=int(rng.integers(max(args.seq // 2, 1),
                                                   args.seq + 1)))
-        rid = eng.submit(toks, classes[i % len(classes)].name,
-                         arrival_s=0.01 * i)
+        rid = front.submit(toks, classes[i % len(classes)].name,
+                           arrival_s=0.01 * i)
         prompts[rid] = (np.asarray(toks), classes[i % len(classes)].name)
-    responses = eng.drain()
+    responses = front.drain()
 
     rep = eng.report()
     print(f"served {rep.requests_served} requests, "
@@ -405,6 +480,8 @@ def serve_decode(cfg, model, params, sysp, args,
           f"energy={rep.total_energy_j:.3f}J")
     print(f"compile cache: {rep.compiled_variants} variants, "
           f"{rep.compile_hits} hits / {rep.compile_misses} misses")
+    if sup is not None:
+        _print_resilience(sup)
 
     if args.parity_check:
         for r in responses:
@@ -422,7 +499,7 @@ def serve_decode(cfg, model, params, sysp, args,
 
 
 def serve_batched(cfg, model, params, sysp, args,
-                  tracer=NULL_TRACER, metrics=NULL_METRICS):
+                  tracer=NULL_TRACER, metrics=NULL_METRICS, chaos=None):
     classes = [
         QosClass("realtime", t0=max(args.t0 / 3.0, 0.2),
                  e0=max(args.e0 / 2.0, 0.2)),
@@ -467,13 +544,15 @@ def serve_batched(cfg, model, params, sysp, args,
                   f"b_hat={s.b_hat} f={s.f / 1e9:.2f}GHz "
                   f"f~={s.f_server / 1e9:.2f}GHz gap={s.objective:.3e}")
 
+    sup = _supervise(eng, chaos, args, tracer, metrics)
+    front = sup if sup is not None else eng
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         toks = rng.integers(0, cfg.vocab_size,
                             size=int(rng.integers(args.seq // 2,
                                                   args.seq + 1)))
-        eng.submit(toks, classes[i % len(classes)].name)
-    responses = eng.drain()
+        front.submit(toks, classes[i % len(classes)].name)
+    responses = front.drain()
 
     print(f"served {len(responses)} requests in "
           f"{len(eng.batch_history)} batches:")
@@ -496,10 +575,12 @@ def serve_batched(cfg, model, params, sysp, args,
         print(f"compile cache: {rep.compiled_variants} variants, "
               f"{rep.compile_hits} hits / {rep.compile_misses} misses "
               f"(every batch after warmup is a hit)")
+    if sup is not None:
+        _print_resilience(sup)
     return 0
 
 
-def serve_fleet(args, tracer=NULL_TRACER, metrics=NULL_METRICS):
+def serve_fleet(args, tracer=NULL_TRACER, metrics=NULL_METRICS, chaos=None):
     """Serve a multi-agent fleet from a JSON spec (DESIGN.md §11).
 
     The spec's ``agents`` list gives one entry per fleet member: ``name``
@@ -601,6 +682,8 @@ def serve_fleet(args, tracer=NULL_TRACER, metrics=NULL_METRICS):
               f"f~={sol.f_server / 1e9:.2f}GHz "
               f"bound={sol.objective:.3e}{envd}")
 
+    sup = _supervise(fleet, chaos, args, tracer, metrics)
+    front = sup if sup is not None else fleet
     rng = np.random.default_rng(0)
     for s in specs:
         n_req, seq = traffic[s.name]
@@ -609,8 +692,8 @@ def serve_fleet(args, tracer=NULL_TRACER, metrics=NULL_METRICS):
             toks = rng.integers(0, cfg.vocab_size,
                                 size=int(rng.integers(max(seq // 2, 1),
                                                       seq + 1)))
-            fleet.submit(s.name, toks)
-    fleet.drain()
+            front.submit(s.name, toks)
+    front.drain()
 
     rep = fleet.report()
     print(f"\nserved {rep.requests_served} requests in "
@@ -630,6 +713,8 @@ def serve_fleet(args, tracer=NULL_TRACER, metrics=NULL_METRICS):
     if compiled:
         print(f"shared compile cache: {rep.compiled_variants} variants, "
               f"{rep.compile_hits} hits / {rep.compile_misses} misses")
+    if sup is not None:
+        _print_resilience(sup)
     return 0
 
 

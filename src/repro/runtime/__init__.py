@@ -15,4 +15,6 @@ from .serve_engine import (BatchedCoInferenceEngine, BatchStats,  # noqa: F401
                            CodesignCache, CoInferenceEngine, EngineReport,
                            QosClass, RequestStats, ServeRequest,
                            ServeResponse, ServeStats, fit_lambda)
+from .supervisor import (ResilienceReport, ServingSupervisor,  # noqa: F401
+                         flip_bit, payload_checksum)
 from .train_loop import TrainConfig, Trainer  # noqa: F401

@@ -812,6 +812,60 @@ class DecodeEngine:
         return None
 
     # ------------------------------------------------------------------
+    # supervisor hooks (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def fast_forward(self, t_s: float) -> None:
+        """Advance the virtual clock to ``t_s`` (never backwards) — the
+        supervisor's hook for billing fault wait time (backoff sleeps,
+        server repair windows) on the same clock every modeled cost
+        lands on."""
+        self._clock = max(self._clock, float(t_s))
+
+    def decode_round_cost(self, qos_name: str, t_bucket: int):
+        """Public (seconds, joules) of one fused decode step for the
+        class at cache bucket ``t_bucket`` — what the supervisor bills
+        per token when it finishes a recovered request through the
+        sequential reference instead of a slot block."""
+        return self._round_cost(self._classes[qos_name], int(t_bucket))
+
+    def snapshot_request(self, request_id: int) -> Optional[dict]:
+        """Freeze one in-flight request into a host-side snapshot the
+        sequential reference can resume bitwise.
+
+        The per-slot slice of the group's device buffers IS the
+        reference's batch-width-1 state: the kernels are row-independent,
+        so slot ``s`` of a ``max_batch``-wide cache holds exactly what a
+        width-1 run over the same request holds, and
+        ``greedy_decode_reference(state=...)`` continues it
+        token-for-token (the crash-recovery contract of DESIGN.md §15,
+        proven in ``tests/test_fault_tolerance.py``).  Returns None for
+        unknown, still-queued, or already-retired ids — only in-flight
+        requests have cache state to save.
+        """
+        for g in self._groups.values():
+            for slot, act in enumerate(g.slots):
+                if act is None or act.req.request_id != request_id:
+                    continue
+                c = self._classes[act.req.qos]
+                state = {
+                    "k_codes": np.asarray(g.k_codes[:, slot:slot + 1]),
+                    "v_codes": np.asarray(g.v_codes[:, slot:slot + 1]),
+                    "k_scales": np.asarray(g.k_scales[:, slot:slot + 1]),
+                    "v_scales": np.asarray(g.v_scales[:, slot:slot + 1]),
+                    "pos": np.int32(np.asarray(g.pos)[slot]),
+                    "last_token": np.int32(np.asarray(g.tok)[slot]),
+                    "t_bucket": np.int32(g.t_bucket),
+                }
+                self._d2h += sum(getattr(v, "nbytes", 0)
+                                 for v in state.values())
+                return {"request": act.req, "qos": act.req.qos,
+                        "b_kv": c.b_kv, "generated": list(act.generated),
+                        "ttft_s": act.ttft_s, "itls": list(act.itls),
+                        "last_emit_s": act.last_emit_s,
+                        "t_bucket": int(g.t_bucket), "state": state}
+        return None
+
+    # ------------------------------------------------------------------
     # the decode loop
     # ------------------------------------------------------------------
     def step(self, max_decode_steps: Optional[int] = None) \
@@ -961,7 +1015,7 @@ class DecodeEngine:
     def _decode_round(self, g: _Group, out: List[DecodeResponse],
                       max_steps: Optional[int] = None) -> None:
         c = self._classes[g.qos_name]
-        t_round, e_round = self._round_cost(c, g)
+        t_round, e_round = self._round_cost(c, g.t_bucket)
         k = self._chunk_steps(g, t_round, max_steps)
         live = np.zeros((self.max_batch,), np.int32)
         live_rows = [i for i, a in enumerate(g.slots) if a is not None]
@@ -1074,7 +1128,7 @@ class DecodeEngine:
             + float(server_energy(c.f_server, p))
         return t, e
 
-    def _round_cost(self, c: _ClassState, g: _Group):
+    def _round_cost(self, c: _ClassState, t_bucket: int):
         """One decode step over the FULL slot block: all ``max_batch``
         rows and the whole [L, B, T] cache read at b_kv are billed
         whether or not every slot is live — padding is compute/traffic
@@ -1082,7 +1136,7 @@ class DecodeEngine:
         admission exists to avoid.  A fused chunk of k steps bills k of
         these."""
         n_a, n_s = self.flop_split(self.max_batch)
-        kv_full = 2.0 * self.cfg.n_layers * self.max_batch * g.t_bucket \
+        kv_full = 2.0 * self.cfg.n_layers * self.max_batch * t_bucket \
             * self.cfg.n_kv_heads * self.cfg.head_dim \
             * (self.sysp.b_full / 8.0)
         p = dataclasses.replace(self.sysp, n_flop_agent=n_a,

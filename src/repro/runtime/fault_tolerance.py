@@ -1,5 +1,13 @@
-"""Fault-tolerance supervisor: checkpoint/restart, straggler detection,
-elastic re-mesh.
+"""**Training-side** fault tolerance: checkpoint/restart, straggler
+detection, elastic re-mesh.
+
+Everything in this module supervises the *training loop* — it restarts
+sessions, not requests.  The serving-side counterpart (retry, degraded
+device-only fallback, crash-recoverable decode) is
+:class:`~repro.runtime.supervisor.ServingSupervisor` (DESIGN.md §15);
+the two layers share :class:`~repro.obs.ReportBase` for their reports
+and this module's :class:`StragglerMonitor` for slow-step/slow-batch
+detection.
 
 At 1000+ nodes the mean time between host failures drops below the job
 length, so the training loop must survive: (i) host loss -> restore the
@@ -21,7 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import (Callable, Dict, Hashable, List, Optional,
+                    Sequence)
 
 import jax
 import numpy as np
@@ -61,24 +70,27 @@ class HostSet:
 
 @dataclasses.dataclass
 class StragglerMonitor:
-    """Per-host step-duration telemetry with a relative deadline.
+    """Per-lane duration telemetry with a relative deadline.
 
-    A host is flagged when its step time exceeds ``factor`` x the rolling
-    median of all hosts.  Real pods feed this from per-host heartbeats; the
-    tests feed synthetic durations.
+    A lane is flagged when its reported duration exceeds ``factor`` x
+    the rolling median across lanes.  Training feeds it per-host step
+    times (lane = host id); serving reuses it unchanged for slow-batch
+    detection (lane = QoS class or fleet agent name — any hashable id
+    works).  Real pods feed this from per-host heartbeats; the tests
+    feed synthetic durations.
     """
 
     factor: float = 3.0
     window: int = 20
 
     def __post_init__(self):
-        self._times: Dict[int, List[float]] = {}
+        self._times: Dict[Hashable, List[float]] = {}
 
-    def report(self, host_id: int, duration_s: float) -> None:
-        self._times.setdefault(host_id, []).append(duration_s)
-        self._times[host_id] = self._times[host_id][-self.window:]
+    def report(self, lane: Hashable, duration_s: float) -> None:
+        self._times.setdefault(lane, []).append(duration_s)
+        self._times[lane] = self._times[lane][-self.window:]
 
-    def stragglers(self) -> List[int]:
+    def stragglers(self) -> List[Hashable]:
         if not self._times:
             return []
         meds = {h: float(np.median(t)) for h, t in self._times.items()
@@ -100,7 +112,8 @@ class SupervisorReport(ReportBase):
 
 
 class Supervisor:
-    """Wraps a restartable training session.
+    """Wraps a restartable **training** session (serving has its own
+    :class:`~repro.runtime.supervisor.ServingSupervisor`).
 
     The user supplies ``make_session(n_devices) -> session`` where a session
     exposes ``run(steps) -> None`` (raising on failure), ``step`` (current

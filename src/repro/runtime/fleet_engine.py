@@ -212,6 +212,11 @@ class FleetCoInferenceEngine:
                                                **kwargs)
             self.engines[spec.name] = eng
         self._violations: Dict[str, int] = {a.name: 0 for a in self.specs}
+        # membership (DESIGN.md §15): dropped agents keep their queues
+        # but are skipped by step() until they rejoin; reallocate()
+        # re-water-fills the server among whoever is present
+        self._active = {a.name for a in self.specs}
+        self._reallocations = 0
 
     # ------------------------------------------------------------------
     # allocation views
@@ -233,6 +238,81 @@ class FleetCoInferenceEngine:
                 return i
         raise KeyError(f"unknown agent {agent!r}; have "
                        f"{[a.name for a in self.specs]}")
+
+    # ------------------------------------------------------------------
+    # membership churn (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    @property
+    def active_agents(self) -> tuple:
+        """Currently-present members, in spec order."""
+        return tuple(a.name for a in self.specs if a.name in self._active)
+
+    @property
+    def reallocations(self) -> int:
+        """How many times the share split was re-solved — the churn
+        bound is one per membership change, enforced by the supervisor
+        calling :meth:`reallocate` only on a dropout/rejoin edge."""
+        return self._reallocations
+
+    def reallocate(self, active: "Sequence[str]") -> fl.FleetSolution:
+        """Re-water-fill the server among ``active`` and retune each
+        present member engine to its new share.
+
+        A dropout hands its slice to the survivors (their ``f̃`` slices
+        grow, possibly upgrading their b̂); a rejoin takes it back.
+        Dropped agents keep their queues — their requests wait for the
+        rejoin rather than being silently dropped — and their engines
+        keep the last operating point.  Raises ``ValueError`` when the
+        surviving subset is empty or its budgets can no longer be met
+        from the shared server."""
+        names = list(dict.fromkeys(active))
+        for name in names:
+            self._index(name)
+        if not names:
+            raise ValueError("fleet reallocation needs at least one "
+                             "active agent")
+        core = [
+            fl.FleetAgent(name=a.name,
+                          lam=fit_lambda(a.params, a.model.cfg.split_layer),
+                          sysp=a.sysp, t0=a.qos.t0, e0=a.qos.e0,
+                          weight=a.weight, b_emb=a.b_emb)
+            for a in self.specs if a.name in names]
+        solve = fl.solve_fleet if self.allocator == "joint" \
+            else fl.solve_equal_split
+        alloc = solve(core, share_link=self.share_link)
+        if alloc is None:
+            raise ValueError(
+                f"fleet reallocation infeasible over {sorted(names)}: "
+                "the surviving agents' (T0, E0) budgets cannot be met")
+        shares = dict(zip([a.name for a in core], alloc.shares))
+        for spec in self.specs:
+            if spec.name not in shares:
+                continue
+            share = shares[spec.name]
+            eng = self.engines[spec.name]
+            p = fl.shared_params(spec.sysp, share,
+                                 share_link=self.share_link)
+            # retune in place: the member keeps its queue, clock, and
+            # caches; only the operating point moves with the share
+            eng.sysp = p
+            eng.engine.sysp = p
+            sol = eng._counted_solution(spec.qos, sysp=p)
+            if sol is None:
+                raise ValueError(
+                    f"agent {spec.name!r} infeasible at share "
+                    f"{share:.3f} after reallocation")
+            eng._solutions[spec.qos.name] = sol
+            if self.mixed_precision:
+                eng._plans[spec.qos.name] = eng.engine.plan_of(sol)
+            self.tracer.instant("fleet.share", agent=spec.name,
+                                share=share, allocator=self.allocator,
+                                reallocation=True)
+            self.metrics.gauge("fleet.agent_share",
+                               agent=spec.name).set(share)
+        self._active = set(names)
+        self._reallocations += 1
+        self.metrics.counter("fleet.reallocations").inc()
+        return alloc
 
     # ------------------------------------------------------------------
     # queue API (delegates to the member engines)
@@ -265,6 +345,8 @@ class FleetCoInferenceEngine:
         queue is empty."""
         best_name, best_t = None, None
         for spec in self.specs:
+            if spec.name not in self._active:
+                continue  # dropped member: queue holds until rejoin
             t = self.engines[spec.name].oldest_pending_arrival()
             if t is not None and (best_t is None or t < best_t):
                 best_name, best_t = spec.name, t
@@ -282,7 +364,9 @@ class FleetCoInferenceEngine:
         per agent, in completion order."""
         out: Dict[str, List[ServeResponse]] = {a.name: []
                                                for a in self.specs}
-        while self.pending():
+        # count only active queues: a dropped member's requests wait for
+        # its rejoin and must not spin the drain loop
+        while sum(self.engines[n].pending() for n in self.active_agents):
             name, responses = self.step()
             if name is not None:
                 out[name].extend(responses)

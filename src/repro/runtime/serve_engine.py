@@ -1098,6 +1098,23 @@ class BatchedCoInferenceEngine:
     def clock_s(self) -> float:
         return self._clock
 
+    def fast_forward(self, t_s: float) -> None:
+        """Advance the virtual clock to ``t_s`` (never backwards) — the
+        supervisor's hook for billing fault wait time (backoff sleeps,
+        retransmits, repair windows; DESIGN.md §15) on the same clock
+        the cost model bills serving on."""
+        self._clock = max(self._clock, float(t_s))
+
+    def cancel(self, request_id: int) -> bool:
+        """Drop a still-queued request (the supervisor's load-shedding
+        hook, DESIGN.md §15); returns True when it was queued.  Batched
+        serving has no mid-batch state to unwind — a request is either
+        queued or already answered."""
+        n0 = len(self._queue)
+        self._queue = collections.deque(
+            r for r in self._queue if r.request_id != request_id)
+        return len(self._queue) < n0
+
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------

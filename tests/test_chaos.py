@@ -1,0 +1,294 @@
+"""Chaos engineering (DESIGN.md §15): seeded fault traces, the spec
+parser, the payload checksum, and the ServingSupervisor's defenses
+(retry, retransmit, shed, device-only failover, fleet reallocation).
+
+The decode-engine crash/recovery parity matrix lives in
+``test_fault_tolerance.py`` next to the other restart-style tests.
+"""
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.env import (AgentDropout, ChaosTrace, LinkOutage,
+                       PacketCorruption, ServerPreemption, chaos_from_spec)
+from repro.env.presets import chaos_clean, chaos_storm
+from repro.models.registry import build_model
+from repro.runtime import (BatchedCoInferenceEngine, FleetAgentSpec,
+                           FleetCoInferenceEngine, QosClass,
+                           ServingSupervisor, flip_bit, payload_checksum)
+
+# ---------------------------------------------------------------------------
+# fault traces: determinism, stationarity, clamping
+# ---------------------------------------------------------------------------
+
+def _outage_trace(seed, p_fail=0.1, p_recover=0.3, n=400):
+    return ChaosTrace(dt_s=1.0, horizon_s=float(n), seed=seed,
+                      link_outage=LinkOutage(p_fail=p_fail,
+                                             p_recover=p_recover))
+
+
+def test_same_seed_same_schedule():
+    a, b = _outage_trace(7), _outage_trace(7)
+    np.testing.assert_array_equal(a.link_up, b.link_up)
+    np.testing.assert_array_equal(a.server_up, b.server_up)
+    c = _outage_trace(8)
+    assert not np.array_equal(a.link_up, c.link_up)
+
+
+def test_adding_a_process_never_reshuffles_the_others():
+    # child rng streams are spawned in a fixed order, so composing a
+    # preemption process on top must not change the link schedule
+    a = _outage_trace(3)
+    b = ChaosTrace(dt_s=1.0, horizon_s=400.0, seed=3,
+                   link_outage=LinkOutage(p_fail=0.1, p_recover=0.3),
+                   preemption=ServerPreemption(mtbf_s=10.0, mttr_s=5.0))
+    np.testing.assert_array_equal(a.link_up, b.link_up)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1),
+       p_fail=st.floats(0.05, 0.5),
+       p_recover=st.floats(0.05, 0.5))
+def test_outage_fraction_matches_stationary_rate(seed, p_fail, p_recover):
+    # the Markov chain's stationary down-fraction is
+    # p_fail / (p_fail + p_recover); a long trace should be close
+    tr = _outage_trace(seed, p_fail, p_recover, n=6000)
+    want = p_fail / (p_fail + p_recover)
+    assert abs(tr.outage_fraction() - want) < 0.12
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_trace_is_pure_function_of_seed(seed):
+    kw = dict(dt_s=0.25, horizon_s=50.0, seed=seed, n_agents=2,
+              link_outage=LinkOutage(0.2, 0.2),
+              corruption=PacketCorruption(0.1),
+              preemption=ServerPreemption(mtbf_s=4.0, mttr_s=2.0),
+              dropout=AgentDropout(0.1, 0.3))
+    a, b = ChaosTrace(**kw), ChaosTrace(**kw)
+    for name in ("link_up", "corrupt", "server_up", "agents_up"):
+        np.testing.assert_array_equal(getattr(a, name), getattr(b, name))
+
+
+def test_clamp_extension_and_recovery_queries():
+    tr = _outage_trace(0, n=100)
+    last = tr.fault_at((tr.n_steps - 1) * tr.dt_s)
+    beyond = tr.fault_at(10 * tr.horizon_s)
+    assert beyond.link_up == last.link_up       # clamp-extend
+    # a trace that ends down answers "never in trace" == end_s
+    down = ChaosTrace(dt_s=1.0, horizon_s=10.0, seed=0,
+                      preemption=ServerPreemption(mtbf_s=1e-9, mttr_s=1e9))
+    assert not down.fault_at(5.0).server_up
+    assert down.next_server_up(5.0) == down.end_s
+
+
+def test_is_clean_and_fraction_accounting():
+    assert ChaosTrace(dt_s=0.5, horizon_s=10.0, seed=0).is_clean()
+    assert chaos_clean().is_clean()
+    storm = chaos_storm()
+    assert not storm.is_clean()
+    assert 0.0 < storm.outage_fraction() < 1.0
+    assert storm.corruption_fraction() > 0.0
+
+
+def test_process_parameter_validation():
+    with pytest.raises(ValueError, match="p_fail"):
+        LinkOutage(p_fail=1.5)
+    with pytest.raises(ValueError, match="rate"):
+        PacketCorruption(rate=-0.1)
+    with pytest.raises(ValueError, match="mttr_s"):
+        ServerPreemption(mttr_s=0.0)
+    with pytest.raises(ValueError, match="dt_s"):
+        ChaosTrace(dt_s=0.0)
+    with pytest.raises(ValueError, match="n_agents"):
+        ChaosTrace(n_agents=0)
+
+
+# ---------------------------------------------------------------------------
+# spec parsing (launch/serve.py --chaos-trace)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,match", [
+    ([1, 2], "top level"),
+    ({"no_such": 1}, "unknown top-level"),
+    ({"dt_s": "fast"}, "must be a number"),
+    ({"link_outage": 3}, "must be an object"),
+    ({"link_outage": {"p_flail": 0.1}}, "unknown key"),
+    ({"corruption": {"rate": 2.0}}, "rate"),
+    ({"preemption": {"mtbf_s": -1.0}}, "mtbf_s"),
+])
+def test_chaos_from_spec_rejects_malformed(spec, match):
+    with pytest.raises(ValueError, match=match):
+        chaos_from_spec(spec)
+
+
+def test_chaos_from_spec_round_trip_and_seed_override():
+    spec = {"dt_s": 0.1, "horizon_s": 20.0, "seed": 9,
+            "link_outage": {"p_fail": 0.2, "p_recover": 0.4},
+            "corruption": {"rate": 0.05},
+            "dropout": {"p_drop": 0.1, "p_rejoin": 0.5, "n_agents": 3}}
+    tr = chaos_from_spec(spec)
+    assert tr.seed == 9 and tr.dt_s == 0.1 and tr.n_agents == 3
+    assert tr.link_outage.p_fail == 0.2
+    assert chaos_from_spec(spec, seed=42).seed == 42
+    # same spec -> same realized schedule (the CLI replay contract)
+    np.testing.assert_array_equal(tr.link_up,
+                                  chaos_from_spec(spec).link_up)
+
+
+# ---------------------------------------------------------------------------
+# payload checksum
+# ---------------------------------------------------------------------------
+
+def test_payload_checksum_detects_single_bit_flips():
+    payload = np.arange(64, dtype=np.float32)
+    c0 = payload_checksum(payload)
+    assert c0 == payload_checksum(payload.copy())
+    for bit in (0, 17, 64 * 32 - 1):
+        assert payload_checksum(flip_bit(payload, bit)) != c0
+
+
+@settings(deadline=None, max_examples=25)
+@given(bit=st.integers(0, 32 * 32 - 1))
+def test_payload_checksum_detects_any_bit(bit):
+    payload = np.arange(32, dtype=np.int32)
+    assert payload_checksum(flip_bit(payload, bit)) \
+        != payload_checksum(payload)
+
+
+# ---------------------------------------------------------------------------
+# supervisor over the batched / fleet engines
+# ---------------------------------------------------------------------------
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+QOS = QosClass("interactive", t0=1.3, e0=1.5)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _traffic(cfg, n, seed=7, spacing=0.01):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size,
+                          size=int(rng.integers(6, 17))).astype(np.int32),
+             spacing * i) for i in range(n)]
+
+
+def _run_batched(model, params, chaos, supervised, streams, **kw):
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=[QOS],
+                                   max_batch=3)
+    sup = ServingSupervisor(eng, chaos=chaos, supervised=supervised,
+                            seed=3, **kw)
+    rids = {}
+    for i, (toks, t) in enumerate(streams):
+        rids[sup.submit(toks, QOS.name, arrival_s=t)] = i
+    out = {rids[r.request_id]: np.asarray(r.logits) for r in sup.drain()}
+    return out, sup.report()
+
+
+@pytest.fixture(scope="module")
+def batched_ref(built):
+    cfg, model, params = built
+    streams = _traffic(cfg, 6)
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=[QOS],
+                                   max_batch=3)
+    for toks, t in streams:
+        eng.submit(toks, QOS.name, arrival_s=t)
+    return streams, [np.asarray(r.logits) for r in eng.drain()]
+
+
+def test_supervisor_clean_trace_is_bitwise_passthrough(built, batched_ref):
+    _, model, params = built
+    streams, ref = batched_ref
+    out, rep = _run_batched(model, params, chaos_clean(), True, streams)
+    assert rep.clean and rep.delivered == len(streams)
+    assert rep.retries == rep.failovers == rep.shed == 0
+    for i, logits in enumerate(ref):
+        np.testing.assert_array_equal(out[i], logits)
+
+
+def test_supervisor_outage_fails_over_to_device_only(built, batched_ref):
+    _, model, params = built
+    streams, _ = batched_ref
+    # sticky outage: retries exhaust, the supervisor re-solves the
+    # codesign with the split pinned fully on-agent and keeps serving
+    chaos = ChaosTrace(dt_s=0.005, horizon_s=2.0, seed=1,
+                       link_outage=LinkOutage(p_fail=0.3, p_recover=0.05))
+    assert chaos.outage_fraction() > 0.3
+    out, rep = _run_batched(model, params, chaos, True, streams)
+    assert rep.delivered == len(streams) and rep.failed == 0
+    assert rep.failovers > 0
+    _, rep_bare = _run_batched(model, params, chaos, False, streams)
+    assert rep_bare.failed > 0
+    assert rep.goodput > rep_bare.goodput
+
+
+def test_supervisor_corruption_retransmits_bitwise(built, batched_ref):
+    _, model, params = built
+    streams, ref = batched_ref
+    chaos = ChaosTrace(dt_s=0.005, horizon_s=2.0, seed=4,
+                       corruption=PacketCorruption(rate=0.5))
+    out, rep = _run_batched(model, params, chaos, True, streams)
+    assert rep.retransmits > 0
+    assert rep.delivered == len(streams)
+    # a retransmitted payload is the same payload: bitwise identical
+    for i, logits in enumerate(ref):
+        np.testing.assert_array_equal(out[i], logits)
+
+
+def test_supervisor_sheds_only_unmeetable_requests(built):
+    cfg, model, params = built
+    streams = _traffic(cfg, 3)
+    eng = BatchedCoInferenceEngine(model, params, SYSP, classes=[QOS],
+                                   max_batch=3)
+    sup = ServingSupervisor(
+        eng, chaos=ChaosTrace(dt_s=0.5, horizon_s=400.0, seed=0,
+                              corruption=PacketCorruption(rate=0.001)),
+        supervised=True, seed=3, deadline_factor=4.0)
+    sup.submit(streams[0][0], QOS.name, arrival_s=0.0)
+    sup.engine.fast_forward(50.0)            # long stall: deadline passed
+    sup.submit(streams[1][0], QOS.name, arrival_s=0.0)   # unmeetable
+    rid_ok = sup.submit(streams[2][0], QOS.name, arrival_s=49.0)
+    outs = sup.drain()
+    rep = sup.report()
+    assert rep.shed >= 1
+    assert any(r.request_id == rid_ok for r in outs)   # feasible: served
+    assert rep.requests_total == rep.delivered + rep.shed + rep.failed
+
+
+def test_fleet_dropout_triggers_reallocation(built):
+    cfg, model, params = built
+    qos = [QosClass("tight", t0=0.8, e0=8.0),
+           QosClass("loose-a", t0=3.0, e0=4.0),
+           QosClass("loose-b", t0=3.0, e0=4.0)]
+    specs = [FleetAgentSpec(name=q.name, model=model, params=params,
+                            sysp=SYSP, qos=q) for q in qos]
+    chaos = ChaosTrace(dt_s=0.005, horizon_s=10.0, seed=9, n_agents=3,
+                       dropout=AgentDropout(p_drop=0.3, p_rejoin=0.3))
+
+    def run(supervised):
+        fleet = FleetCoInferenceEngine(specs, allocator="joint",
+                                       max_batch=2)
+        sup = ServingSupervisor(fleet, chaos=chaos, supervised=supervised,
+                                seed=3)
+        rng = np.random.default_rng(0)
+        for s in specs:
+            for _ in range(3):
+                sup.submit(s.name, rng.integers(
+                    0, cfg.vocab_size, size=int(rng.integers(6, 17))))
+        sup.drain()
+        return sup.report()
+
+    rep = run(True)
+    assert rep.delivered == 9 and rep.failed == 0
+    assert rep.reallocations > 0       # membership churn re-water-fills
+    rep_bare = run(False)
+    assert rep_bare.failed > 0         # bare fleet strands absent agents

@@ -4,6 +4,7 @@ cannot serve (ISSUE 5 satellite), and the fleet spec path must validate
 its input the same way."""
 
 import json
+import pathlib
 
 import pytest
 
@@ -120,6 +121,54 @@ def test_fleet_spec_bad_agent_entries_error_cleanly(tmp_path, agent,
     assert rc == 2
     assert err.startswith("error: fleet agent")
     assert "Traceback" not in err
+
+
+@pytest.mark.parametrize("payload", [
+    "not json {",
+    '{"no_such_key": 1}',
+    '{"dt_s": -0.5}',
+    '{"link_outage": {"p_fail": 2.0}}',
+    '{"corruption": {"typo": 0.1}}',
+])
+def test_chaos_spec_validation_errors_cleanly(tmp_path, payload, capsys):
+    spec = tmp_path / "chaos.json"
+    spec.write_text(payload)
+    rc = serve.main(["--smoke", "--chaos-trace", str(spec)])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error: cannot load chaos trace")
+    assert "Traceback" not in err
+
+
+def test_chaos_spec_missing_file_errors_cleanly(tmp_path, capsys):
+    rc = serve.main(["--smoke", "--chaos-trace",
+                     str(tmp_path / "nope.json")])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+
+
+def test_chaos_with_sequential_engine_errors_cleanly(tmp_path, capsys):
+    # the sequential engine has no queue/virtual clock to supervise
+    spec = tmp_path / "chaos.json"
+    spec.write_text('{"corruption": {"rate": 0.1}}')
+    rc = serve.main(["--smoke", "--engine", "sequential",
+                     "--chaos-trace", str(spec)])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "chaos" in err and "Traceback" not in err
+
+
+def test_chaos_smoke_run_prints_resilience_line(capsys):
+    # the shipped example spec must keep driving a supervised smoke run
+    example = pathlib.Path(__file__).resolve().parent.parent \
+        / "examples" / "chaos_spec.json"
+    rc = serve.main(["--smoke", "--chaos-trace", str(example)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "resilience [supervised]:" in out
+    assert "tokens lost/dup=0/0" in out
 
 
 def test_fleet_spec_compiled_unsupported_arch_errors_cleanly(tmp_path,
