@@ -41,6 +41,13 @@ Sections (paper artifact -> module):
              the supervisor stops beating the bare engine, loses or
              duplicates tokens, recovered streams break bitwise
              parity, or the clean-trace pass-through costs over 3%)
+    speculative quantized-draft/verify rounds vs      speculative.py
+            fused decode across the (b_draft, k) grid
+            (also writes BENCH_spec.json at the repo root; raises if
+             speculation stops beating fused decode on modeled tok/s
+             at the chosen point, any grid point loses bitwise parity,
+             the codesign stops preferring the speculative solution,
+             or warm traffic compiles)
 """
 
 from __future__ import annotations
@@ -55,7 +62,7 @@ import time
 
 from . import (adaptive_serve, chaos, codesign_sweep, decode, distortion,
                fastpath, fleet, kernel_bench, mixed_precision_sweep,
-               obs_overhead, rd_bounds, serve_throughput,
+               obs_overhead, rd_bounds, serve_throughput, speculative,
                testbed_profiles, weight_stats)
 from .common import banner
 
@@ -82,6 +89,8 @@ SECTIONS = {
                      "(3% gate, bitwise parity)", obs_overhead.run),
     "chaos": ("Chaos  supervised vs bare decode under a seeded fault "
               "trace", chaos.run),
+    "speculative": ("Speculative  quantized drafts vs fused decode at a "
+                    "matched operating point", speculative.run),
 }
 
 

@@ -1,0 +1,421 @@
+"""Speculative co-inference: quantized agent drafts, server verifies
+(DESIGN.md §16).
+
+Measures, on the ``qwen2_0_5b`` smoke config:
+
+  1. the (b_draft × k) operating grid: one ragged request stream is
+     decoded through ``SpeculativeDecodeEngine`` at every draft
+     bit-width b_draft ∈ {2, 4, 8} × lookahead k ∈ {2, 4, 8}, all
+     pinned at the SAME forward operating point (b̂, f, f̃, b_kv) the
+     decode codesign picks — speculation is purely a *scheduling*
+     change over identical arithmetic, exactly how ``decode.py``
+     isolates admission policy — so the modeled-throughput ratio is
+     deterministic.  Per point: modeled tok/s, wall tok/s, measured
+     acceptance and accepted-prefix length.  Acceptance: the
+     throughput-chosen grid point strictly beats the fused-decode
+     baseline on modeled tok/s, and measured acceptance is monotone in
+     b_draft at every k (the §16 estimator's core shape).
+  2. the codesign extension: ``solve_speculative`` must return a
+     strictly lower distortion bound per expected delivered token than
+     ``solve_decode`` under the same (T0, E0) budgets — the paper-level
+     claim the (b_draft, k, f) joint variables exist to deliver.  Its
+     pick maximizes bound-amortization (large k), the throughput pick
+     minimizes round latency (small k); BENCH_spec.json records both.
+  3. bitwise parity: every delivered stream at every grid point must
+     equal the non-batched sequential reference token for token —
+     drafting never changes the bits (the house invariant, extended).
+  4. the compile-count bound: after ``warmup()``, ragged traffic never
+     compiles again, and total variants stay within prefill pairs ×
+     n_kv + spec-round rungs × n_kv — strictly inside the ladder ×
+     {draft, verify} budget (the fused round is ONE executable per
+     rung, not two).
+
+Wall tok/s is reported per grid point and regression-floored against
+the committed record, but the speculative-vs-decode gate holds the
+MODELED ratio: the harness realizes drafts as fake-quantized forwards
+(same FLOPs as the target — quantized arithmetic is not faster under
+the interpret backend), so executed work per delivered token is
+structurally ≥ plain decode's 1 + k/τ steps; the wall win needs
+hardware where b_draft arithmetic is actually cheaper, which is
+exactly what the virtual clock models (``cost_model.draft_delay``).
+
+Besides the printed tables, ``run()`` writes machine-readable
+``BENCH_spec.json`` at the repo root and RAISES if the acceptance
+criteria fail or the speculative/decode throughput ratio regresses by
+more than ``REGRESSION_TOLERANCE`` against the committed record (CI
+runs this section on every PR, mirroring ``decode.py``).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only speculative
+  or  PYTHONPATH=src python benchmarks/speculative.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.kernels.bucketing import seq_ladder
+from repro.models.registry import build_model
+from repro.obs import NULL_METRICS, MetricsRegistry
+from repro.runtime import (CompiledForwardCache, DecodeEngine, QosClass,
+                           SpeculativeDecodeEngine,
+                           greedy_decode_reference)
+
+try:
+    from .common import table
+except ImportError:  # executed as a script, not via benchmarks.run
+    from common import table
+
+ARCH = "qwen2-0.5b"
+SEQ = 24                 # max prompt length
+MAX_NEW = 24             # max generation budget (longer than decode.py:
+MIN_NEW = 8              # the draft/verify economics live in the decode
+MAX_BATCH = 4            # phase, so the stream must spend time there)
+N_REQUESTS = 20
+DRAFT_GRID = (2, 4, 8)
+LOOKAHEAD_GRID = (2, 4, 8)
+# the speculative/decode modeled ratio is virtual-clock deterministic;
+# the slack only absorbs intentional cost-model re-tuning
+REGRESSION_TOLERANCE = 0.9
+# wall tok/s is measured, so its floor absorbs machine jitter
+WALL_TOLERANCE = 0.5
+CLASSES = [
+    QosClass("realtime", t0=1.2, e0=1.0),
+    QosClass("interactive", t0=3.5, e0=2.0),
+]
+
+
+def make_sysp(cfg) -> SystemParams:
+    """Smoke-scale FLOPs plus a KV-cost term sized so b_kv is a real
+    decision.  The cache stream gets 2x ``decode.py``'s bandwidth: a
+    speculative round moves k+1 cache streams per ~τ delivered tokens
+    where plain decode moves one per token, so the single-stream choke
+    would drown the draft/verify trade-off this sweep is about."""
+    per_layer = cfg.active_param_count() / max(cfg.n_layers, 1)
+    tokens = MAX_BATCH * SEQ
+    kv_full = (2.0 * cfg.n_layers * MAX_BATCH * (SEQ + MAX_NEW)
+               * cfg.n_kv_heads * cfg.head_dim
+               * np.dtype(cfg.dtype).itemsize)
+    return SystemParams(
+        n_flop_agent=2.0 * per_layer * cfg.split_layer * tokens,
+        n_flop_server=2.0 * per_layer
+        * (cfg.n_layers - cfg.split_layer) * tokens,
+        kv_bytes_full=kv_full, kv_bw_bps=2.0 * kv_full, kv_power_w=2.0)
+
+
+def traffic(cfg, seed: int = 7):
+    """One ragged high-rate stream, generation-heavy: budgets in
+    [MIN_NEW, MAX_NEW] keep requests in the decode phase long enough
+    for accepted prefixes to matter."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(N_REQUESTS):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(SEQ // 2, SEQ + 1)))
+        out.append((toks.astype(np.int32),
+                    CLASSES[i % len(CLASSES)].name,
+                    int(rng.integers(MIN_NEW, MAX_NEW + 1)),
+                    0.01 * i))
+    return out
+
+
+def drain(eng, cfg):
+    """Submit the canonical stream and drain; wall timed around the
+    drain only (warmup/compiles excluded: steady-state throughput)."""
+    prompts = {}
+    for toks, qos, n_new, t in traffic(cfg):
+        rid = eng.submit(toks, qos, max_new_tokens=n_new, arrival_s=t)
+        prompts[rid] = toks
+    t0 = time.perf_counter()
+    responses = eng.drain()
+    wall_s = time.perf_counter() - t0
+    return eng.report(), responses, prompts, wall_s
+
+
+def spec_engine(model, params, sysp, points, b_draft, k, cache,
+                metrics=NULL_METRICS, lam=None, lam_kv=None):
+    """A speculative engine pinned at the decode codesign's forward
+    operating point per class, drafting at (b_draft, k)."""
+    eng = SpeculativeDecodeEngine(
+        model, params, sysp, classes=CLASSES, max_batch=MAX_BATCH,
+        max_new_tokens=MAX_NEW, compile_cache=cache, metrics=metrics,
+        draft_bits=b_draft, lookahead=k, lam=lam, lam_kv=lam_kv)
+    for q in CLASSES:
+        b_hat, b_kv, f, f_server = points[q.name]
+        eng.set_operating_point(q.name, b_hat, b_kv, b_draft=b_draft,
+                                k=k, f=f, f_server=f_server, qos=q)
+    eng.warmup(SEQ)
+    return eng
+
+
+def verify_parity(model, eng, responses, prompts, refs, ref_cache):
+    """Every delivered stream must equal the sequential reference; the
+    reference per (request, qos) is memoized — the pinned target plan
+    is identical across the whole grid, so so is the reference."""
+    for r in responses:
+        key = (r.request_id, r.qos, len(r.tokens), r.b_kv)
+        if key not in refs:
+            refs[key] = greedy_decode_reference(
+                model, eng.class_params(r.qos), prompts[r.request_id],
+                len(r.tokens), b_kv=r.b_kv, compile_cache=ref_cache)
+        if not np.array_equal(np.asarray(r.tokens), refs[key]):
+            return False
+    return True
+
+
+def run() -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sysp = make_sysp(cfg)
+    print(f"arch={cfg.name} max_batch={MAX_BATCH} prompts<= {SEQ} "
+          f"new in [{MIN_NEW}, {MAX_NEW}] ({N_REQUESTS} ragged "
+          "requests, smoke scale)")
+
+    # ---- fused-decode baseline: the codesign picks each class's
+    # forward operating point; every speculative engine is pinned there
+    dec_cache = CompiledForwardCache()
+    dec = DecodeEngine(model, params, sysp, classes=CLASSES,
+                       max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
+                       compile_cache=dec_cache)
+    dec.warmup(SEQ)
+    rep_d, resp_d, prompts, wall_d = drain(dec, cfg)
+    points = {name: (c.b_hat, c.b_kv, c.f, c.f_server)
+              for name, c in dec._classes.items()}
+    for name, (b_hat, b_kv, f, f_server) in points.items():
+        print(f"  pinned [{name:12s}] b_hat={b_hat} b_kv={b_kv} "
+              f"f={f:.3e} f_server={f_server:.3e}")
+
+    refs, ref_cache = {}, CompiledForwardCache()
+    parity_dec = verify_parity(model, dec, resp_d, prompts, refs,
+                               ref_cache)
+
+    # ---- the (b_draft, k) grid, all sharing one compile cache: the
+    # spec-round executable is keyed on b_kv only (k is a runtime
+    # argument, the draft tree is a weights input), so the whole sweep
+    # compiles each variant exactly once
+    spec_cache = CompiledForwardCache()
+    sweep, rows, parity_all = {}, [], True
+    for b in DRAFT_GRID:
+        for k in LOOKAHEAD_GRID:
+            eng = spec_engine(model, params, sysp, points, b, k,
+                              spec_cache, lam=dec.lam,
+                              lam_kv=dec.lam_kv)
+            rep, responses, _, wall_s = drain(eng, cfg)
+            st = eng.spec_stats()
+            ok = verify_parity(model, eng, responses, prompts, refs,
+                               ref_cache)
+            parity_all = parity_all and ok
+            sweep[f"b{b}_k{k}"] = {
+                "b_draft": b, "k": k,
+                "tps_model": rep.throughput_tps,
+                "tps_wall": rep.tokens_generated / max(wall_s, 1e-9),
+                "acceptance": st.acceptance_rate,
+                "accepted_len": st.accepted_per_round,
+                "tokens_per_round": st.tokens_per_round,
+                "rounds": st.rounds,
+                "parity": ok,
+            }
+            rows.append([f"{b}", f"{k}",
+                         f"{rep.throughput_tps:.2f}",
+                         f"{rep.tokens_generated / max(wall_s, 1e-9):.0f}",
+                         f"{st.acceptance_rate:.2f}",
+                         f"{st.accepted_per_round:.2f}",
+                         f"{st.tokens_per_round:.2f}",
+                         f"{st.rounds}",
+                         "yes" if ok else "NO"])
+    print("\nspeculative grid at the pinned operating point "
+          f"(decode baseline: {rep_d.throughput_tps:.2f} tok/s model, "
+          f"{rep_d.tokens_generated / max(wall_d, 1e-9):.0f} wall):")
+    table(["b_draft", "k", "tok/s model", "tok/s wall", "accept",
+           "acc len", "tok/round", "rounds", "parity"], rows)
+
+    # ---- throughput-chosen operating point, re-run on the warm cache:
+    # zero compile misses, and the metrics snapshot describes the
+    # headline configuration
+    chosen_key = max(sweep, key=lambda k: sweep[k]["tps_model"])
+    ch = sweep[chosen_key]
+    metrics = MetricsRegistry()
+    eng = spec_engine(model, params, sysp, points, ch["b_draft"],
+                      ch["k"], spec_cache, metrics=metrics,
+                      lam=dec.lam, lam_kv=dec.lam_kv)
+    rep_s, resp_s, _, wall_s = drain(eng, cfg)
+    parity_spec = verify_parity(model, eng, resp_s, prompts, refs,
+                                ref_cache)
+    wall_tps = rep_s.tokens_generated / max(wall_s, 1e-9)
+    speedup = rep_s.throughput_tps / max(rep_d.throughput_tps, 1e-12)
+    print(f"\nchosen operating point: b_draft={ch['b_draft']} "
+          f"k={ch['k']} -> {rep_s.throughput_tps:.2f} tok/s model "
+          f"({speedup:.2f}x fused decode), {wall_tps:.0f} wall, "
+          f"acceptance={ch['acceptance']:.2f}")
+
+    # ---- compile-count bound on the warm chosen engine: the sweep saw
+    # every variant already, so this run must never compile
+    b_kvs = sorted({c[1] for c in points.values()})
+    t_rungs = seq_ladder(SEQ + MAX_NEW)
+    n_pairs = sum(1 for s in seq_ladder(SEQ) for t in t_rungs if t >= s)
+    bound = (n_pairs + len(t_rungs)) * len(b_kvs)
+    cc = {
+        "warm_misses": rep_s.compile_misses,
+        "variants": rep_s.compiled_variants,
+        "bound": bound,
+        "ladder_bound": (n_pairs + 2 * len(t_rungs)) * len(b_kvs),
+        "b_kv_rungs": b_kvs,
+    }
+    print(f"compile-count bound: {cc['variants']} compiled variants "
+          f"(bound {bound} = ({n_pairs} prefill pairs + {len(t_rungs)} "
+          f"spec-round buckets) x {len(b_kvs)} b_kv rungs; ladder x "
+          f"{{draft, verify}} budget {cc['ladder_bound']}), "
+          f"{cc['warm_misses']} misses on the warm chosen engine")
+
+    # ---- the codesign claim: (b_draft, k, f) as joint variables buy a
+    # strictly lower distortion bound per expected delivered token
+    codesign = {}
+    prefers = True
+    for q in CLASSES:
+        sd = dec.codesign_cache.solve_decode(
+            dec.lam, dec.lam_kv, sysp, q, int(sysp.b_full))
+        ss = dec.codesign_cache.solve_speculative(
+            dec.lam, dec.lam_kv, sysp, q, int(sysp.b_full))
+        better = ss is not None and sd is not None \
+            and ss.objective < sd.objective
+        prefers = prefers and better
+        codesign[q.name] = {
+            "decode_objective": sd.objective if sd else None,
+            "spec_objective": ss.objective if ss else None,
+            "b_draft": ss.b_draft if ss else None,
+            "k": ss.k if ss else None,
+            "alpha": ss.alpha if ss else None,
+            "tokens_per_round": ss.tokens_per_round if ss else None,
+        }
+        if ss and sd:
+            print(f"codesign [{q.name:12s}]: bound/token "
+                  f"{sd.objective:.4f} -> {ss.objective:.4f} at "
+                  f"(b_draft={ss.b_draft}, k={ss.k}, "
+                  f"alpha={ss.alpha:.2f})")
+
+    # acceptance must rise with draft fidelity at every lookahead — the
+    # monotonicity the §16 estimator is built on, measured
+    mono = all(sweep[f"b{a}_k{k}"]["acceptance"]
+               <= sweep[f"b{b}_k{k}"]["acceptance"] + 1e-9
+               for k in LOOKAHEAD_GRID
+               for a, b in zip(DRAFT_GRID, DRAFT_GRID[1:]))
+
+    acceptance = {
+        "speculative_beats_fused_decode_tps": speedup > 1.0,
+        "speedup": speedup,
+        "bitwise_parity_speculative": parity_spec,
+        "bitwise_parity_sweep": parity_all,
+        "bitwise_parity_decode": parity_dec,
+        "codesign_prefers_speculative": prefers,
+        "acceptance_monotone_in_draft_bits": mono,
+        "no_misses_after_warmup": cc["warm_misses"] == 0,
+        "variants_within_bound": cc["variants"] <= cc["bound"],
+    }
+    ok = all(v for v in acceptance.values() if isinstance(v, bool))
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'} "
+          f"(speculative {speedup:.2f}x fused decode modeled, "
+          f"{wall_tps:.0f} wall tok/s, acceptance "
+          f"{ch['acceptance']:.2f} at the chosen point)")
+    for key, v in acceptance.items():
+        print(f"  {key}: {v}")
+
+    results = {
+        "acceptance_ok": ok,
+        "arch": cfg.name, "max_batch": MAX_BATCH,
+        "seq": SEQ, "max_new": MAX_NEW, "requests": N_REQUESTS,
+        "speedup": speedup,
+        "chosen": {"b_draft": ch["b_draft"], "k": ch["k"],
+                   "tps_model": rep_s.throughput_tps,
+                   "tps": wall_tps,
+                   "acceptance": ch["acceptance"],
+                   "accepted_len": ch["accepted_len"]},
+        "throughput": {
+            "decode": {"tps": rep_d.tokens_generated / max(wall_d, 1e-9),
+                       "tps_model": rep_d.throughput_tps,
+                       "rounds": rep_d.decode_rounds},
+            "speculative": {"tps": wall_tps,
+                            "tps_model": rep_s.throughput_tps,
+                            "rounds": rep_s.decode_rounds},
+        },
+        "sweep": sweep,
+        "codesign": codesign,
+        "operating_points": {n: {"b_hat": p[0], "b_kv": p[1],
+                                 "f": p[2], "f_server": p[3]}
+                             for n, p in points.items()},
+        "classes": [cs.to_dict() for cs in rep_s.classes],
+        "compile_count": cc,
+        "acceptance": acceptance,
+        "metrics": metrics.snapshot(),
+    }
+    regression = check_regression(speedup, wall_tps)
+    if regression:
+        print(f"regression vs committed BENCH_spec.json: {regression}")
+    out = write_json(results)
+    print(f"\nwrote {out}")
+    if not ok or regression:
+        # CI runs this section on every PR; losing the speculative win
+        # or draft/verify parity must fail the build
+        raise RuntimeError(
+            f"speculative acceptance failed: {acceptance} "
+            f"regression={regression!r}")
+    return results
+
+
+def _json_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_spec.json"
+
+
+def check_regression(speedup: float, wall_tps: "float | None" = None):
+    """Compare against the committed record; None = fine, else a message.
+
+    The speculative/decode modeled ratio is virtual-clock deterministic,
+    so its tolerance only absorbs intentional cost-model re-tuning — a
+    drop past it means drafting stopped paying for itself.  The
+    wall-clock floor is measured, so its (looser) tolerance absorbs
+    machine jitter — a drop past it means the round stopped being one
+    fused dispatch (e.g. fell back to per-phase host round-trips)."""
+    path = _json_path()
+    if not path.exists():
+        return None
+    try:
+        old = json.loads(path.read_text(encoding="utf-8"))
+        old_speedup = float(old["speedup"])
+    except (KeyError, ValueError):
+        return None
+    floor = REGRESSION_TOLERANCE * old_speedup
+    if speedup < floor:
+        return (f"speculative/decode throughput ratio fell to "
+                f"{speedup:.3f}x (committed {old_speedup:.3f}x, "
+                f"floor {floor:.3f}x)")
+    try:
+        old_wall = float(old["chosen"]["tps"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if wall_tps is not None and wall_tps < WALL_TOLERANCE * old_wall:
+        return (f"wall-clock speculative throughput fell to "
+                f"{wall_tps:.1f} tok/s (committed {old_wall:.1f}, "
+                f"floor {WALL_TOLERANCE * old_wall:.1f})")
+    return None
+
+
+def write_json(results: dict,
+               path: "pathlib.Path | None" = None) -> pathlib.Path:
+    """Dump the speculative numbers as ``BENCH_spec.json`` at the repo
+    root — the machine-readable perf record diffed across PRs."""
+    if path is None:
+        path = _json_path()
+    path.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+if __name__ == "__main__":
+    run()

@@ -37,12 +37,15 @@ from typing import Optional
 
 import numpy as np
 
-from .cost_model import (SystemParams, kv_delay, kv_energy,
+from .cost_model import (SystemParams, draft_delay, draft_energy, kv_delay,
+                         kv_energy, rollback_delay, rollback_energy,
+                         speculative_round_delay, speculative_round_energy,
                          transport_delay, transport_energy)
 
 __all__ = [
     "CodesignSolution",
     "DecodeSolution",
+    "SpeculativeSolution",
     "distortion_gap",
     "net_budgets",
     "min_energy_under_deadline",
@@ -50,8 +53,13 @@ __all__ = [
     "solve_oracle",
     "solve_sca",
     "solve_decode",
+    "solve_speculative",
+    "acceptance_from_distortion",
+    "acceptance_rate",
+    "expected_tokens_per_round",
     "device_only_params",
     "solve_device_only",
+    "SPEC_GAMMA",
 ]
 
 _EPS = 1e-12
@@ -497,4 +505,169 @@ def solve_decode(lam: float, lam_kv: float, p: SystemParams, t0: float,
             energy=inner.energy + float(kv_energy(b_kv, p)))
         if best is None or cand.objective < best.objective:
             best = cand
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Speculative extension: (b_draft, k) as joint variables (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+# acceptance sharpness: how fast the modeled per-token acceptance decays
+# with the draft's normalized distortion bound.  Calibrated so the ladder
+# rungs spread (b_draft = 2/4/8 -> alpha ~ 0.29/0.78/0.98); the engine
+# reports the *measured* acceptance next to this estimate.
+SPEC_GAMMA = 2.0
+
+
+def acceptance_from_distortion(d_rel: float,
+                               gamma: float = SPEC_GAMMA) -> float:
+    """Modeled per-token draft acceptance from the draft's *normalized*
+    distortion upper bound ``d_rel = λ · D^U(b_draft - 1; λ)``.
+
+    ``exp(-γ d)``: exactly 1 at zero distortion, in [0, 1] everywhere,
+    and monotone non-increasing in the distortion — the three properties
+    ``tests/test_properties.py`` pins down.  An estimator, not a law:
+    the engine measures the realized acceptance per round."""
+    return math.exp(-gamma * max(float(d_rel), 0.0))
+
+
+def acceptance_rate(b_draft: float, lam: float,
+                    gamma: float = SPEC_GAMMA) -> float:
+    """Acceptance estimate for a draft quantized at ``b_draft`` bits.
+
+    The normalization λ·D^U makes the statistic dimensionless — D^U
+    scales like 1/λ, so λ cancels and acceptance depends only on the
+    draft bit-width (draft fidelity relative to the weight scale)."""
+    return acceptance_from_distortion(
+        lam * _d_upper(b_draft - 1.0, lam), gamma)
+
+
+def expected_tokens_per_round(alpha: float, k: int) -> float:
+    """E[delivered tokens per speculative round] with lookahead ``k``
+    under i.i.d. per-token acceptance ``alpha``: the accepted prefix
+    plus the free correction/bonus token, ``sum_{i=0..k} alpha^i``.
+    Ranges over [1, k+1], monotone in both arguments."""
+    a = min(max(float(alpha), 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeSolution:
+    """(P1) extended with the draft bit-width and lookahead (§16).
+
+    ``inner`` is the decode-style (b̂, f, f̃, b_kv) solution obtained
+    against the budgets left after the per-round draft/uplink/cache/
+    rollback overheads take their per-delivered-token share, with the
+    batched verify forward's 1/τ workload scaling folded into the FLOP
+    counts; ``objective`` is the joint distortion gap per *expected
+    delivered token* — the quantity the ladder descent minimizes.
+    """
+
+    b_draft: int                # draft bit-width (agent partition)
+    k: int                      # lookahead: drafted tokens per round
+    alpha: float                # modeled per-token acceptance
+    tokens_per_round: float     # tau = E[delivered per round] in [1, k+1]
+    inner: DecodeSolution       # (b̂, f, f̃, b_kv) under the net budgets
+    objective: float            # joint gap / tau
+    delay: float                # expected per-delivered-token delay
+    energy: float               # expected per-delivered-token energy
+
+    @property
+    def b_hat(self) -> int:
+        return self.inner.b_hat
+
+    @property
+    def b_kv(self) -> int:
+        return self.inner.b_kv
+
+    @property
+    def f(self) -> float:
+        return self.inner.f
+
+    @property
+    def f_server(self) -> float:
+        return self.inner.f_server
+
+    @property
+    def kv_gap(self) -> float:
+        return self.inner.kv_gap
+
+    @property
+    def feasible(self) -> bool:
+        return self.inner.feasible
+
+
+def solve_speculative(lam: float, lam_kv: float, p: SystemParams,
+                      t0: float, e0: float, b_max: int = 16,
+                      b_emb: Optional[float] = None,
+                      kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                      kv_weight: float = 1.0,
+                      draft_ladder: "tuple[int, ...]" = (2, 4, 8),
+                      lookahead: "tuple[int, ...]" = (2, 4, 8),
+                      gamma: float = SPEC_GAMMA
+                      ) -> Optional[SpeculativeSolution]:
+    """Joint (b̂, f, f̃, b_kv, b_draft, k) solve for speculative decode.
+
+    Extends :func:`solve_decode`'s exact ladder enumeration with the
+    draft rungs: for each (b_kv, b_draft, k), the modeled acceptance
+    α(D^U(b_draft)) gives the expected delivered tokens per round
+    τ = Σ αⁱ; the decision-independent per-round overheads (``k`` draft
+    forwards at ``f_max``, ONE uplink, ``k+1`` cache reads, expected
+    rollback truncation) come off (T0, E0) at their per-delivered-token
+    share, and Algorithm 1 runs on the remainder with the batched
+    verify forward's 1/τ per-token workload scaling folded into the
+    FLOP counts.  The score is the joint distortion gap per expected
+    delivered token — cheap drafts lower the overhead but also α, which
+    inflates every per-token share; the enumeration resolves exactly
+    that tension.  (T0, E0) are per-delivered-token budgets, same units
+    as :func:`solve_decode`'s.  Returns None when every rung is
+    infeasible."""
+    best: Optional[SpeculativeSolution] = None
+    for b_kv in kv_ladder:
+        for b_draft in draft_ladder:
+            alpha = acceptance_rate(b_draft, lam, gamma)
+            for k in lookahead:
+                tau = expected_tokens_per_round(alpha, k)
+                t_oh = (draft_delay(b_draft, k, p)
+                        + (k + 1) * kv_delay(b_kv, p)
+                        + rollback_delay(b_kv, max(k + 1 - tau, 0.0), p))
+                e_oh = (draft_energy(b_draft, k, p)
+                        + (k + 1) * kv_energy(b_kv, p)
+                        + rollback_energy(b_kv, max(k + 1 - tau, 0.0), p))
+                if b_emb is not None:
+                    t_oh += float(transport_delay(b_emb, p))
+                    e_oh += float(transport_energy(b_emb, p))
+                t_net = t0 - t_oh / tau
+                e_net = e0 - e_oh / tau
+                if t_net <= 0.0 or e_net <= 0.0:
+                    continue
+                # the batched verify is ONE weight pass per round (see
+                # verify_delay), so the per-delivered-token forward
+                # workload is 1/tau of a plain decode step's
+                scale = 1.0 / tau
+                p_v = dataclasses.replace(
+                    p, n_flop_agent=p.n_flop_agent * scale,
+                    n_flop_server=p.n_flop_server * scale)
+                inner = solve_sca(lam, p_v, t_net, e_net, b_max)
+                if inner is None:
+                    continue
+                kv_gap = distortion_gap(b_kv, lam_kv)
+                joint = inner.objective + kv_weight * kv_gap
+                delay = speculative_round_delay(
+                    inner.b_hat, inner.f, inner.f_server, b_draft, k,
+                    tau, p, b_emb=b_emb, b_kv=b_kv) / tau
+                energy = speculative_round_energy(
+                    inner.b_hat, inner.f, inner.f_server, b_draft, k,
+                    tau, p, b_emb=b_emb, b_kv=b_kv) / tau
+                dec = DecodeSolution(
+                    b_kv=int(b_kv), inner=inner, objective=joint,
+                    kv_gap=kv_gap, delay=delay, energy=energy)
+                cand = SpeculativeSolution(
+                    b_draft=int(b_draft), k=int(k), alpha=alpha,
+                    tokens_per_round=tau, inner=dec,
+                    objective=joint / tau, delay=delay, energy=energy)
+                if best is None or cand.objective < best.objective:
+                    best = cand
     return best

@@ -29,7 +29,10 @@ import jax.numpy as jnp
 
 __all__ = ["SystemParams", "agent_delay", "server_delay", "agent_energy",
            "server_energy", "transport_delay", "transport_energy",
-           "kv_delay", "kv_energy", "total_delay", "total_energy"]
+           "kv_delay", "kv_energy", "total_delay", "total_energy",
+           "draft_delay", "draft_energy", "verify_delay", "verify_energy",
+           "rollback_delay", "rollback_energy",
+           "speculative_round_delay", "speculative_round_energy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +125,90 @@ def server_energy(f_server, p: SystemParams):
     """Eq. (7)."""
     return p.eta_server * (p.n_flop_server / p.c_server) \
         * p.psi_server * f_server ** 2
+
+
+def draft_delay(b_draft, k, p: SystemParams):
+    """Draft phase of one speculative round (DESIGN.md §16): ``k``
+    greedy agent-partition forwards at draft bit-width ``b_draft``.
+
+    Drafting is latency-critical and pinned at ``f_max``, which keeps
+    the term independent of the codesign's frequency variables — it
+    reduces the (T0, E0) budgets the way the transport share does."""
+    return k * agent_delay(b_draft, p.f_max, p)
+
+
+def draft_energy(b_draft, k, p: SystemParams):
+    """Energy of the draft phase (eq. (6) at ``f_max``, ``k`` times)."""
+    return k * agent_energy(b_draft, p.f_max, p)
+
+
+def verify_delay(b_hat, f, f_server, k, p: SystemParams):
+    """Verify phase of one speculative round: one *batched* forward over
+    the ``k`` drafted positions plus the correction/bonus position, at
+    the class operating point (b̂, f, f̃).
+
+    Decode forwards are weight-stream bound, so computing ``k + 1``
+    positions under one weight pass costs one per-token forward in both
+    time and energy — that amortization (plus the once-per-round uplink)
+    is the speculative win the codesign trades against the draft
+    overhead and the acceptance loss (DESIGN.md §16).  ``k`` is accepted
+    for signature symmetry with :func:`draft_delay` but does not enter."""
+    del k
+    return agent_delay(b_hat, f, p) + server_delay(f_server, p)
+
+
+def verify_energy(b_hat, f, f_server, k, p: SystemParams):
+    """Energy of the verify phase: one weight pass (eqs. (6)-(7)),
+    mirroring :func:`verify_delay`'s bandwidth-bound batching model."""
+    del k
+    return agent_energy(b_hat, f, p) + server_energy(f_server, p)
+
+
+def rollback_delay(b_kv, n_rejected, p: SystemParams):
+    """Rollback cost: the speculative cache entries written for the
+    ``n_rejected`` tokens the verifier refused must be truncated — one
+    discarded cache write per rejected draft, billed at the stored
+    bit-width (0 when cache modeling is disabled)."""
+    return n_rejected * kv_delay(b_kv, p)
+
+
+def rollback_energy(b_kv, n_rejected, p: SystemParams):
+    """Energy of truncating rejected speculative cache writes."""
+    return n_rejected * kv_energy(b_kv, p)
+
+
+def speculative_round_delay(b_hat, f, f_server, b_draft, k, tau,
+                            p: SystemParams, b_emb=None, b_kv=None):
+    """Expected wall delay of one draft/uplink/verify/rollback cycle
+    delivering ``tau`` tokens in expectation (DESIGN.md §16).
+
+    The uplink fires once per *round* (tokens + boundary hidden state),
+    not once per token — that amortization is the speculative win.  The
+    cache is read ``k`` times by the draft chain plus once by the
+    batched verify forward; the expected ``k + 1 - tau`` rejected
+    entries are billed as rollback truncation."""
+    t = draft_delay(b_draft, k, p) \
+        + verify_delay(b_hat, f, f_server, k, p)
+    if b_emb is not None:
+        t = t + transport_delay(b_emb, p)
+    if b_kv is not None:
+        t = t + (k + 1) * kv_delay(b_kv, p) \
+            + rollback_delay(b_kv, max(k + 1 - tau, 0.0), p)
+    return t
+
+
+def speculative_round_energy(b_hat, f, f_server, b_draft, k, tau,
+                             p: SystemParams, b_emb=None, b_kv=None):
+    """Expected energy of one speculative round, mirroring
+    :func:`speculative_round_delay` term for term."""
+    e = draft_energy(b_draft, k, p) \
+        + verify_energy(b_hat, f, f_server, k, p)
+    if b_emb is not None:
+        e = e + transport_energy(b_emb, p)
+    if b_kv is not None:
+        e = e + (k + 1) * kv_energy(b_kv, p) \
+            + rollback_energy(b_kv, max(k + 1 - tau, 0.0), p)
+    return e
 
 
 def total_delay(b_hat, f, f_server, p: SystemParams, b_emb=None,

@@ -45,10 +45,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codesign import (_d_upper, distortion_gap, min_energy_under_deadline,
+from .codesign import (_d_upper, acceptance_rate, distortion_gap,
+                       expected_tokens_per_round, min_energy_under_deadline,
                        net_budgets)
-from .cost_model import (SystemParams, kv_delay, kv_energy, total_delay,
-                         total_energy)
+from .cost_model import (SystemParams, draft_delay, draft_energy, kv_delay,
+                         kv_energy, rollback_delay, rollback_energy,
+                         speculative_round_delay, speculative_round_energy,
+                         total_delay, total_energy, transport_delay,
+                         transport_energy)
 from .distortion import chain_bound_coefficients, induced_l1_norm
 from .quantization import QuantConfig, QuantPlan, quantize_dequantize
 from .rate_distortion import exponential_mle
@@ -67,6 +71,8 @@ __all__ = [
     "allocate_bits",
     "MixedDecodeSolution",
     "allocate_bits_decode",
+    "MixedSpeculativeSolution",
+    "allocate_bits_speculative",
     "plan_from_bits",
 ]
 
@@ -365,6 +371,115 @@ def allocate_bits_decode(stats: LayerStats, lam_kv: float, p: SystemParams,
             energy=inner.energy + float(kv_energy(b_kv, p)))
         if best is None or cand.objective < best.objective:
             best = cand
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedSpeculativeSolution:
+    """Per-layer allocation + cache width + draft schedule (b_draft, k).
+
+    The speculative analog of :class:`MixedDecodeSolution`, mirroring
+    ``codesign.SpeculativeSolution``: ``inner`` is the decode-level
+    allocation solved against per-*delivered-token* budgets, and
+    ``objective`` divides the joint bound by the expected tokens per
+    round τ (DESIGN.md §16)."""
+
+    b_draft: int
+    k: int
+    alpha: float                # modeled acceptance rate
+    tokens_per_round: float     # τ = E[delivered tokens / round]
+    inner: MixedDecodeSolution
+    objective: float            # (inner bound + kv gap) / τ
+    delay: float                # per-token expected delay (round / τ)
+    energy: float
+
+    @property
+    def bits(self) -> tuple:
+        return self.inner.bits
+
+    @property
+    def b_kv(self) -> int:
+        return self.inner.b_kv
+
+    @property
+    def f(self) -> float:
+        return self.inner.f
+
+    @property
+    def f_server(self) -> float:
+        return self.inner.f_server
+
+    @property
+    def mean_bits(self) -> float:
+        return self.inner.mean_bits
+
+
+def allocate_bits_speculative(stats: LayerStats, lam_kv: float,
+                              p: SystemParams, t0: float, e0: float,
+                              b_max: int = 16,
+                              b_emb: Optional[float] = None,
+                              kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                              kv_weight: float = 1.0,
+                              draft_ladder: "tuple[int, ...]" = (2, 4, 8),
+                              lookahead: "tuple[int, ...]" = (2, 4, 8),
+                              ) -> Optional[MixedSpeculativeSolution]:
+    """Joint per-layer bits + cache width + draft schedule allocation.
+
+    The same (b_kv × b_draft × k) enumeration as
+    ``codesign.solve_speculative``, with the per-layer greedy allocator
+    as the inner solver: each rung's per-round overhead (draft chain at
+    f_max, k+1 cache streams, expected rollback, one uplink) is spread
+    over the τ expected delivered tokens and netted off (T0, E0); the
+    forward workload is scaled by 1/τ — the batched verify is one
+    weight pass per round (``cost_model.verify_delay``) — so the
+    allocator prices the verify forward per delivered token.  None when
+    every rung is infeasible.
+    """
+    lam_mean = sum(stats.lam) / max(stats.n_layers, 1)
+    best: Optional[MixedSpeculativeSolution] = None
+    for b_kv in kv_ladder:
+        for b_draft in draft_ladder:
+            alpha = acceptance_rate(b_draft, lam_mean)
+            for k in lookahead:
+                tau = expected_tokens_per_round(alpha, k)
+                t_oh = (draft_delay(b_draft, k, p)
+                        + (k + 1) * kv_delay(b_kv, p)
+                        + rollback_delay(b_kv, max(k + 1 - tau, 0.0), p))
+                e_oh = (draft_energy(b_draft, k, p)
+                        + (k + 1) * kv_energy(b_kv, p)
+                        + rollback_energy(b_kv, max(k + 1 - tau, 0.0), p))
+                if b_emb is not None:
+                    t_oh += float(transport_delay(b_emb, p))
+                    e_oh += float(transport_energy(b_emb, p))
+                t_net = t0 - t_oh / tau
+                e_net = e0 - e_oh / tau
+                if t_net <= 0.0 or e_net <= 0.0:
+                    continue
+                scale = 1.0 / tau
+                p_v = dataclasses.replace(
+                    p, n_flop_agent=p.n_flop_agent * scale,
+                    n_flop_server=p.n_flop_server * scale)
+                inner = allocate_bits(stats, p_v, t_net, e_net, b_max)
+                if inner is None:
+                    continue
+                kv_gap = distortion_gap(b_kv, lam_kv)
+                joint = inner.objective + kv_weight * kv_gap
+                delay = speculative_round_delay(
+                    inner.mean_bits, inner.f, inner.f_server, b_draft, k,
+                    tau, p, b_emb=b_emb, b_kv=b_kv) / tau
+                energy = speculative_round_energy(
+                    inner.mean_bits, inner.f, inner.f_server, b_draft, k,
+                    tau, p, b_emb=b_emb, b_kv=b_kv) / tau
+                dec = MixedDecodeSolution(
+                    b_kv=int(b_kv), inner=inner, objective=joint,
+                    kv_gap=kv_gap, delay=float(delay), energy=float(energy))
+                cand = MixedSpeculativeSolution(
+                    b_draft=int(b_draft), k=int(k), alpha=alpha,
+                    tokens_per_round=tau, inner=dec,
+                    objective=joint / tau,
+                    delay=float(delay), energy=float(energy))
+                if best is None or cand.objective < best.objective:
+                    best = cand
     return best
 
 

@@ -61,8 +61,12 @@ from ..obs import NULL_METRICS, NULL_TRACER, MetricsRegistry, Tracer
 from ..runtime import (AdaptiveCoInferenceEngine, BatchedCoInferenceEngine,
                        CodesignCache, CoInferenceEngine, DecodeEngine,
                        FleetAgentSpec, FleetCoInferenceEngine, QosClass,
-                       ServingSupervisor, greedy_decode_reference)
+                       ServingSupervisor, SpeculativeDecodeEngine,
+                       greedy_decode_reference)
 from ..runtime.decode_engine import decode_protocol_gap
+
+# the realizable draft-container rungs --speculative may pin
+SPEC_DRAFT_CHOICES = (2, 4, 8)
 
 ENV_TRACES = {
     "wifi-markov": env_presets.wifi_markov,
@@ -97,6 +101,17 @@ def main(argv=None):
                          "with per-class b_kv chosen by the codesign")
     ap.add_argument("--max-new", type=int, default=16,
                     help="tokens to generate per request (--decode)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative co-inference (DESIGN.md §16): the "
+                         "agent partition drafts --lookahead tokens per "
+                         "round at --draft-bits, the server verifies them "
+                         "in one batched forward with longest-accepted-"
+                         "prefix rollback; implies --decode")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft bit-width b_draft for --speculative "
+                         f"(one of {SPEC_DRAFT_CHOICES})")
+    ap.add_argument("--lookahead", type=int, default=4,
+                    help="draft tokens per speculative round (k >= 1)")
     ap.add_argument("--parity-check", action="store_true",
                     help="replay every --decode request through the "
                          "non-batched sequential reference and assert "
@@ -202,6 +217,19 @@ def _dispatch(args, tracer, metrics):
     chaos, rc = _load_chaos(args)
     if rc is not None:
         return rc
+    if args.speculative:
+        if args.lookahead < 1:
+            print(f"error: --lookahead {args.lookahead} is not a valid "
+                  "draft length; speculative decode drafts k >= 1 tokens "
+                  "per round", file=sys.stderr)
+            return 2
+        if args.draft_bits not in SPEC_DRAFT_CHOICES:
+            print(f"error: --draft-bits {args.draft_bits} is off the "
+                  f"realizable draft ladder {SPEC_DRAFT_CHOICES}; the "
+                  "draft weights live in the same quantized containers "
+                  "as every other plan (DESIGN.md §16)", file=sys.stderr)
+            return 2
+        args.decode = True      # speculative serving is a decode mode
     if args.fleet is not None:
         return serve_fleet(args, tracer, metrics, chaos=chaos)
 
@@ -219,7 +247,8 @@ def _dispatch(args, tracer, metrics):
     params = model.init(jax.random.PRNGKey(0))
 
     err = unsupported_model_reason(model, args.arch, args.compiled,
-                                   decode=args.decode)
+                                   decode=args.decode,
+                                   speculative=args.speculative)
     if err is not None:
         print(f"error: {err}", file=sys.stderr)
         return 2
@@ -255,7 +284,8 @@ def _write_obs(args, tracer, metrics):
 
 
 def unsupported_model_reason(model, arch: str, compiled: bool,
-                             decode: bool = False):
+                             decode: bool = False,
+                             speculative: bool = False):
     """One-line reason this model cannot serve the invocation, or None.
 
     Mirrors the engine constructors' protocol checks so the driver can
@@ -263,10 +293,17 @@ def unsupported_model_reason(model, arch: str, compiled: bool,
     co-inference needs the DecoderLM ``run_layers`` protocol at all,
     ``--compiled`` additionally needs the ``embed`` +
     ``run_layers_window`` hooks the fast path traces (DESIGN.md §10),
-    and ``--decode`` needs the full DecoderLM KV-cache decode protocol
-    (DESIGN.md §12).  One function serves both the flag path and the
-    fleet-spec path, so the hook requirements live in exactly one place.
+    and ``--decode`` / ``--speculative`` need the full DecoderLM
+    KV-cache decode protocol (DESIGN.md §12, §16).  One function serves
+    both the flag path and the fleet-spec path, so the hook
+    requirements live in exactly one place.
     """
+    if speculative:
+        gap = decode_protocol_gap(model)
+        if gap is not None:
+            return (f"--speculative does not support arch {arch}: {gap}. "
+                    "Drop --speculative or pick a dense DecoderLM-family "
+                    "arch (e.g. qwen2-0.5b, stablelm-3b).")
     if decode:
         gap = decode_protocol_gap(model)
         if gap is not None:
@@ -415,8 +452,13 @@ def serve_decode(cfg, model, params, sysp, args,
     kv_full = (2.0 * cfg.n_layers * args.max_batch
                * (args.seq + args.max_new) * cfg.n_kv_heads
                * max(cfg.head_dim, 1) * np.dtype(cfg.dtype).itemsize)
+    # a speculative round streams the cache k+1 times (DESIGN.md §16),
+    # so the same choke that makes b_kv a real decision for plain decode
+    # would starve every (b_draft, k) point; twice the bandwidth keeps
+    # the rung decision live under both round models
+    kv_bw = kv_full * (2.0 if args.speculative else 1.0)
     sysp = dataclasses.replace(sysp, kv_bytes_full=kv_full,
-                               kv_bw_bps=kv_full, kv_power_w=2.0)
+                               kv_bw_bps=kv_bw, kv_power_w=2.0)
     classes = [
         QosClass("realtime", t0=max(args.t0 / 3.0, 0.2),
                  e0=max(args.e0 / 2.0, 0.2)),
@@ -424,18 +466,31 @@ def serve_decode(cfg, model, params, sysp, args,
     ]
     cache = CodesignCache()
     try:
-        eng = DecodeEngine(model, params, sysp, classes=classes,
-                           max_batch=args.max_batch,
-                           max_new_tokens=args.max_new,
-                           mixed_precision=args.mixed_precision,
-                           codesign_cache=cache,
-                           tracer=tracer, metrics=metrics)
+        if args.speculative:
+            # pin the draft menus to the requested point: the codesign
+            # still solves (b̂, f, f̃, b_kv) jointly around it
+            eng = SpeculativeDecodeEngine(
+                model, params, sysp, classes=classes,
+                max_batch=args.max_batch, max_new_tokens=args.max_new,
+                mixed_precision=args.mixed_precision,
+                draft_bits=args.draft_bits, lookahead=args.lookahead,
+                draft_ladder=(args.draft_bits,),
+                lookahead_menu=(args.lookahead,),
+                codesign_cache=cache, tracer=tracer, metrics=metrics)
+        else:
+            eng = DecodeEngine(model, params, sysp, classes=classes,
+                               max_batch=args.max_batch,
+                               max_new_tokens=args.max_new,
+                               mixed_precision=args.mixed_precision,
+                               codesign_cache=cache,
+                               tracer=tracer, metrics=metrics)
     except ValueError as e:
         print(e)
         return 1
+    mode = "speculative" if args.speculative else "decode"
     print(f"arch={cfg.name} split={cfg.split_layer}/{cfg.n_layers} "
           f"lambda_hat={eng.lam:.2f} lambda_kv={eng.lam_kv:.2f} "
-          f"engine=decode max_batch={args.max_batch} "
+          f"engine={mode} max_batch={args.max_batch} "
           f"max_new={args.max_new} admission={eng.admission}")
     import time
     t0 = time.perf_counter()
@@ -446,9 +501,14 @@ def serve_decode(cfg, model, params, sysp, args,
         s = eng.solution_for(c.name)
         bdesc = "/".join(map(str, s.bits)) if args.mixed_precision \
             else str(s.b_hat)
+        spec_desc = ""
+        if args.speculative:
+            b_d, k = eng.draft_schedule(c.name)
+            spec_desc = f" b_draft={b_d} k={k}"
         print(f"  class {c.name:12s} (T0={c.t0:.2f}s, E0={c.e0:.2f}J): "
               f"b_hat={bdesc} b_kv={s.b_kv} f={s.f / 1e9:.2f}GHz "
-              f"f~={s.f_server / 1e9:.2f}GHz bound={s.objective:.3e}")
+              f"f~={s.f_server / 1e9:.2f}GHz bound={s.objective:.3e}"
+              f"{spec_desc}")
 
     sup = _supervise(eng, chaos, args, tracer, metrics)
     front = sup if sup is not None else eng
@@ -480,6 +540,12 @@ def serve_decode(cfg, model, params, sysp, args,
           f"energy={rep.total_energy_j:.3f}J")
     print(f"compile cache: {rep.compiled_variants} variants, "
           f"{rep.compile_hits} hits / {rep.compile_misses} misses")
+    if args.speculative:
+        st = eng.spec_stats()
+        print(f"speculative: {st.rounds} rounds, "
+              f"acceptance={st.acceptance_rate:.2f}, "
+              f"accepted/round={st.accepted_per_round:.2f}, "
+              f"tokens/round={st.tokens_per_round:.2f}")
     if sup is not None:
         _print_resilience(sup)
 

@@ -15,6 +15,8 @@ from .serve_engine import (BatchedCoInferenceEngine, BatchStats,  # noqa: F401
                            CodesignCache, CoInferenceEngine, EngineReport,
                            QosClass, RequestStats, ServeRequest,
                            ServeResponse, ServeStats, fit_lambda)
+from .speculative import (SpecRoundStats,  # noqa: F401
+                          SpeculativeDecodeEngine)
 from .supervisor import (ResilienceReport, ServingSupervisor,  # noqa: F401
                          flip_bit, payload_checksum)
 from .train_loop import TrainConfig, Trainer  # noqa: F401

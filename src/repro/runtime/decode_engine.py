@@ -345,6 +345,185 @@ def _build_fused_decode(model, b_kv: int) -> Callable:
     return fn
 
 
+# the speculative executables' fixed draft-column width
+# (``runtime/speculative.py``): lookahead k is a *runtime* argument up
+# to this many columns, never a compile key, so sweeping k costs no
+# extra executables — the same isolation trick as ``_CHUNK``.
+_SPEC_MAX_K = 16
+
+
+def _build_spec_draft(model, b_kv: int) -> Callable:
+    """``k`` greedy draft steps under the DRAFT weight tree
+    (DESIGN.md §16).
+
+    (draft_weights, k_codes, v_codes, k_scales, v_scales, tok [B],
+    pos [B], n_draft []) -> drafts [B, _SPEC_MAX_K] i32.  The chain
+    steps ``decode_step_q`` ``n_draft`` times from the canonical cache
+    state, carrying the cache *functionally* in the while-loop and
+    discarding it at the end: draft writes are speculative scratch that
+    must never reach the canonical slot buffers, so the buffers are NOT
+    donated here — rollback is realized as commit-on-verify (only the
+    verify executable writes the canonical cache), not as truncation
+    after the fact.
+    """
+
+    def fn(weights, kc, vc, ks, vs, tok, pos, n_draft):
+        b = tok.shape[0]
+        n = jnp.asarray(n_draft, jnp.int32)
+
+        def cond(carry):
+            return carry[0] < n
+
+        def body(carry):
+            i, tok, pos, kc, vc, ks, vs, out = carry
+            logits, qc = model.decode_step_q(
+                weights,
+                {"k_codes": kc, "v_codes": vc, "k_scales": ks,
+                 "v_scales": vs, "len": pos},
+                {"token": tok[:, None], "pos": pos}, b_kv=b_kv)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
+            return (i + 1, nxt, qc["len"], qc["k_codes"], qc["v_codes"],
+                    qc["k_scales"], qc["v_scales"], out)
+
+        carry = (jnp.int32(0), tok, pos, kc, vc, ks, vs,
+                 jnp.zeros((b, _SPEC_MAX_K), jnp.int32))
+        return jax.lax.while_loop(cond, body, carry)[-1]
+
+    return fn
+
+
+def _build_spec_verify(model, b_kv: int) -> Callable:
+    """Verify a round of drafts with the TARGET weights, longest-
+    accepted-prefix semantics (DESIGN.md §16).
+
+    (weights, k_codes, v_codes, k_scales, v_scales, tok [B], pos [B],
+    live [B] i32, drafts [B, _SPEC_MAX_K] i32, n_draft [], rem [B] i32,
+    eos []) -> (token block [B, _SPEC_MAX_K + 1] i32, emitted [B] i32,
+    accepted [B] i32, updated buffers).
+
+    Iteration ``i`` feeds each still-active row's current token at its
+    position through ``decode_step_q`` — *exactly* the sequential
+    reference's next step, so every cache entry an active row writes is
+    the entry the reference writes, and every emitted token ``g`` is
+    the reference's token.  A row goes inactive after emitting when its
+    ``g`` diverges from ``drafts[:, i]`` (``g`` is the correction and
+    is already committed), when ``i == n_draft`` (the bonus token), at
+    ``eos``, or when its generation budget ``rem`` is spent.  Inactive
+    rows are frozen: cache writes are reverted row-wise, ``pos``/``tok``
+    held, so a round never commits anything the reference would not —
+    delivered tokens per row per round = accepted prefix + 1, bitwise
+    the reference stream (the house invariant, extended).
+    """
+
+    def fn(weights, kc, vc, ks, vs, tok, pos, live, drafts, n_draft,
+           rem, eos):
+        b = tok.shape[0]
+        n = jnp.asarray(n_draft, jnp.int32)
+
+        def cond(carry):
+            return (carry[0] <= n) & jnp.any(carry[1])
+
+        def body(carry):
+            i, act, tok, pos, kc, vc, ks, vs, cnt, acc, out = carry
+            logits, qc = model.decode_step_q(
+                weights,
+                {"k_codes": kc, "v_codes": vc, "k_scales": ks,
+                 "v_scales": vs, "len": pos},
+                {"token": tok[:, None], "pos": pos}, b_kv=b_kv)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            m5 = act[None, :, None, None, None]
+            m4 = act[None, :, None, None]
+            kc = jnp.where(m5, qc["k_codes"], kc)
+            vc = jnp.where(m5, qc["v_codes"], vc)
+            ks = jnp.where(m4, qc["k_scales"], ks)
+            vs = jnp.where(m4, qc["v_scales"], vs)
+            pos = jnp.where(act, qc["len"], pos)
+            tok = jnp.where(act, g, tok)
+            # all active rows share emission column i (== their cnt);
+            # inactive rows' stale columns are never read by the host
+            out = jax.lax.dynamic_update_slice(out, g[:, None], (0, i))
+            cnt = cnt + act.astype(jnp.int32)
+            draft_i = jax.lax.dynamic_index_in_dim(drafts, i, axis=1,
+                                                   keepdims=False)
+            match = (i < n) & (g == draft_i)
+            acc = acc + (act & match).astype(jnp.int32)
+            act = act & match & (g != eos) & (cnt < rem)
+            return (i + 1, act, tok, pos, kc, vc, ks, vs, cnt, acc, out)
+
+        carry = (jnp.int32(0), live > 0, tok, pos, kc, vc, ks, vs,
+                 jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
+                 jnp.zeros((b, _SPEC_MAX_K + 1), jnp.int32))
+        (_, _, tok, pos, kc, vc, ks, vs, cnt, acc, out) = \
+            jax.lax.while_loop(cond, body, carry)
+        return out, cnt, acc, kc, vc, ks, vs, tok, pos
+
+    return fn
+
+
+def _build_spec_round(model, b_kv: int) -> Callable:
+    """One full speculative round — draft chain + verify chain — in a
+    single executable (DESIGN.md §16).
+
+    (draft_weights, weights, k_codes, v_codes, k_scales, v_scales,
+    tok [B], pos [B], live [B] i32, n_draft [], rem [B] i32, eos []) ->
+    ``_build_spec_verify``'s outputs.  Semantically this is exactly
+    ``_build_spec_draft`` piped into ``_build_spec_verify`` — the draft
+    chain still carries the cache functionally and discards it, the
+    verify chain still commits only reference tokens — but fused into
+    one dispatch: a speculative round is launch-overhead bound (two
+    short chains per round), and measured wall throughput is what the
+    ``benchmarks/speculative.py`` gate holds against fused decode.  The
+    standalone builders above stay as the unit-testable pieces (the
+    rejection-position tests drive ``_build_spec_verify`` with crafted
+    draft blocks no honest draft chain would produce).
+    """
+    draft_fn = _build_spec_draft(model, b_kv)
+    verify_fn = _build_spec_verify(model, b_kv)
+
+    def fn(draft_weights, weights, kc, vc, ks, vs, tok, pos, live,
+           n_draft, rem, eos):
+        drafts = draft_fn(draft_weights, kc, vc, ks, vs, tok, pos,
+                          n_draft)
+        return verify_fn(weights, kc, vc, ks, vs, tok, pos, live,
+                         drafts, n_draft, rem, eos)
+
+    return fn
+
+
+def _compile_spec_round(model, params, b_kv: int, batch: int,
+                        t_bucket: int):
+    codes, scales, vec = _cache_sds(model.cfg, b_kv, batch, t_bucket)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return aot_compile(
+        _build_spec_round(model, b_kv),
+        (_sds(params), _sds(params), codes, codes, scales, scales, vec,
+         vec, vec, scalar, vec, scalar),
+        donate_argnums=(2, 3, 4, 5, 6, 7))
+
+
+def _compile_spec_draft(model, params, b_kv: int, batch: int,
+                        t_bucket: int):
+    codes, scales, vec = _cache_sds(model.cfg, b_kv, batch, t_bucket)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    # no donation: the canonical cache buffers must survive for verify
+    return aot_compile(
+        _build_spec_draft(model, b_kv),
+        (_sds(params), codes, codes, scales, scales, vec, vec, scalar))
+
+
+def _compile_spec_verify(model, params, b_kv: int, batch: int,
+                         t_bucket: int):
+    codes, scales, vec = _cache_sds(model.cfg, b_kv, batch, t_bucket)
+    drafts = jax.ShapeDtypeStruct((batch, _SPEC_MAX_K), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return aot_compile(
+        _build_spec_verify(model, b_kv),
+        (_sds(params), codes, codes, scales, scales, vec, vec, vec,
+         drafts, scalar, vec, scalar),
+        donate_argnums=(1, 2, 3, 4, 5, 6))
+
+
 def _container_dtype(cfg, b_kv: int) -> np.dtype:
     return np.dtype("int8") if b_kv < 16 else np.dtype(cfg.dtype)
 

@@ -321,6 +321,59 @@ class CodesignCache:
                 b_emb=b_emb, kv_ladder=kv_ladder, kv_weight=kv_weight)
         return self._store[k]
 
+    def solve_speculative(self, lam: float, lam_kv: float,
+                          sysp: SystemParams, qos: QosClass, b_max: int,
+                          b_emb: Optional[int] = None,
+                          kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                          kv_weight: float = 1.0,
+                          draft_ladder: "tuple[int, ...]" = (2, 4, 8),
+                          lookahead: "tuple[int, ...]" = (2, 4, 8),
+                          env_key: Optional[tuple] = None
+                          ) -> Optional[cd.SpeculativeSolution]:
+        """Memoized joint (b̂, f, f̃, b_kv, b_draft, k) speculative solve
+        (DESIGN.md §16) — :meth:`solve_decode`'s keyspace pattern with a
+        "spec" tag carrying the draft ladder and lookahead menu."""
+        k = ("spec", round(float(lam), 12), round(float(lam_kv), 12), sysp,
+             float(qos.t0), float(qos.e0), int(b_max), b_emb,
+             tuple(int(b) for b in kv_ladder), float(kv_weight),
+             tuple(int(b) for b in draft_ladder),
+             tuple(int(b) for b in lookahead), env_key)
+        if k in self._store:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._store[k] = cd.solve_speculative(
+                lam, lam_kv, sysp, qos.t0, qos.e0, b_max=b_max,
+                b_emb=b_emb, kv_ladder=kv_ladder, kv_weight=kv_weight,
+                draft_ladder=draft_ladder, lookahead=lookahead)
+        return self._store[k]
+
+    def solve_speculative_mixed(self, stats: "mp.LayerStats", lam_kv: float,
+                                sysp: SystemParams, qos: QosClass,
+                                b_max: int, b_emb: Optional[int] = None,
+                                kv_ladder: "tuple[int, ...]" = (4, 8, 16),
+                                kv_weight: float = 1.0,
+                                draft_ladder: "tuple[int, ...]" = (2, 4, 8),
+                                lookahead: "tuple[int, ...]" = (2, 4, 8),
+                                env_key: Optional[tuple] = None
+                                ) -> Optional[mp.MixedSpeculativeSolution]:
+        """Memoized per-layer allocation + (b_kv, b_draft, k) — the
+        speculative counterpart of :meth:`solve_decode_mixed`."""
+        k = ("spec-mixed", stats.key(), round(float(lam_kv), 12), sysp,
+             float(qos.t0), float(qos.e0), int(b_max), b_emb,
+             tuple(int(b) for b in kv_ladder), float(kv_weight),
+             tuple(int(b) for b in draft_ladder),
+             tuple(int(b) for b in lookahead), env_key)
+        if k in self._store:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._store[k] = mp.allocate_bits_speculative(
+                stats, lam_kv, sysp, qos.t0, qos.e0, b_max=b_max,
+                b_emb=b_emb, kv_ladder=kv_ladder, kv_weight=kv_weight,
+                draft_ladder=draft_ladder, lookahead=lookahead)
+        return self._store[k]
+
     def __len__(self) -> int:
         return len(self._store)
 

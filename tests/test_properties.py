@@ -1,8 +1,11 @@
 """Property-based invariants for the serving-shape ladders
-(``kernels.bucketing``) and the quantization pack/unpack round-trips
+(``kernels.bucketing``), the quantization pack/unpack round-trips
 (``kernels.quantize`` / ``kernels.ref`` / ``core.quantization``) — the
 two pieces of pure arithmetic the decode engine's compile-count bound
-and KV-cache parity rest on (DESIGN.md §10, §12).
+and KV-cache parity rest on (DESIGN.md §10, §12) — and the codesign
+solvers' contract with the cost model: a feasible solution must
+actually meet its budgets under independent re-evaluation, and
+loosening budgets must never worsen the bound (DESIGN.md §12, §16).
 
 Runs under hypothesis when installed; otherwise the ``@given`` tests
 skip (see ``_hypothesis_compat``) and the deterministic spot checks
@@ -14,6 +17,8 @@ import pytest
 
 from _hypothesis_compat import given, settings, st  # soft dep: skips property tests when absent
 
+from repro.core import codesign, cost_model
+from repro.core.cost_model import SystemParams
 from repro.core.quantization import (pack_int4, unpack_int4, wire_bytes)
 from repro.kernels import ref
 from repro.kernels.bucketing import (DEFAULT_SEQ_BASE, next_geometric,
@@ -207,6 +212,154 @@ def test_cache_bucket_padding_is_attention_invisible(b_kv, dh, len0, len1,
         q, jnp.pad(kc, pad), jnp.pad(vc, pad),
         jnp.pad(ks, pad[:-1]), jnp.pad(vs, pad[:-1]), lens, block_t=16)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out_pad))
+
+
+# ---------------------------------------------------------------------------
+# codesign solver contract (DESIGN.md §12, §16)
+# ---------------------------------------------------------------------------
+
+# a decode-serving-shaped operating point: FLOP counts at smoke scale
+# with a cache stream sized so b_kv is a live decision (kv_delay(16) =
+# 0.5 s against t0 of a few seconds)
+_P = SystemParams(n_flop_agent=5.0e8, n_flop_server=7.0e8,
+                  kv_bytes_full=2.0e6, kv_bw_bps=4.0e6, kv_power_w=2.0)
+_BUDGETS = st.tuples(st.floats(min_value=0.3, max_value=6.0),
+                     st.floats(min_value=0.3, max_value=6.0))
+_LAM = st.floats(min_value=0.05, max_value=5.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(lam=_LAM, lam_kv=_LAM, budgets=_BUDGETS)
+def test_solve_decode_feasible_meets_budgets(lam, lam_kv, budgets):
+    """A feasible solve_decode answer survives independent
+    re-evaluation: plugging (b̂, f, f̃, b_kv) back into the cost model
+    reproduces the reported delay/energy and respects (T0, E0)."""
+    t0, e0 = budgets
+    sol = codesign.solve_decode(lam, lam_kv, _P, t0, e0)
+    if sol is None:        # infeasible corner: nothing to re-evaluate
+        return
+    d = float(cost_model.total_delay(sol.b_hat, sol.f, sol.f_server,
+                                     _P, b_kv=sol.b_kv))
+    e = float(cost_model.total_energy(sol.b_hat, sol.f, sol.f_server,
+                                      _P, b_kv=sol.b_kv))
+    assert sol.feasible
+    assert d == pytest.approx(sol.delay, rel=1e-9)
+    assert e == pytest.approx(sol.energy, rel=1e-9)
+    assert d <= t0 * (1 + 1e-6) and e <= e0 * (1 + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(lam=_LAM, lam_kv=_LAM, budgets=_BUDGETS)
+def test_solve_speculative_feasible_meets_budgets(lam, lam_kv, budgets):
+    """Same contract for the speculative joint solve: the realized
+    per-delivered-token round cost — draft chain, ONE batched verify
+    forward, k+1 cache reads, expected rollback, all divided by τ —
+    must fit the same per-token (T0, E0)."""
+    t0, e0 = budgets
+    sol = codesign.solve_speculative(lam, lam_kv, _P, t0, e0)
+    if sol is None:
+        return
+    tau = sol.tokens_per_round
+    d = float(cost_model.speculative_round_delay(
+        sol.b_hat, sol.f, sol.f_server, sol.b_draft, sol.k, tau, _P,
+        b_kv=sol.b_kv)) / tau
+    e = float(cost_model.speculative_round_energy(
+        sol.b_hat, sol.f, sol.f_server, sol.b_draft, sol.k, tau, _P,
+        b_kv=sol.b_kv)) / tau
+    assert sol.feasible
+    assert d == pytest.approx(sol.delay, rel=1e-9)
+    assert e == pytest.approx(sol.energy, rel=1e-9)
+    assert d <= t0 * (1 + 1e-6) and e <= e0 * (1 + 1e-6)
+    assert 1.0 <= tau <= sol.k + 1
+    assert 0.0 <= sol.alpha <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(lam=_LAM, lam_kv=_LAM, budgets=_BUDGETS,
+       slack=st.tuples(st.floats(min_value=0.0, max_value=4.0),
+                       st.floats(min_value=0.0, max_value=4.0)))
+def test_loosening_budgets_never_increases_decode_bound(lam, lam_kv,
+                                                        budgets, slack):
+    """More (T0, E0) slack can only help: the feasible set grows, so
+    the minimized joint distortion bound is monotone non-increasing."""
+    t0, e0 = budgets
+    tight = codesign.solve_decode(lam, lam_kv, _P, t0, e0)
+    if tight is None:
+        return
+    loose = codesign.solve_decode(lam, lam_kv, _P, t0 + slack[0],
+                                  e0 + slack[1])
+    assert loose is not None
+    assert loose.objective <= tight.objective + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(lam=_LAM, lam_kv=_LAM, budgets=_BUDGETS,
+       slack=st.tuples(st.floats(min_value=0.0, max_value=4.0),
+                       st.floats(min_value=0.0, max_value=4.0)))
+def test_loosening_budgets_never_increases_spec_bound(lam, lam_kv,
+                                                      budgets, slack):
+    t0, e0 = budgets
+    tight = codesign.solve_speculative(lam, lam_kv, _P, t0, e0)
+    if tight is None:
+        return
+    loose = codesign.solve_speculative(lam, lam_kv, _P, t0 + slack[0],
+                                       e0 + slack[1])
+    assert loose is not None
+    assert loose.objective <= tight.objective + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(d1=st.floats(min_value=0.0, max_value=50.0),
+       d2=st.floats(min_value=0.0, max_value=50.0),
+       gamma=st.floats(min_value=0.1, max_value=10.0))
+def test_acceptance_in_unit_interval_and_monotone(d1, d2, gamma):
+    """The §16 acceptance estimator is a probability and degrades (never
+    improves) as the draft's distortion bound grows."""
+    lo, hi = sorted((d1, d2))
+    a_lo = codesign.acceptance_from_distortion(lo, gamma)
+    a_hi = codesign.acceptance_from_distortion(hi, gamma)
+    assert 0.0 <= a_hi <= a_lo <= 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(lam=_LAM, gamma=st.floats(min_value=0.1, max_value=10.0))
+def test_acceptance_monotone_in_draft_bits(lam, gamma):
+    """More draft fidelity never lowers modeled acceptance — the shape
+    the benchmark checks against *measured* acceptance."""
+    rates = [codesign.acceptance_rate(b, lam, gamma) for b in (2, 4, 8)]
+    assert all(0.0 <= r <= 1.0 for r in rates)
+    assert rates == sorted(rates)
+
+
+@settings(max_examples=100, deadline=None)
+@given(a1=st.floats(min_value=0.0, max_value=1.0),
+       a2=st.floats(min_value=0.0, max_value=1.0),
+       k=st.integers(min_value=1, max_value=16))
+def test_expected_tokens_per_round_bounds(a1, a2, k):
+    """τ(α, k) = Σ_{i=0..k} αⁱ ∈ [1, k+1], monotone in both acceptance
+    and lookahead — the engine's billing divides by it, so these bounds
+    keep every per-token cost finite and positive."""
+    lo, hi = sorted((a1, a2))
+    t_lo = codesign.expected_tokens_per_round(lo, k)
+    t_hi = codesign.expected_tokens_per_round(hi, k)
+    assert 1.0 <= t_lo <= t_hi <= k + 1
+    assert t_hi <= codesign.expected_tokens_per_round(hi, k + 1)
+
+
+def test_codesign_contract_spot_checks():
+    """Deterministic floor for the solver-contract properties, exercised
+    even without hypothesis installed."""
+    sol = codesign.solve_decode(1.0, 1.0, _P, 2.0, 2.0)
+    assert sol is not None and sol.feasible
+    assert float(cost_model.total_delay(
+        sol.b_hat, sol.f, sol.f_server, _P, b_kv=sol.b_kv)) <= 2.0 * (1 + 1e-6)
+    spec = codesign.solve_speculative(1.0, 1.0, _P, 2.0, 2.0)
+    assert spec is not None and spec.feasible
+    # the joint draft variables must pay for themselves: strictly lower
+    # distortion bound per expected delivered token
+    assert spec.objective < sol.objective
+    assert codesign.expected_tokens_per_round(0.0, 4) == 1.0
+    assert codesign.expected_tokens_per_round(1.0, 4) == 5.0
 
 
 def test_kv_quantize_spot_checks():

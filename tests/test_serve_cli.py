@@ -55,6 +55,9 @@ def test_unsupported_model_reason_accepts_decoder_family():
     # ... and --decode needs the KV-cache decode protocol on top
     assert "--decode" in serve.unsupported_model_reason(
         _Decoder(), "x", False, decode=True)
+    # ... as does --speculative, whose complaint names its own flag
+    assert "--speculative" in serve.unsupported_model_reason(
+        _Decoder(), "x", False, speculative=True)
 
 
 @pytest.mark.parametrize("arch", ["seamless-m4t-large-v2", "xlstm-350m"])
@@ -169,6 +172,38 @@ def test_chaos_smoke_run_prints_resilience_line(capsys):
     assert rc == 0
     assert "resilience [supervised]:" in out
     assert "tokens lost/dup=0/0" in out
+
+
+@pytest.mark.parametrize("arch", ["seamless-m4t-large-v2", "xlstm-350m"])
+def test_speculative_with_unsupported_arch_errors_cleanly(arch, capsys):
+    # --speculative rides the decode engine's dense KV-cache protocol;
+    # non-decoder archs must die with the flag's own one-liner, not a
+    # SpeculativeDecodeEngine constructor traceback (DESIGN.md §16)
+    rc = serve.main(["--arch", arch, "--smoke", "--speculative"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "--speculative" in err and arch in err
+    assert "Traceback" not in err
+
+
+def test_speculative_bad_lookahead_errors_cleanly(capsys):
+    rc = serve.main(["--smoke", "--speculative", "--lookahead", "0"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "--lookahead" in err and "Traceback" not in err
+
+
+def test_speculative_off_ladder_draft_bits_errors_cleanly(capsys):
+    # b_draft must sit on the realizable container ladder: the draft
+    # weights live in the same packed int4/int8 containers as every
+    # other plan, so 3-bit drafts have nowhere to live
+    rc = serve.main(["--smoke", "--speculative", "--draft-bits", "3"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert err.startswith("error:")
+    assert "draft ladder" in err and "Traceback" not in err
 
 
 def test_fleet_spec_compiled_unsupported_arch_errors_cleanly(tmp_path,

@@ -1,0 +1,299 @@
+"""Speculative draft/verify decode (DESIGN.md §16): bitwise parity with
+the sequential reference across (b_draft, b_kv, plan) including
+mid-stream cancellation, longest-accepted-prefix rollback correctness at
+every rejection position, and the fused spec-round compile-count bound.
+
+The parity matrix is the PR's core claim: the draft model only ever
+*proposes* — the verify chain commits exactly the reference's tokens and
+cache entries, so changing the draft bit-width can change throughput but
+never a single delivered bit.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.cost_model import SystemParams
+from repro.core.quantization import QuantPlan
+from repro.kernels.bucketing import seq_ladder
+from repro.models.registry import build_model
+from repro.runtime import (CompiledForwardCache, QosClass,
+                           SpeculativeDecodeEngine,
+                           greedy_decode_reference)
+from repro.runtime.decode_engine import _SPEC_MAX_K, _build_spec_verify
+
+SYSP = SystemParams(n_flop_agent=6.4e10, n_flop_server=1.92e11)
+QOS = QosClass("interactive", t0=3.5, e0=2.0)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qwen_split3():
+    cfg = dataclasses.replace(get_smoke("qwen2-0.5b"), split_layer=3)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    """One compile cache for the whole module: the fused spec-round
+    executable is keyed on (cfg, batch, bucket, b_kv) — b_draft selects
+    a weight *argument* and k is a runtime scalar — so the entire
+    (b_draft, k) matrix reuses the same executables."""
+    return CompiledForwardCache()
+
+
+def _ragged_traffic(cfg, n, seed, max_prompt=20, max_new=6):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, max_prompt + 1)))
+        out.append((toks.astype(np.int32),
+                    int(rng.integers(1, max_new + 1)), 0.05 * i))
+    return out
+
+
+def _spec_engine(model, params, target, b_kv, b_draft, k, cache, *,
+                 max_batch=3, max_new=6):
+    eng = SpeculativeDecodeEngine(
+        model, params, SYSP, classes=[QOS], auto=False,
+        max_batch=max_batch, max_new_tokens=max_new,
+        draft_bits=b_draft, lookahead=k, compile_cache=cache)
+    eng.set_operating_point(QOS.name, target, b_kv, b_draft=b_draft,
+                            k=k)
+    return eng
+
+
+def _assert_parity(model, params, target, b_kv, b_draft, k, cache, *,
+                   n=6):
+    """Speculative decode == the non-batched sequential reference, token
+    for token, for every request in a ragged stream."""
+    eng = _spec_engine(model, params, target, b_kv, b_draft, k, cache)
+    prompts = {}
+    for toks, n_new, t in _ragged_traffic(model.cfg, n, seed=3):
+        prompts[eng.submit(toks, QOS.name, max_new_tokens=n_new,
+                           arrival_s=t)] = (toks, n_new)
+    responses = eng.drain()
+    assert len(responses) == n
+    for r in responses:
+        toks, n_new = prompts[r.request_id]
+        assert len(r.tokens) == n_new
+        assert r.b_kv == b_kv
+        ref = greedy_decode_reference(model, eng.class_params(QOS.name),
+                                      toks, n_new, b_kv=b_kv,
+                                      compile_cache=cache)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+    st = eng.spec_stats()
+    assert st.rounds > 0
+    assert 0.0 <= st.acceptance_rate <= 1.0
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: draft rungs x cache rungs x plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b_draft", [2, 4, 8])
+@pytest.mark.parametrize("b_kv", [4, 8, 16])
+def test_spec_parity_matrix(qwen, shared_cache, b_draft, b_kv):
+    """The full (b_draft, b_kv) grid delivers the reference stream
+    bitwise — draft fidelity moves acceptance, never content."""
+    _, model, params = qwen
+    _assert_parity(model, params, 8, b_kv, b_draft, 4, shared_cache)
+
+
+@pytest.mark.parametrize("k", [1, 2, _SPEC_MAX_K])
+def test_spec_parity_lookahead_extremes(qwen, shared_cache, k):
+    """k = 1 (single-draft rounds) and k = _SPEC_MAX_K (full block)
+    exercise the while-loop bounds; both must stay bitwise."""
+    _, model, params = qwen
+    _assert_parity(model, params, 8, 8, 4, k, shared_cache)
+
+
+@pytest.mark.parametrize("bits,b_kv", [((4, 8, 12), 8), ((4, 4, 6), 4)])
+def test_spec_parity_mixed_plan(qwen_split3, bits, b_kv):
+    """Per-layer mixed target plans change only the verify weight tree;
+    the draft stays a uniform rung — parity must survive the mix."""
+    _, model, params = qwen_split3
+    plan = QuantPlan.from_layer_bits(list(bits))
+    _assert_parity(model, params, plan, b_kv, 4, 3,
+                   CompiledForwardCache())
+
+
+def test_spec_cancel_mid_stream(qwen, shared_cache):
+    """cancel() mid-round frees the slot and the survivors still decode
+    bitwise what they would have alone — a dead request must not perturb
+    its former batch-mates' drafts or verifications."""
+    _, model, params = qwen
+    eng = _spec_engine(model, params, 8, 8, 4, 4, shared_cache,
+                       max_batch=2, max_new=10)
+    rng = np.random.default_rng(5)
+    prompts = {}
+    for i in range(3):
+        toks = rng.integers(0, model.cfg.vocab_size, size=20 + i)
+        prompts[eng.submit(toks, QOS.name, arrival_s=0.0)] = toks
+    rids = list(prompts)
+    # two in flight, one queued; short rounds (1 draft + 1 verify per
+    # step, at most 2 delivered) so nobody runs to budget first
+    for _ in range(3):
+        eng.step(max_decode_steps=2)
+    assert eng.in_flight == 2
+    dead = eng.cancel(rids[0])
+    assert dead is not None and dead.cancelled
+    assert len(dead.tokens) < eng.max_new_tokens
+    assert eng.cancel(rids[0]) is None       # already retired
+    survivors = {r.request_id: r for r in eng.drain()}
+    assert set(survivors) == set(rids[1:])
+    for rid, r in survivors.items():
+        assert not r.cancelled
+        ref = greedy_decode_reference(model, eng.class_params(QOS.name),
+                                      prompts[rid], len(r.tokens),
+                                      b_kv=8, compile_cache=shared_cache)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+    # the cancelled prefix it did emit is also the reference's prefix
+    if len(dead.tokens):
+        ref = greedy_decode_reference(model, eng.class_params(QOS.name),
+                                      prompts[rids[0]], len(dead.tokens),
+                                      b_kv=8, compile_cache=shared_cache)
+        np.testing.assert_array_equal(np.asarray(dead.tokens), ref)
+    assert eng.report().cancelled == 1
+
+
+# ---------------------------------------------------------------------------
+# rollback correctness at every rejection position
+# ---------------------------------------------------------------------------
+
+def test_spec_rollback_at_rejection_positions(qwen):
+    """Drive the verify chain with crafted draft blocks that diverge at
+    position j ∈ {0, 1, k-1} (and never, for the bonus-token path): the
+    delivered block must be the accepted prefix plus the correction, and
+    the cache buffers must be BITWISE the sequential reference's state
+    after that many tokens — truncated exactly, no stale entries (the
+    honest draft chain can't produce these blocks on demand, which is
+    why the builder stays unit-testable on its own)."""
+    cfg, model, params = qwen
+    b_kv, k, budget = 8, 4, 8
+    cache = CompiledForwardCache()
+    prompt = np.random.default_rng(9).integers(
+        0, cfg.vocab_size, size=12).astype(np.int32)
+    full = greedy_decode_reference(model, params, prompt, budget,
+                                   b_kv=b_kv, reserve_tokens=budget,
+                                   compile_cache=cache)
+    first, st = greedy_decode_reference(model, params, prompt, 1,
+                                        b_kv=b_kv,
+                                        reserve_tokens=budget,
+                                        compile_cache=cache,
+                                        return_state=True)
+    assert first[0] == full[0]
+    verify = _build_spec_verify(model, b_kv)
+    for j in (0, 1, k - 1, k):               # k = all accepted (bonus)
+        drafts = np.zeros((1, _SPEC_MAX_K), np.int32)
+        drafts[0, :j] = full[1:j + 1]        # accepted prefix
+        if j < k:                            # rejected at position j
+            drafts[0, j] = (full[j + 1] + 1) % cfg.vocab_size
+        out, cnt, acc, kc, vc, ks, vs, tok, pos = verify(
+            params, jnp.asarray(st["k_codes"]),
+            jnp.asarray(st["v_codes"]), jnp.asarray(st["k_scales"]),
+            jnp.asarray(st["v_scales"]),
+            jnp.asarray([st["last_token"]], jnp.int32),
+            jnp.asarray([st["pos"]], jnp.int32),
+            jnp.asarray([1], jnp.int32), jnp.asarray(drafts),
+            jnp.asarray(k, jnp.int32),
+            jnp.asarray([budget - 1], jnp.int32),
+            jnp.asarray(-1, jnp.int32))
+        n_out = int(np.asarray(cnt)[0])
+        assert int(np.asarray(acc)[0]) == j   # accepted prefix length
+        assert n_out == j + 1                 # ... plus the correction
+        np.testing.assert_array_equal(np.asarray(out)[0, :n_out],
+                                      full[1:j + 2])
+        # the committed cache is exactly the reference's after the same
+        # tokens: rejected draft entries were reverted, nothing stale
+        _, want = greedy_decode_reference(model, params, prompt,
+                                          1 + n_out, b_kv=b_kv,
+                                          reserve_tokens=budget,
+                                          compile_cache=cache,
+                                          return_state=True)
+        np.testing.assert_array_equal(np.asarray(kc), want["k_codes"])
+        np.testing.assert_array_equal(np.asarray(vc), want["v_codes"])
+        np.testing.assert_array_equal(np.asarray(ks), want["k_scales"])
+        np.testing.assert_array_equal(np.asarray(vs), want["v_scales"])
+        assert int(np.asarray(pos)[0]) == int(want["pos"])
+        assert int(np.asarray(tok)[0]) == int(want["last_token"])
+
+
+# ---------------------------------------------------------------------------
+# compile-count bound
+# ---------------------------------------------------------------------------
+
+def test_spec_compile_count_bounded_and_warm_traffic_never_recompiles(
+        qwen):
+    cfg, model, params = qwen
+    cache = CompiledForwardCache()
+    classes = [QosClass("rt", t0=1.0, e0=1.0),
+               QosClass("ia", t0=3.0, e0=2.0)]
+    eng = SpeculativeDecodeEngine(model, params, SYSP, classes=classes,
+                                  auto=False, max_batch=4,
+                                  max_new_tokens=8, compile_cache=cache)
+    eng.set_operating_point("rt", 4, 4, b_draft=4, k=2)
+    eng.set_operating_point("ia", 8, 8, b_draft=8, k=4)
+    max_prompt = 40
+    warm = eng.warmup(max_prompt)
+    n_kv = len({eng.b_kv_for(c.name) for c in classes})
+    # prefill pairs as in plain decode, plus ONE fused spec-round
+    # executable per (cache bucket, b_kv) — draft and verify ride in a
+    # single dispatch, so the round budget is half the ladder x
+    # {draft, verify} allowance the design reserves
+    t_rungs = seq_ladder(max_prompt + 8)
+    pairs = sum(1 for s in seq_ladder(max_prompt) for t in t_rungs
+                if t >= s)
+    bound = (pairs + len(t_rungs)) * n_kv
+    assert 0 < warm <= bound
+    assert bound <= (pairs + 2 * len(t_rungs)) * n_kv
+    miss0 = cache.misses
+
+    rng = np.random.default_rng(11)
+    for i in range(14):
+        toks = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, max_prompt + 1)))
+        eng.submit(toks, classes[i % 2].name,
+                   max_new_tokens=int(rng.integers(1, 9)),
+                   arrival_s=0.02 * i)
+    responses = eng.drain()
+    assert len(responses) == 14
+    assert cache.misses == miss0        # warm traffic never recompiles
+    assert len(cache) <= bound
+    rep = eng.report()
+    assert rep.compile_misses == cache.misses
+    assert rep.compiled_variants == len(cache)
+    assert rep.tokens_generated == sum(len(r.tokens) for r in responses)
+    # the rounds actually drafted: the accounting adds up (prefill
+    # emits each request's first token outside any spec round)
+    st = eng.spec_stats()
+    assert st.delivered == rep.tokens_generated - rep.prefills
+    assert st.accepted <= st.drafted
+
+
+def test_spec_engine_rejects_bad_schedule(qwen):
+    _, model, params = qwen
+    with pytest.raises(ValueError, match="lookahead"):
+        SpeculativeDecodeEngine(model, params, SYSP, classes=[QOS],
+                                auto=False, lookahead=0)
+    eng = _spec_engine(model, params, 8, 8, 4, 2,
+                       CompiledForwardCache())
+    with pytest.raises(ValueError, match="b_draft"):
+        eng.set_operating_point(QOS.name, 8, 8, b_draft=1)
+    with pytest.raises(ValueError, match="lookahead"):
+        eng.set_operating_point(QOS.name, 8, 8, k=_SPEC_MAX_K + 1)
